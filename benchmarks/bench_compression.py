@@ -1,0 +1,35 @@
+"""Paper Table V analogue: model-size/compression accounting per architecture.
+
+For every assigned arch: float-master size, 2-bit packed size, base-3
+(1.6-bit) packed size, compression ratio, and whether a single v5e pod holds
+the packed weights — the scaling argument of DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+
+ARCHS = [
+    "tellme-0.7b", "musicgen-medium", "rwkv6-3b", "granite-8b",
+    "deepseek-v2-lite-16b", "internlm2-20b", "internvl2-26b", "gemma2-27b",
+    "jamba-v0.1-52b", "llama3-405b", "arctic-480b",
+]
+
+
+def run() -> list[str]:
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        n = cfg.param_count_estimate()
+        emb = 2 * cfg.padded_vocab * cfg.d_model  # embed + head stay bf16
+        body = n - emb
+        f32_gb = n * 4 / 2**30
+        packed_gb = (body * 2 / 8 + emb * 2) / 2**30
+        b3_gb = (body * 1.6 / 8 + emb * 2) / 2**30
+        per_chip = packed_gb / 256
+        rows.append(
+            f"compression_{cfg.name},{f32_gb/packed_gb:.1f}x,"
+            f"f32={f32_gb:.1f}GiB packed={packed_gb:.2f}GiB b3={b3_gb:.2f}GiB "
+            f"perchip256={per_chip*1024:.1f}MiB"
+        )
+    return rows

@@ -1,0 +1,79 @@
+"""Per-op HBM-byte breakdown of a dry-run cell — the §Perf profiling tool.
+
+Usage: PYTHONPATH=src python -m benchmarks.hbm_breakdown --arch rwkv6-3b \
+           --shape train_4k [--top 20]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import collections  # noqa: E402
+import re  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    from repro.analysis import hlo_cost
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    step_fn, in_sh, abstract, cfg, pcfg, donate = dryrun.build_cell(
+        args.arch, args.shape, mesh
+    )
+    with mesh:
+        compiled = (
+            jax.jit(step_fn, in_shardings=in_sh, donate_argnums=donate)
+            .lower(*abstract)
+            .compile()
+        )
+    hlo = compiled.as_text()
+    comps = hlo_cost.parse_computations(hlo)
+    sb = hlo_cost._shape_bytes
+    entry = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.MULTILINE).group(1)
+    trips_of = collections.defaultdict(int)
+
+    def walk(cname, mult):
+        trips_of[cname] += mult
+        for op in comps[cname].ops:
+            if op.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", op.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                t = hlo_cost._trip_count(comps.get(mc.group(1))) if mc else 1
+                walk(mb.group(1), mult * t)
+
+    walk(entry, 1)
+    rows = []
+    for cname, mult in trips_of.items():
+        for op in comps[cname].ops:
+            if op.opcode in hlo_cost._SKIP_BYTES_OPS or op.opcode == "while":
+                continue
+            b = sb(op.out_shape) + sum(
+                sb(comps[cname].shapes.get(o, "")) for o in op.operands
+            )
+            meta = re.search(r'op_name="([^"]+)"', op.line)
+            rows.append((b * mult, mult, op.opcode, op.name[:40], op.out_shape[:44],
+                         (meta.group(1)[-70:] if meta else "")))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total hbm-proxy bytes/dev: {total:.3e}")
+    for r in rows[: args.top]:
+        print(f"{r[0]:.2e} ({100*r[0]/total:4.1f}%) x{r[1]:5d} {r[2]:12s} "
+              f"{r[4]:44s} {r[5]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

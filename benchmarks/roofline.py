@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun_results.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--json dryrun_results.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f} GiB"
+
+
+def render(records: list[dict]) -> str:
+    lines = []
+    lines.append("### Single-pod (16×16, 256 chips) roofline baseline\n")
+    lines.append(
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | bound | "
+        "MODEL_FLOPS/HLO | µb | remat | SP |"
+    )
+    lines.append("|---|---|---:|---:|---:|---|---:|---:|---|---|")
+    for r in records:
+        if r["status"] == "skipped":
+            if r["mesh"] == "16x16":
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | *skipped* | — | — | — | — |"
+                )
+            continue
+        if r["mesh"] != "16x16":
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']*1e3:.1f} | "
+            f"{rl['memory_s']*1e3:.1f} | {rl['collective_s']*1e3:.1f} | "
+            f"**{rl['dominant']}** | {r['useful_flop_ratio']:.2f} | "
+            f"{r['microbatches']} | {r['remat']} | {'y' if r['seq_shard'] else 'n'} |"
+        )
+    lines.append("\n### Multi-pod (2×16×16, 512 chips) dry-run\n")
+    lines.append(
+        "| arch | shape | status | compile (s) | flops/dev | coll bytes/dev | "
+        "args | temp |"
+    )
+    lines.append("|---|---|---|---:|---:|---:|---:|---:|")
+    for r in records:
+        if r["mesh"] != "2x16x16":
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | *skipped* | — | — | — | — | — |")
+            continue
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.0f} | "
+            f"{r['flops_per_device']:.2e} | {r['collective_bytes_per_device']:.2e} | "
+            f"{fmt_bytes(m['argument_bytes'])} | {fmt_bytes(m['temp_bytes'])} |"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    args = ap.parse_args(argv)
+    with open(args.json) as f:
+        records = json.load(f)
+    print(render(records))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,35 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,value,notes`` CSV rows. Roofline tables (from the dry-run JSON)
+are rendered by ``python -m benchmarks.roofline``.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> int:
+    sections = [
+        ("tableI_ternary_matmul", "benchmarks.bench_ternary_matmul"),
+        ("tableII_attention_schedule", "benchmarks.bench_attention_schedule"),
+        ("fig9_inference", "benchmarks.bench_inference"),
+        ("tableV_compression", "benchmarks.bench_compression"),
+    ]
+    failures = 0
+    print("name,value,notes")
+    for title, mod_name in sections:
+        print(f"# --- {title} ---")
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            for row in mod.run():
+                print(row)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,25 @@
+"""Multi-pod dry-run example (deliverable e, single cell): lower + compile
+one (arch × shape) on the 512-chip two-pod production mesh and print the
+memory/cost/roofline analysis.
+
+Run:  PYTHONPATH=src python examples/multi_pod_dryrun.py [arch] [shape]
+"""
+
+import sys
+
+from repro.launch import dryrun
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "granite-8b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+    rec = dryrun.run_cell(arch, shape, multi_pod=True)
+    rl = rec["roofline"]
+    print(f"\n{arch} × {shape} on 2×16×16 (512 chips):")
+    print(f"  dominant term: {rl['dominant']}")
+    print(f"  model-flops utilization of compiled flops: {rec['useful_flop_ratio']:.2f}")
+    print(f"  collectives: { {k: f'{v:.2e}B' for k, v in rec['collectives']['bytes_by_op'].items()} }")
+
+
+if __name__ == "__main__":
+    main()

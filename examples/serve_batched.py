@@ -1,0 +1,47 @@
+"""Batched serving example (deliverable b, serving flavour): continuous
+batching over the packed-ternary engine — heterogeneous prompts share decode
+slots, finished requests retire, queued requests prefill into free slots.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core import params as P
+from repro.models import transformer as T
+from repro.serving import engine as E
+
+
+def main():
+    cfg = get_config("tellme-0.7b", smoke=True)
+    specs = T.param_specs(cfg)
+    params = T.pack_tree(P.init_params(specs, jax.random.PRNGKey(0)), specs)
+
+    # six requests with different prompt lengths and generation budgets
+    reqs = [
+        E.Request(rid=i, prompt=jax.random.randint(jax.random.PRNGKey(i),
+                                                   (8 + 4 * i,), 0, cfg.vocab_size),
+                  max_new=4 + 2 * (i % 3))
+        for i in range(6)
+    ]
+    eng = E.ServingEngine(params, cfg, slots=3, max_len=64, mode="packed")
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    ticks = 0
+    while eng.queue or any(s is not None for s in eng.live):
+        eng.step()
+        ticks += 1
+    dt = time.time() - t0
+    total = sum(len(r.generated) for r in reqs)
+    print(f"served {len(reqs)} requests / {total} tokens in {ticks} ticks "
+          f"({dt:.1f}s incl. compile)")
+    for r in reqs:
+        print(f"  req {r.rid}: prompt={len(r.prompt)} -> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Roofline/cost analysis tooling."""
+from . import hlo_cost, roofline  # noqa: F401

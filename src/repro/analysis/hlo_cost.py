@@ -1,0 +1,298 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once**, so any
+program built from ``lax.scan`` (scanned layers, microbatch accumulation,
+kv-block streaming) under-reports FLOPs/bytes by the trip count. This walker
+parses the optimized HLO, builds the computation call graph with a
+per-computation symbol table (operand shapes are not inlined in optimized
+HLO), extracts while trip counts (scan counters compare against a constant),
+and accumulates:
+
+* ``dot_flops``        — 2 · |out| · |contracting| per dot, × trips
+* ``hbm_bytes``        — per *top-level* op in each computation: operand +
+                         output bytes (post-fusion, so intra-fusion temps
+                         don't count — a faithful HBM-traffic roofline proxy)
+* ``collective_bytes`` — per collective op class, × trips (ICI traffic)
+
+All values are **per device** (the HLO is the SPMD-partitioned module).
+Validated against analytic FLOP counts in tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "f16": 2, "bf16": 2,
+    "s16": 2, "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+    "u64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OPCODE_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)\(")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    elems = 0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+    return elems
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    out_shape: str
+    operands: list
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    coll_count: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.dot_flops += o.dot_flops
+        self.hbm_bytes += o.hbm_bytes
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0) + v
+        for k, v in o.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(
+            self.dot_flops * f,
+            self.hbm_bytes * f,
+            self.collective_bytes * f,
+            {k: v * f for k, v in self.coll_by_op.items()},
+            {k: v * f for k, v in self.coll_count.items()},
+        )
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.ops: list[OpInfo] = []
+        self.shapes: dict[str, str] = {}  # op name -> output shape string
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        stripped = line.strip()
+        if not line.startswith(" ") and "->" in line and stripped.endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+            continue
+        if stripped == "}" or line.startswith("}"):
+            cur = None
+            continue
+        if cur is None or "=" not in line:
+            continue
+        lhs, rhs = line.split("=", 1)
+        name = lhs.replace("ROOT", "").strip().lstrip("%")
+        rhs = rhs.strip()
+        padded = " " + rhs
+        mo = _OPCODE_RE.search(padded)
+        if not mo:
+            continue
+        opcode = mo.group(1)
+        shape_str = padded[: mo.start(1)].strip()
+        # operand names: inside the first balanced paren group after opcode
+        paren_start = mo.end() - 1  # index of "(" in padded
+        depth = 0
+        end = paren_start
+        for i in range(paren_start, len(padded)):
+            if padded[i] == "(":
+                depth += 1
+            elif padded[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = padded[paren_start + 1 : end]
+        operands = _NAME_RE.findall(operand_str)
+        op = OpInfo(name, opcode, shape_str, operands, line)
+        cur.ops.append(op)
+        cur.shapes[name] = shape_str
+    return comps
+
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _trip_count(comp: Computation | None) -> int:
+    if comp is None:
+        return 1
+    best = 1
+    for op in comp.ops:
+        m = re.search(r"constant\((-?[0-9]+)\)", op.line)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id", "replica-id",
+    "iota", "bitcast-convert",
+}
+
+
+def analyze(hlo: str, entry: str | None = None) -> Cost:
+    comps = parse_computations(hlo)
+    if not comps:
+        return Cost()
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.MULTILINE)
+        entry = m.group(1) if m else max(comps, key=lambda k: len(comps[k].ops))
+
+    memo_flops: dict[str, float] = {}
+
+    def comp_dot_flops(cname: str) -> float:
+        """Recursive dot flops of a computation (used for fusion bodies)."""
+        if cname in memo_flops:
+            return memo_flops[cname]
+        memo_flops[cname] = 0.0
+        comp = comps.get(cname)
+        total = 0.0
+        if comp:
+            for op in comp.ops:
+                if op.opcode == "dot":
+                    total += _dot_flops(op, comp)
+                elif op.opcode == "fusion":
+                    mcalls = re.search(r"calls=%?([\w\.\-]+)", op.line)
+                    if mcalls:
+                        total += comp_dot_flops(mcalls.group(1))
+        memo_flops[cname] = total
+        return total
+
+    def _dot_flops(op: OpInfo, comp: Computation) -> float:
+        out_elems = _shape_elems(op.out_shape)
+        if not op.operands:
+            return 0.0
+        lhs_shape = comp.shapes.get(op.operands[0], "")
+        lhs_dims = _shape_dims(lhs_shape)
+        c = _CONTRACT_RE.search(op.line)
+        contract = [int(i) for i in c.group(1).split(",")] if (c and c.group(1)) else []
+        k = 1
+        for i in contract:
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+        return 2.0 * out_elems * k
+
+    def _operand_bytes(op: OpInfo, comp: Computation) -> float:
+        return sum(_shape_bytes(comp.shapes.get(o, "")) for o in op.operands)
+
+    memo_cost: dict[str, Cost] = {}
+
+    def comp_cost(cname: str) -> Cost:
+        if cname in memo_cost:
+            return memo_cost[cname]
+        memo_cost[cname] = Cost()  # cycle break
+        comp = comps.get(cname)
+        cost = Cost()
+        if comp is None:
+            return cost
+        for op in comp.ops:
+            if op.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", op.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                trips = _trip_count(comps.get(mc.group(1))) if mc else 1
+                if mb:
+                    cost += comp_cost(mb.group(1)).scaled(trips)
+                continue
+            if op.opcode == "call":
+                mcalls = re.search(r"to_apply=%?([\w\.\-]+)", op.line)
+                if mcalls:
+                    cost += comp_cost(mcalls.group(1))
+                continue
+            if op.opcode == "conditional":
+                mb = re.findall(r"branch_computations=\{([^}]*)\}", op.line)
+                if mb:
+                    branches = [comp_cost(b.strip().lstrip("%")) for b in mb[0].split(",")]
+                    cost += max(branches, key=lambda c: c.dot_flops + c.hbm_bytes)
+                continue
+            if op.opcode == "fusion" or op.opcode == "dynamic-update-slice":
+                if op.opcode == "fusion":
+                    mcalls = re.search(r"calls=%?([\w\.\-]+)", op.line)
+                    if mcalls:
+                        cost.dot_flops += comp_dot_flops(mcalls.group(1))
+                out_b = _shape_bytes(op.out_shape)
+                opnd_b = [_shape_bytes(comp.shapes.get(o, "")) for o in op.operands]
+                if op.opcode == "dynamic-update-slice" or "dynamic-update-slice" in op.name:
+                    # in-place slice update: the full buffer is aliased, only
+                    # the update slice is truly read+written.
+                    aliased = next((b for b in opnd_b if b == out_b), 0.0)
+                    if aliased:
+                        cost.hbm_bytes += sum(opnd_b) - aliased + (out_b - aliased)
+                        continue
+                cost.hbm_bytes += out_b + sum(opnd_b)
+                continue
+            if op.opcode == "dot":
+                cost.dot_flops += _dot_flops(op, comp)
+                cost.hbm_bytes += _shape_bytes(op.out_shape) + _operand_bytes(op, comp)
+                continue
+            matched = None
+            for coll in COLLECTIVES:
+                if op.opcode in (coll, coll + "-start", coll + "-done"):
+                    matched = coll
+                    break
+            if matched:
+                if op.opcode.endswith("-done"):
+                    continue  # counted at -start
+                b = _shape_bytes(op.out_shape)
+                if op.opcode.endswith("-start"):
+                    b = b / 2  # start ops carry (operand, result) tuples
+                cost.collective_bytes += b
+                cost.coll_by_op[matched] = cost.coll_by_op.get(matched, 0) + b
+                cost.coll_count[matched] = cost.coll_count.get(matched, 0) + 1
+                cost.hbm_bytes += b + _operand_bytes(op, comp)
+                continue
+            if op.opcode in _SKIP_BYTES_OPS:
+                continue
+            cost.hbm_bytes += _shape_bytes(op.out_shape) + _operand_bytes(op, comp)
+        memo_cost[cname] = cost
+        return cost
+
+    return comp_cost(entry)

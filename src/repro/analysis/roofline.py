@@ -1,0 +1,81 @@
+"""Roofline model for TPU v5e: three terms from the compiled dry-run.
+
+    compute_s    = HLO_dot_flops_per_device / peak_FLOPs
+    memory_s     = HLO_hbm_bytes_per_device / HBM_bw
+    collective_s = collective_bytes_per_device / ICI_link_bw
+
+All three come from the trip-count-aware HLO walker (analysis/hlo_cost) over
+the SPMD-partitioned module, so they are per-device values. The dominant
+term is the bottleneck; step time ≈ max(terms) on a perfectly-overlapped
+machine, and roofline fraction = dominant / sum-if-serialized gives the
+headroom estimate we hillclimb in EXPERIMENTS.md §Perf.
+
+MODEL_FLOPS uses the standard 6·N·D (train) / 2·N·D (inference) counting on
+*active* parameters (MoE), embedding and attention-map FLOPs excluded — the
+ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/dispatch redundancy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip (v5e)
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def terms(dot_flops: float, hbm_bytes: float, collective_bytes: float) -> Roofline:
+    return Roofline(
+        compute_s=dot_flops / PEAK_FLOPS,
+        memory_s=hbm_bytes / HBM_BW,
+        collective_s=collective_bytes / ICI_BW,
+    )
+
+
+def model_flops(cfg, shape, *, chips: int) -> dict:
+    """Analytic MODEL_FLOPS for one step of this (arch × shape) cell."""
+    n_active = cfg.active_param_count_estimate()
+    n_total = cfg.param_count_estimate()
+    if shape.mode == "train":
+        tokens = shape.seq_len * shape.global_batch
+        total = 6.0 * n_active * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return {
+        "model_flops_total": total,
+        "model_flops_per_device": total / chips,
+        "params_total": n_total,
+        "params_active": n_active,
+    }
+
+
+def mfu(dot_flops_per_device: float, step_time_s: float) -> float:
+    return dot_flops_per_device / (step_time_s * PEAK_FLOPS)

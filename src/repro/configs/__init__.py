@@ -1,0 +1,12 @@
+"""Architecture configs: 10 assigned archs + the paper's own 0.7B model."""
+
+from .base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ParallelConfig,
+    ShapeConfig,
+    default_parallel,
+    get_config,
+    get_parallel_config,
+    list_archs,
+)

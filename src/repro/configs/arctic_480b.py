@@ -1,0 +1,46 @@
+"""Snowflake Arctic (480B) — 128-expert top-2 MoE + parallel dense residual.
+
+[hf:Snowflake/snowflake-arctic-base] 35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000; every layer: attention + (dense residual MLP ∥ MoE).
+"""
+
+from .base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b",
+        family="moe",
+        n_layers=35,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=4864,
+        vocab_size=32000,
+        n_experts=128,
+        experts_per_tok=2,
+        dense_residual=True,
+        dense_ff=4864,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=48,
+        vocab_size=256,
+        n_experts=8,
+        experts_per_tok=2,
+        dense_residual=True,
+        dense_ff=48,
+    )
+
+
+register("arctic-480b", full, smoke)

@@ -1,0 +1,50 @@
+"""Gemma-2 27B — alternating local/global attention + logit softcapping.
+
+[arXiv:2408.00118; hf] 46L d_model=4608 32H (GQA kv=16) d_ff=36864
+vocab=256000; sliding window 4096 on local layers (period 2), attention
+softcap 50, final softcap 30.
+
+``long_500k`` is *skipped*: half the layers are global full attention, so the
+stack is not sub-quadratic (DESIGN.md §5).
+"""
+
+from .base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-27b",
+        family="dense",
+        n_layers=46,
+        d_model=4608,
+        n_heads=32,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=36864,
+        vocab_size=256000,
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        sliding_window=4096,
+        local_global_period=2,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-27b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        sliding_window=16,
+        local_global_period=2,
+    )
+
+
+register("gemma2-27b", full, smoke)

@@ -1,0 +1,40 @@
+"""InternVL2-26B — InternViT frontend (stubbed) + InternLM2 backbone.
+
+[arXiv:2404.16821; hf] 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92553. ``input_specs`` provides precomputed patch embeddings.
+"""
+
+from .base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b",
+        family="dense",
+        n_layers=48,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab_size=92553,
+        frontend="vision",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        frontend="vision",
+    )
+
+
+register("internvl2-26b", full, smoke)

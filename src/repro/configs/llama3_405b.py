@@ -1,0 +1,40 @@
+"""LLaMA-3 405B — largest assigned dense model.
+
+[arXiv:2407.21783; unverified] 126L d_model=16384 128H (GQA kv=8)
+d_ff=53248 vocab=128256. FSDP spans pod×data; optimizer state bf16.
+"""
+
+from .base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b",
+        family="dense",
+        n_layers=126,
+        d_model=16384,
+        n_heads=128,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=53248,
+        vocab_size=128256,
+        rope_theta=500000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=256,
+        rope_theta=500000.0,
+    )
+
+
+register("llama3-405b", full, smoke)

@@ -1,0 +1,41 @@
+"""MusicGen-medium — decoder-only transformer over EnCodec tokens.
+
+[arXiv:2306.05284; hf] 48L d_model=1536 24H (GQA kv=24 ⇒ MHA) d_ff=6144
+vocab=2048. Audio frontend stubbed: ``input_specs`` provides precomputed
+EnCodec frame embeddings (backbone-only scope per the shape spec).
+"""
+
+from .base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium",
+        family="dense",
+        n_layers=48,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=24,
+        head_dim=64,
+        d_ff=6144,
+        vocab_size=2048,
+        frontend="audio",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        frontend="audio",
+    )
+
+
+register("musicgen-medium", full, smoke)

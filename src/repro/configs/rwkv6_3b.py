@@ -1,0 +1,43 @@
+"""RWKV-6 "Finch" 3B — attention-free RNN with data-dependent decay.
+
+[arXiv:2404.05892; hf] 32L d_model=2560 d_ff=8960 vocab=65536, head size 64
+(40 heads). O(1) decode state; ``long_500k`` runs. TeLLMe C2 inapplicable
+(attention-free) — see DESIGN.md §5.
+"""
+
+from .base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b",
+        family="ssm",
+        n_layers=32,
+        d_model=2560,
+        n_heads=40,
+        n_kv_heads=40,
+        head_dim=64,
+        d_ff=8960,
+        vocab_size=65536,
+        rwkv_head_dim=64,
+        sub_quadratic=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b-smoke",
+        family="ssm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        rwkv_head_dim=16,
+        sub_quadratic=True,
+    )
+
+
+register("rwkv6-3b", full, smoke)

@@ -1,0 +1,40 @@
+"""TeLLMe's own deployment target: BitNet-b1.58 0.7B (paper Table V row).
+
+d_model=1536 (the paper's LM-head example: N=1536, V=32000), 24 layers,
+ternary weights + int8 activations — the model the KV260 numbers are
+measured on. This config anchors the paper-metric benchmarks
+(compression ratio, prefill/decode boundedness, throughput model).
+"""
+
+from .base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="tellme-0.7b",
+        family="dense",
+        n_layers=24,
+        d_model=1536,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=96,
+        d_ff=4096,
+        vocab_size=32000,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="tellme-0.7b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+    )
+
+
+register("tellme-0.7b", full, smoke)

@@ -1,0 +1,10 @@
+"""Core ternary-LLM library: the paper's contribution as composable JAX modules.
+
+- ternary.py    absmean ternarization (weights), absmax int8 (activations), STE
+- packing.py    2-bit and base-3 (1.6 b/weight) packed storage, TL group indices
+- tl_matmul.py  faithful Algorithm-1 table-lookup matmul + Table-I cost model
+- bitlinear.py  BitLinear layer: QAT train / eval / packed serving paths
+- params.py     ParamSpec single-source system (init / shapes / shardings)
+"""
+
+from . import bitlinear, packing, params, ternary, tl_matmul  # noqa: F401

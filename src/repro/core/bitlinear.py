@@ -1,0 +1,132 @@
+"""BitLinear — the paper's ternary linear layer as a composable JAX module.
+
+Three execution paths over one weight declaration:
+
+* ``mode="train"``  — QAT: absmax-int8 fake-quant activations × absmean
+  ternary fake-quant weights, dense bf16 matmul, STE gradients. This is how
+  BitNet-1.58 models (the family TeLLMe deploys) are trained.
+* ``mode="eval"``   — hard-quantized integer path on unpacked weights
+  (bit-exact twin of the packed path; used for validation).
+* ``mode="packed"`` — serving path: weights live 2-bit-packed in HBM
+  (uint8, 4 trits/byte) and are dequantized on the fly inside the matmul —
+  the TPU-native form of the paper's TL-based matmul (DESIGN.md §2, C1).
+  Dequantization of the *output* (x_scale · w_scale) is fused into the
+  epilogue, as the paper fuses dequant into the Linear output pipeline.
+
+The packed matmul routes through ``kernels.ternary_matmul`` when
+``use_kernel=True`` (TPU target; interpret-mode on CPU), else an XLA path with
+identical semantics (used for CPU tests and as the dry-run lowering).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from . import ternary
+from .packing import pack2, unpack2
+from .params import ParamSpec
+
+
+def spec(n_in: int, n_out: int, axes: tuple, *, dtype=jnp.float32, scale=None) -> dict:
+    """Declare a BitLinear weight [n_in, n_out] with logical ``axes``."""
+    return {"w": ParamSpec((n_in, n_out), axes, dtype=dtype, scale=scale, quant="ternary")}
+
+
+def packed_spec(s: ParamSpec) -> dict:
+    """Serving-side declaration for a ternary ParamSpec: packed + scale.
+
+    The contraction axis (second-to-last) is packed 4 trits/byte. Leading
+    stack axes (scanned layers, experts) are preserved, with one scale per
+    stacked matrix.
+    """
+    n_in = s.shape[-2]
+    if n_in % 4:
+        raise ValueError(f"contraction dim {n_in} not packable (need %4==0)")
+    lead = s.shape[:-2]
+    shape = lead + (n_in // 4, s.shape[-1])
+    return {
+        "wp": ParamSpec(shape, s.axes, dtype=jnp.uint8, init="zeros"),
+        "scale": ParamSpec(lead, s.axes[:-2], dtype=jnp.float32, init="ones"),
+    }
+
+
+def pack_params(w) -> dict:
+    """Convert a trained float weight [..., N, K] into the packed serving form."""
+    if w.ndim == 2:
+        w_t, w_scale = ternary.ternarize(w)
+        return {"wp": pack2(w_t), "scale": w_scale}
+    flat = w.reshape((-1,) + w.shape[-2:])
+    packed = []
+    scales = []
+    for i in range(flat.shape[0]):
+        w_t, w_scale = ternary.ternarize(flat[i])
+        packed.append(pack2(w_t))
+        scales.append(w_scale)
+    wp = jnp.stack(packed).reshape(w.shape[:-2] + (w.shape[-2] // 4, w.shape[-1]))
+    scale = jnp.stack(scales).reshape(w.shape[:-2])
+    return {"wp": wp, "scale": scale}
+
+
+def apply(params: dict, x, *, mode: str = "train", use_kernel: bool = False,
+          out_dtype: Any = None):
+    """Apply BitLinear. ``x`` is [..., n_in]; returns [..., n_out]."""
+    out_dtype = out_dtype or x.dtype
+    if mode == "train":
+        w = params["w"]
+        return ternary.fake_quant_matmul(x, w.astype(x.dtype)).astype(out_dtype)
+    if mode == "eval":
+        w_t, w_scale = ternary.ternarize(params["w"])
+        x_i8, x_scale = ternary.quantize_act(x)
+        return ternary.ternary_matmul_ref(x_i8, x_scale, w_t, w_scale, out_dtype=out_dtype)
+    if mode == "packed":
+        x_i8, x_scale = ternary.quantize_act(x)
+        if use_kernel:
+            from ..kernels.ternary_matmul import ops as tm_ops
+
+            return tm_ops.ternary_matmul(
+                x_i8, x_scale, params["wp"], params["scale"], out_dtype=out_dtype
+            )
+        # XLA path: unpack (fused by XLA into the matmul producer) + int matmul.
+        w_t = unpack2(params["wp"])
+        return ternary.ternary_matmul_ref(
+            x_i8, x_scale, w_t, params["scale"], out_dtype=out_dtype
+        )
+    if mode in ("wq", "wq_packed"):
+        # weight-only quantization ablation: ternary weights, float activations.
+        # (Also the exact-match twin of MLA weight absorption, which cannot
+        # commute with activation quantization — see models/mla.py.)
+        w = material_weight(params, mode="eval" if mode == "wq" else "packed",
+                            dtype=x.dtype)
+        return jnp.matmul(x, w).astype(out_dtype)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dense (non-ternary) linear — embeddings / LM head / frontends stay high
+# precision, per BitNet-1.58 practice.
+# ---------------------------------------------------------------------------
+
+
+def material_weight(params: dict, *, mode: str = "train", dtype=jnp.bfloat16):
+    """Effective (dequantized) float weight for paths that need the matrix
+    itself (e.g. MLA weight absorption): train -> STE fake-quant value,
+    eval/wq -> ternarized, packed -> unpacked · scale."""
+    if mode == "train":
+        return ternary.ternarize_ste(params["w"]).astype(dtype)
+    if mode in ("eval", "wq"):
+        w_t, s = ternary.ternarize(params["w"])
+        return (w_t.astype(jnp.float32) * s).astype(dtype)
+    if mode in ("packed", "wq_packed"):
+        return (unpack2(params["wp"]).astype(jnp.float32) * params["scale"]).astype(dtype)
+    raise ValueError(mode)
+
+
+def dense_spec(n_in: int, n_out: int, axes: tuple, *, dtype=jnp.float32, scale=None) -> dict:
+    return {"w": ParamSpec((n_in, n_out), axes, dtype=dtype, scale=scale)}
+
+
+def dense_apply(params: dict, x, *, out_dtype: Any = None):
+    out_dtype = out_dtype or x.dtype
+    return jnp.matmul(x, params["w"].astype(x.dtype)).astype(out_dtype)

@@ -1,0 +1,137 @@
+"""Bit-packing for ternary weights.
+
+Two storage formats:
+
+* ``pack2``  — 2 bits per trit, 4 trits/byte. Trivial shift/mask unpack; this
+  is what the TPU Pallas kernels consume (unpack is a handful of VPU integer
+  ops per byte before the MXU matmul).
+* ``pack_b3`` — base-3, 5 trits/byte (3^5 = 243 <= 255): 1.6 bits per weight,
+  *below* the information-theoretic 1.585 bits the paper's "1.58-bit" name
+  refers to plus padding. Used for HBM/offline storage of the largest models;
+  unpack costs 4 integer div/mods per byte.
+
+Both formats store trits biased to {0, 1, 2} = value + 1.
+
+Conventions: packing operates on the *first* axis (the contraction axis N of a
+[N, K] weight matrix), so a packed matrix keeps the output axis K untouched —
+a Pallas kernel can tile K freely and unpack only its own N-block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PACK2_RATIO = 4  # trits per byte, 2-bit format
+PACKB3_RATIO = 5  # trits per byte, base-3 format
+
+_B3_POW = (1, 3, 9, 27, 81)
+
+
+def _check_first_axis(n: int, ratio: int) -> None:
+    if n % ratio != 0:
+        raise ValueError(f"first axis ({n}) must be divisible by pack ratio {ratio}")
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packing (kernel format)
+# ---------------------------------------------------------------------------
+
+
+def pack2(w_t: jax.Array) -> jax.Array:
+    """Pack ternary int8 {-1,0,1} [N, ...] -> uint8 [N//4, ...], *planar* layout.
+
+    Byte ``i`` holds rows ``{i, i + N/4, i + 2N/4, i + 3N/4}`` in bit-planes
+    0..3. Planar (rather than interleaved) layout means the unpacking kernel
+    reconstructs each bit-plane as a contiguous [N/4, K] slab — no cross-lane
+    interleave on TPU; the matmul contracts plane ``j`` against the matching
+    contiguous activation slab ``x[:, jN/4:(j+1)N/4]``.
+    """
+    _check_first_axis(w_t.shape[0], PACK2_RATIO)
+    n4 = w_t.shape[0] // PACK2_RATIO
+    biased = (w_t + 1).astype(jnp.uint8)  # {0,1,2}
+    g = biased.reshape((PACK2_RATIO, n4) + w_t.shape[1:])  # plane-major
+    return g[0] | (g[1] << 2) | (g[2] << 4) | (g[3] << 6)
+
+
+def unpack2(packed: jax.Array, *, dtype=jnp.int8) -> jax.Array:
+    """Inverse of :func:`pack2`: uint8 [N//4, ...] -> {-1,0,1} [N, ...]."""
+    parts = [((packed >> (2 * i)) & 0x3).astype(jnp.int8) - 1 for i in range(PACK2_RATIO)]
+    stacked = jnp.stack(parts, axis=0)  # [4, N//4, ...] plane-major
+    n4 = packed.shape[0]
+    return stacked.reshape((n4 * PACK2_RATIO,) + packed.shape[1:]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# base-3 packing (storage format, 1.6 bits/weight)
+# ---------------------------------------------------------------------------
+
+
+def pack_b3(w_t: jax.Array) -> jax.Array:
+    """Pack ternary int8 [N, ...] -> uint8 [N//5, ...] via base-3 digits."""
+    _check_first_axis(w_t.shape[0], PACKB3_RATIO)
+    biased = (w_t + 1).astype(jnp.uint8)
+    g = biased.reshape((w_t.shape[0] // PACKB3_RATIO, PACKB3_RATIO) + w_t.shape[1:])
+    out = jnp.zeros(g.shape[:1] + g.shape[2:], dtype=jnp.uint8)
+    for i, p in enumerate(_B3_POW):
+        out = out + g[:, i] * jnp.uint8(p)
+    return out
+
+
+def unpack_b3(packed: jax.Array, *, dtype=jnp.int8) -> jax.Array:
+    """Inverse of :func:`pack_b3`."""
+    parts = []
+    rem = packed.astype(jnp.int32)
+    for _ in range(PACKB3_RATIO):
+        parts.append((rem % 3).astype(jnp.int8) - 1)
+        rem = rem // 3
+    stacked = jnp.stack(parts, axis=1)
+    n5 = packed.shape[0]
+    return stacked.reshape((n5 * PACKB3_RATIO,) + packed.shape[1:]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# TL-table index packing (Algorithm 1 preprocessing, G-trit group indices)
+# ---------------------------------------------------------------------------
+
+
+def encode_groups(w_t: jax.Array, g: int) -> jax.Array:
+    """Offline_preprocess(W) of Algorithm 1: encode every ``g`` consecutive
+    trits of the contraction axis as a base-3 index in [0, 3^g).
+
+    [N, K] -> int32 [N//g, K]. For g=3 these are the paper's 5-bit indices.
+    """
+    _check_first_axis(w_t.shape[0], g)
+    biased = (w_t + 1).astype(jnp.int32)
+    grouped = biased.reshape((w_t.shape[0] // g, g) + w_t.shape[1:])
+    idx = jnp.zeros(grouped.shape[:1] + grouped.shape[2:], dtype=jnp.int32)
+    for i in range(g):
+        idx = idx + grouped[:, i] * (3**i)
+    return idx
+
+
+def decode_groups(idx: jax.Array, g: int, *, dtype=jnp.int8) -> jax.Array:
+    """Inverse of :func:`encode_groups` (testing aid)."""
+    parts = []
+    rem = idx.astype(jnp.int32)
+    for _ in range(g):
+        parts.append((rem % 3).astype(jnp.int8) - 1)
+        rem = rem // 3
+    stacked = jnp.stack(parts, axis=1)
+    return stacked.reshape((idx.shape[0] * g,) + idx.shape[1:]).astype(dtype)
+
+
+def combo_matrix(g: int, dtype=jnp.float32) -> jax.Array:
+    """COMBOS[g, 3^g]: column ``c`` holds the trit-vector decoded from ``c``.
+
+    TL_TABLE_set_up of Algorithm 1 as a matrix: building the lookup table for
+    an activation group a[g] is the matvec ``a @ COMBOS`` — i.e. on TPU the
+    table build *is* an MXU matmul (DESIGN.md §2, C1 row).
+    """
+    cols = jnp.arange(3**g, dtype=jnp.int32)
+    digits = []
+    rem = cols
+    for _ in range(g):
+        digits.append((rem % 3) - 1)
+        rem = rem // 3
+    return jnp.stack(digits, axis=0).astype(dtype)  # [g, 3^g]

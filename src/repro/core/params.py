@@ -1,0 +1,118 @@
+"""Parameter specification system.
+
+Models declare an *abstract* parameter tree (nested dicts of ``ParamSpec``),
+from which the framework derives, consistently and from a single source:
+
+* materialized parameters        (``init_params``            — training)
+* ShapeDtypeStructs              (``abstract_params``        — dry-run, no alloc)
+* logical sharding axes          (``axes_tree``              — pjit shardings)
+
+This is the same single-source-of-truth idiom production JAX stacks use to
+keep init / sharding / checkpoint layouts from drifting apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of a single parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]  # logical axis name (str) or None, one per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "embed"
+    scale: float | None = None  # stddev; None -> 1/sqrt(fan_in)
+    quant: str = "none"  # "ternary" -> packed on the serving path
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} rank mismatch")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _iter_specs(tree: Any, path: str = ""):
+    if _is_spec(tree):
+        yield path, tree
+    elif isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _iter_specs(tree[k], f"{path}/{k}")
+    elif tree is None:
+        return
+    else:
+        raise TypeError(f"unexpected node at {path}: {type(tree)}")
+
+
+def _map_specs(fn, tree: Any, path: str = ""):
+    if _is_spec(tree):
+        return fn(path, tree)
+    if isinstance(tree, dict):
+        return {k: _map_specs(fn, v, f"{path}/{k}") for k, v in tree.items()}
+    if tree is None:
+        return None
+    raise TypeError(f"unexpected node at {path}: {type(tree)}")
+
+
+def _path_key(key: jax.Array, path: str) -> jax.Array:
+    digest = hashlib.sha256(path.encode()).digest()
+    fold = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(key, fold)
+
+
+def _init_one(path: str, spec: ParamSpec, key: jax.Array) -> jax.Array:
+    k = _path_key(key, path)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 1.0
+        return (jax.random.normal(k, spec.shape) * std).astype(spec.dtype)
+    if spec.init == "normal":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, spec.shape) * std).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r} at {path}")
+
+
+def init_params(tree: Any, key: jax.Array) -> Any:
+    """Materialize a parameter pytree from a spec tree (deterministic in key)."""
+    return _map_specs(lambda p, s: _init_one(p, s, key), tree)
+
+
+def abstract_params(tree: Any) -> Any:
+    """ShapeDtypeStruct pytree — used by the dry-run (no device allocation)."""
+    return _map_specs(lambda p, s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def axes_tree(tree: Any) -> Any:
+    """Logical-axes pytree matching the param structure."""
+    return _map_specs(lambda p, s: s.axes, tree)
+
+
+def param_count(tree: Any) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _iter_specs(tree))
+
+
+def param_bytes(tree: Any) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for _, s in _iter_specs(tree)
+    )
+
+
+def cast_tree(params: Any, dtype) -> Any:
+    """Cast floating-point leaves (keeps integer/packed leaves untouched)."""
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params
+    )

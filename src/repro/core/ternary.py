@@ -1,0 +1,132 @@
+"""Ternary (1.58-bit) quantization core — BitNet-1.58 style.
+
+Implements the quantization scheme TeLLMe executes in hardware:
+
+* weights  -> ternary {-1, 0, +1} with a per-tensor (or per-channel) absmean
+  scale  (BitNet b1.58 recipe, the model family the paper deploys);
+* activations -> int8 with a per-token absmax scale (the paper's "Absmax
+  Quantization" unit, Sec. III-D).
+
+Both come in two flavours:
+
+* ``*_ste``  — fake-quant with a straight-through estimator, used on the QAT
+  training path (the forward value is the quantized one, the gradient flows
+  as identity);
+* plain     — hard quantization used on the inference path, returning the
+  integer tensors + scales that the packed kernels consume.
+
+The invariant tying the two together (tested in tests/test_quant_consistency):
+for the same weights, the STE forward and the integer inference path produce
+identical results up to float re-association.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Epsilon guarding divisions by zero scales (all-zero tensors).
+_EPS = 1e-8
+
+# ---------------------------------------------------------------------------
+# Weight ternarization (absmean, BitNet-1.58)
+# ---------------------------------------------------------------------------
+
+
+def ternary_scale(w: jax.Array, *, axis=None) -> jax.Array:
+    """BitNet-1.58 absmean scale: gamma = mean(|W|).
+
+    ``axis=None`` gives the per-tensor scale the paper uses; passing an axis
+    yields per-channel scales (a beyond-paper option, see DESIGN.md §6).
+    """
+    return jnp.maximum(jnp.mean(jnp.abs(w), axis=axis, keepdims=axis is not None), _EPS)
+
+
+def ternarize(w: jax.Array, *, axis=None) -> tuple[jax.Array, jax.Array]:
+    """Hard-ternarize weights.
+
+    Returns ``(w_t, scale)`` with ``w_t`` in {-1, 0, +1} (int8) such that the
+    dequantized weight is ``w_t * scale``.
+    """
+    scale = ternary_scale(w, axis=axis)
+    w_t = jnp.clip(jnp.round(w / scale), -1, 1).astype(jnp.int8)
+    return w_t, scale.astype(jnp.float32)
+
+
+def ternarize_ste(w: jax.Array, *, axis=None) -> jax.Array:
+    """Fake-quant ternarization with straight-through gradients.
+
+    forward:  w_q = round(clip(w/γ)) * γ   (value identical to inference path)
+    backward: dL/dw = dL/dw_q              (identity; the round is transparent)
+
+    The quantization arithmetic runs in f32 but the result is cast back to
+    ``w.dtype`` — the value is an int-level anyway, and keeping the stream in
+    bf16 halves QAT elementwise HBM traffic (EXPERIMENTS.md §Perf, A2).
+    """
+    scale = ternary_scale(w, axis=axis)
+    w_q = jnp.clip(jnp.round(w / scale), -1, 1) * scale
+    # Straight-through: detach the non-differentiable part.
+    return (w + jax.lax.stop_gradient(w_q.astype(w.dtype) - w)).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization (absmax int8, per-token)
+# ---------------------------------------------------------------------------
+
+
+def absmax_scale(x: jax.Array, *, axis: int = -1) -> jax.Array:
+    """Per-token absmax scale; pass 1 of the paper's two-pass quant unit."""
+    return jnp.maximum(jnp.max(jnp.abs(x), axis=axis, keepdims=True), _EPS) / 127.0
+
+
+def quantize_act(x: jax.Array, *, axis: int = -1) -> tuple[jax.Array, jax.Array]:
+    """Hard int8 absmax quantization. Returns (x_i8, scale)."""
+    scale = absmax_scale(x, axis=axis)
+    x_i8 = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return x_i8, scale.astype(jnp.float32)
+
+
+def quantize_act_ste(x: jax.Array, *, axis: int = -1) -> jax.Array:
+    """Fake-quant int8 activations with straight-through gradients (value
+    cast back to ``x.dtype`` — see ternarize_ste / §Perf A2)."""
+    scale = absmax_scale(x, axis=axis)
+    x_q = jnp.clip(jnp.round(x / scale), -127, 127) * scale
+    return (x + jax.lax.stop_gradient(x_q.astype(x.dtype) - x)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference ternary matmul semantics (the oracle every kernel is tested on)
+# ---------------------------------------------------------------------------
+
+
+def ternary_matmul_ref(
+    x_i8: jax.Array,
+    x_scale: jax.Array,
+    w_t: jax.Array,
+    w_scale: jax.Array,
+    *,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Dequantized ternary matmul: (x_i8·sx) @ (w_t·sw), computed in int32.
+
+    x_i8:   [..., N]   int8 activations
+    x_scale:[..., 1]   per-token scales
+    w_t:    [N, K]     ternary int8 weights
+    w_scale: scalar or [1, K] weight scale
+    """
+    acc = jnp.matmul(
+        x_i8.astype(jnp.int32), w_t.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+def fake_quant_matmul(x: jax.Array, w: jax.Array, *, w_axis=None) -> jax.Array:
+    """QAT forward: fake-quant activations & weights, dense matmul.
+
+    This is the training-path twin of ``ternary_matmul_ref`` — numerically it
+    computes the same quantity but keeps everything in float so gradients flow
+    (STE through both quantizers).
+    """
+    xq = quantize_act_ste(x)
+    wq = ternarize_ste(w, axis=w_axis)
+    return jnp.matmul(xq, wq)

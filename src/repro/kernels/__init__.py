@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for TeLLMe hot spots (validated in interpret mode on CPU)."""

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: fused causal attention with masked-block skipping.
+
+TPU adaptation of TeLLMe's *reverse attention* (paper §III-B, DESIGN.md §2
+C2). The paper's insight decomposes into (a) never spend compute on
+fully-masked regions of the causal attention map, (b) fuse QK^T / online
+softmax / SV into one pass so the score matrix never leaves on-chip memory,
+(c) keep sustained bandwidth O(1) blocks per step. Here:
+
+  (a) -> `pl.when(j <= i)` skips upper-triangular blocks entirely (plus a
+         sliding-window frontier for gemma2-style local layers), the same
+         iteration-count saving as the paper's Table II (N²/2p + N/2);
+  (b) -> the (m, l, acc) online-softmax state lives in VMEM scratch across
+         the kv-block loop — the paper's block-size-1 recurrence generalized
+         to MXU-shaped (bq × bkv) blocks;
+  (c) -> each grid step touches exactly one q block + one k/v block (the
+         Pallas pipeline keeps HBM traffic at one block in / one out).
+
+The *reverse* q-ordering itself is an FPGA BRAM-eviction device with no VMEM
+analogue — the grid is q-major instead, which gives the same single-visit
+k/v streaming per q block. GQA is handled in the k/v index_maps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, bq: int, bkv: int, window: int, softcap: float, nkv: int,
+    causal_skip: bool,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # --- causal / window frontier: run only unmasked blocks (paper C2a) -----
+    if causal_skip:
+        live = j <= i  # bq == bkv ⇒ block fully masked iff j > i
+        if window > 0:
+            live = jnp.logical_and(live, i * bq - ((j + 1) * bkv - 1) < window)
+    else:
+        # "dense" schedule ablation (paper Table II): every block computed,
+        # masked entries discarded elementwise — same output, 2× the work.
+        live = j >= 0
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0]  # [bq, d]
+        k = k_ref[0]  # [bkv, d]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bkv]
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        # Element-wise frontier inside the diagonal/window-edge blocks.
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = qpos >= kpos
+        if window > 0:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    # --- finalize once the causal frontier is reached (j == i) --------------
+    @pl.when(j == jnp.minimum(i, nkv - 1))
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bkv", "causal_skip", "window", "softcap", "scale", "interpret"),
+)
+def flash_attention_kernel(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, HK, S, D]
+    v: jax.Array,  # [B, HK, S, D]
+    *,
+    bq: int = 128,
+    bkv: int = 128,
+    causal_skip: bool = True,  # False = "dense" schedule (ablation, Table II)
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    hk = k.shape[1]
+    assert h % hk == 0 and s % bq == 0 and s % bkv == 0 and bq == bkv
+    group = h // hk
+    scale = scale if scale is not None else 1.0 / d**0.5
+    nq, nkv = s // bq, s // bkv
+    grid = (b * h, nq, nkv)
+
+    kern = functools.partial(
+        _kernel, scale=scale, bq=bq, bkv=bkv, window=window,
+        softcap=softcap, nkv=nkv, causal_skip=causal_skip,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, i, j, g=group, hh=h, hkk=hk:
+                         ((bh // hh) * hkk + (bh % hh) // g, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, i, j, g=group, hh=h, hkk=hk:
+                         ((bh // hh) * hkk + (bh % hh) // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        q.reshape(b * h, s, d),
+        k.reshape(b * hk, s, d),
+        v.reshape(b * hk, s, d),
+    ).reshape(b, h, s, d)

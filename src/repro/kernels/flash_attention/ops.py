@@ -1,0 +1,39 @@
+"""Jitted wrapper for the fused causal-skip flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+def flash_attention(
+    q, k, v, *, causal_skip: bool = True, window: int = 0, softcap: float = 0.0,
+    scale: float | None = None, bq: int = 128, bkv: int = 128, interpret=None
+):
+    """Fused causal attention, q [B, H, S, D], k/v [B, HK, S, D].
+
+    Pads S up to a block multiple (padded kv positions are masked off by the
+    causal frontier; padded q rows are sliced away).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, s, d = q.shape
+    blk = max(bq, bkv)
+    bq = bkv = min(blk, _round_up(s, 128))
+    sp = _round_up(s, bq)
+    if sp != s:
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    out = flash_attention_kernel(
+        q, k, v, bq=bq, bkv=bkv, causal_skip=causal_skip, window=window,
+        softcap=softcap, scale=scale, interpret=interpret,
+    )
+    return out[:, :, :s, :]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for causal (optionally windowed, softcapped) attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_reference(
+    q, k, v, *, causal: bool = True, window: int = 0, softcap: float = 0.0,
+    scale: float | None = None
+):
+    """q [B, H, S, D], k/v [B, HK, S, D] (GQA: H % HK == 0) -> [B, H, S, D]."""
+    b, h, s, d = q.shape
+    hk = k.shape[1]
+    group = h // hk
+    scale = scale if scale is not None else 1.0 / d**0.5
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kq).astype(jnp.float32) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), vq)

@@ -1,0 +1,25 @@
+"""Jitted wrapper for the fused RMSNorm+quant kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_quant_kernel
+
+
+def rmsnorm_quant(x, gamma, *, eps: float = 1e-5, interpret=None):
+    """x [..., N], gamma [N] -> (int8 [..., N], scale [..., 1])."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    *lead, n = x.shape
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, n)
+    bm = 128 if n <= 16384 else 32
+    mp = ((m + bm - 1) // bm) * bm
+    if mp != m:
+        x2 = jnp.pad(x2, ((0, mp - m), (0, 0)))
+    i8, s = rmsnorm_quant_kernel(x2, gamma.reshape(1, n), bm=bm, eps=eps, interpret=interpret)
+    return i8[:m].reshape(*lead, n), s[:m].reshape(*lead, 1)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused RMSNorm + absmax-int8 quantization unit."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_quant(x, gamma, *, eps: float = 1e-5):
+    """x [..., N] float, gamma [N] -> (x_i8 [..., N] int8, scale [..., 1] f32).
+
+    Semantics: y = x / rms(x) * gamma ; s = max|y| / 127 ; x_i8 = round(y / s).
+    """
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    y = xf / rms * gamma.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(y), axis=-1, keepdims=True), 1e-8) / 127.0
+    x_i8 = jnp.clip(jnp.round(y / s), -127, 127).astype(jnp.int8)
+    return x_i8, s
+
+
+def rmsnorm(x, gamma, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf / rms * gamma.astype(jnp.float32)).astype(x.dtype)

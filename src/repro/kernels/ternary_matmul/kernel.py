@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: packed-ternary × int8 matmul with fused dequant epilogue.
+
+TPU-native form of TeLLMe's TL-based ternary matmul (DESIGN.md §2, C1):
+weights stream from HBM at 2 bits/weight (the bandwidth win that makes the
+memory-bound decode GEMV fast) and are expanded to int8 bit-planes *in VMEM*,
+immediately feeding the MXU. The activation block is loaded once and reused
+against every weight tile — the same reuse structure as the paper's
+"grouped activations + online precomputation", with the VMEM block in the
+role of the LUT-RAM table group.
+
+Blocking:
+  grid = (M/bm, K/bk); each step owns out block [bm, bk]
+  x block  [bm, N]   int8  (full contraction resident in VMEM)
+  wp block [N/4, bk] uint8 (planar pack2: bit-plane j = rows jN/4..(j+1)N/4)
+  epilogue: acc_i32 * x_scale[bm,1] * w_scale -> out block (fused dequant)
+
+VMEM budget at defaults (bm=128, bk=128, N=16384):
+  x 2 MiB + wp 0.5 MiB + planes 2 MiB + acc 64 KiB  << 16 MiB.
+For N > 32768 (e.g. llama3-405B d_ff=53248) ops.py halves bm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, xs_ref, wp_ref, ws_ref, o_ref, *, out_dtype):
+    n4 = wp_ref.shape[0]
+    bm = x_ref.shape[0]
+    acc = jnp.zeros((bm, wp_ref.shape[1]), dtype=jnp.int32)
+    wp = wp_ref[...]
+    # Contract plane-by-plane: plane j holds weight rows [j*N/4, (j+1)*N/4).
+    for j in range(4):
+        plane = (((wp >> (2 * j)) & 0x3).astype(jnp.int32) - 1).astype(jnp.int8)
+        xj = x_ref[:, j * n4 : (j + 1) * n4]
+        acc = acc + jax.lax.dot_general(
+            xj,
+            plane,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    # Fused dequant epilogue (paper C3: dequant lives in the Linear output).
+    out = acc.astype(jnp.float32) * xs_ref[...] * ws_ref[0, 0]
+    o_ref[...] = out.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "out_dtype", "interpret"))
+def ternary_matmul_kernel(
+    x_i8: jax.Array,  # [M, N] int8
+    x_scale: jax.Array,  # [M, 1] f32
+    wp: jax.Array,  # [N/4, K] uint8 (planar pack2)
+    w_scale: jax.Array,  # [1, 1] f32
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, n = x_i8.shape
+    n4, k = wp.shape
+    assert n4 * 4 == n, (n4, n)
+    assert m % bm == 0 and k % bk == 0, (m, k, bm, bk)
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((n4, bk), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
+        interpret=interpret,
+    )(x_i8, x_scale, wp, w_scale)

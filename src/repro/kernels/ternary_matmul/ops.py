@@ -1,0 +1,52 @@
+"""Jitted public wrapper for the packed ternary matmul kernel.
+
+Handles shape padding/blocking policy and batch-dim flattening; on non-TPU
+backends runs the kernel in interpret mode (bit-identical semantics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ternary_matmul_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ternary_matmul(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32, interpret=None):
+    """x_i8 [..., N] int8 × packed wp [N/4, K] -> [..., K].
+
+    Leading dims are flattened to M; M and K are padded to block multiples.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    *lead, n = x_i8.shape
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x_i8.reshape(m, n)
+    s2 = x_scale.reshape(m, 1)
+    n4, k = wp.shape
+
+    bm = 128 if n <= 32768 else 64
+    bm = min(bm, _round_up(m, 8))
+    bk = 128 if k >= 128 else _round_up(k, 128)
+    mp = _round_up(m, bm)
+    kp = _round_up(k, bk)
+    if mp != m:
+        x2 = jnp.pad(x2, ((0, mp - m), (0, 0)))
+        s2 = jnp.pad(s2, ((0, mp - m), (0, 0)))
+    wp2 = jnp.pad(wp, ((0, 0), (0, kp - k))) if kp != k else wp
+    ws = jnp.asarray(w_scale, jnp.float32).reshape(1, 1)
+
+    out = ternary_matmul_kernel(
+        x2, s2, wp2, ws, bm=bm, bk=bk, out_dtype=out_dtype, interpret=interpret
+    )
+    return out[:m, :k].reshape(*lead, k)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the packed ternary matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.packing import unpack2
+from ...core.ternary import ternary_matmul_ref
+
+
+def ternary_matmul(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32):
+    """x_i8 [M, N] int8, x_scale [M, 1] f32, wp uint8 [N/4, K] (planar pack2),
+    w_scale scalar f32 -> [M, K] out_dtype.
+    """
+    w_t = unpack2(wp)
+    return ternary_matmul_ref(x_i8, x_scale, w_t, w_scale, out_dtype=out_dtype)

@@ -1,0 +1,99 @@
+"""Pallas kernel: faithful TeLLMe Algorithm-1 table-lookup ternary GEMV.
+
+This is the *faithful* port of the paper's TL-based matmul (G-trit group
+indices, 3^G-entry tables built online from the activations, lookup +
+accumulate), kept as an oracle/ablation against the production
+``ternary_matmul`` kernel — DESIGN.md §2 explains why lookups lose to the MXU
+on TPU while being the right call in FPGA LUT-RAM.
+
+Stage structure inside one grid step (grid = (K/bk,), decode GEMV m=1..bm):
+
+  1. table build — the paper's "precompute unit" of 3^G adder/subtractor
+     combinations is literally the matmul  A_groups [bm·T, G] @ COMBOS [G, 3^G]
+     (T = N/G tables, all built in one MXU call);
+  2. lookup-accumulate — TL_TABLE[t, W_idx[t, k]] summed over t, expressed as
+     a one-hot contraction so it also lands on the MXU rather than a VPU
+     gather (the TPU replacement for URAM multi-port reads).
+
+VMEM: tables [T, 3^G] f32 (e.g. N=4096, G=3 -> 1366×27×4 ≈ 147 KiB),
+w_idx block [T, bk] int32, out [bm, bk].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, xs_ref, widx_ref, ws_ref, combos_ref, o_ref, *, g: int):
+    bm, n = x_ref.shape
+    t = n // g
+    bk = widx_ref.shape[1]
+    # --- stage 1: build all T tables at once (paper: T parallel LUT banks) ---
+    a_groups = x_ref[...].reshape(bm * t, g).astype(jnp.float32)
+    tables = jax.lax.dot_general(
+        a_groups, combos_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(bm, t, 3**g)
+    # --- stage 2: lookup-accumulate (one-hot -> MXU) --------------------------
+    idx = widx_ref[...]  # [T, bk]
+    onehot = (idx[:, :, None] == jnp.arange(3**g, dtype=jnp.int32)[None, None, :]).astype(
+        jnp.float32
+    )  # [T, bk, 3^g]
+    # out[m, k] = sum_t sum_c tables[m, t, c] * onehot[t, k, c]
+    acc = jax.lax.dot_general(
+        tables.reshape(bm, t * 3**g),
+        onehot.transpose(0, 2, 1).reshape(t * 3**g, bk),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = acc * xs_ref[...] * ws_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("g", "bk", "interpret"))
+def tl_gemv_kernel(
+    x_i8: jax.Array,  # [M, N] int8 (M small; decode GEMV)
+    x_scale: jax.Array,  # [M, 1] f32
+    w_idx: jax.Array,  # [N/g, K] int32 group indices
+    w_scale: jax.Array,  # [1, 1] f32
+    *,
+    g: int = 3,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    m, n = x_i8.shape
+    t, k = w_idx.shape
+    assert t * g == n and k % bk == 0
+    combos = _combo_const(g)
+    return pl.pallas_call(
+        functools.partial(_kernel, g=g),
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda j: (0, 0)),
+            pl.BlockSpec((m, 1), lambda j: (0, 0)),
+            pl.BlockSpec((t, bk), lambda j: (0, j)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+            pl.BlockSpec((g, 3**g), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=interpret,
+    )(x_i8, x_scale, w_idx, w_scale, combos)
+
+
+@functools.lru_cache(maxsize=None)
+def _combo_const(g: int):
+    # numpy (not jnp): a cached jnp array created under a jit trace would
+    # leak a tracer; numpy constants are safe at any trace depth.
+    import numpy as np
+
+    cols = np.arange(3**g)
+    digits = []
+    rem = cols
+    for _ in range(g):
+        digits.append((rem % 3) - 1)
+        rem = rem // 3
+    return np.stack(digits, axis=0).astype(np.float32)  # [g, 3^g]

@@ -1,0 +1,11 @@
+"""Oracle for the faithful table-lookup GEMV kernel = core.tl_matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.tl_matmul import tl_matmul as _tl
+
+
+def tl_gemv(x_i8, x_scale, w_idx, w_scale, *, g: int = 3, out_dtype=jnp.float32):
+    return _tl(x_i8, x_scale, w_idx, w_scale, g=g, out_dtype=out_dtype)

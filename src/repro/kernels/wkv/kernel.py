@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV recurrence, VMEM-resident decay.
+
+The §Perf analysis of the worst roofline cell (rwkv6-3b × train_4k,
+EXPERIMENTS.md) showed the XLA chunked-WKV path is memory-bound on the
+O(C²·n) intra-chunk decay tensor, which XLA must materialize in HBM every
+chunk (recomputed again in the backward after A1). This kernel is the
+TeLLMe-style fusion answer for the attention-free mixer: the decay tensor
+(C=64: 64·64·64·4 B = 1 MiB) lives only in VMEM, and HBM traffic per chunk
+drops to the r/k/v/w blocks + the [n, n] state — the same
+keep-the-intermediate-on-chip move as the paper's fused prefill attention
+(C2) applied to the WKV recurrence.
+
+Grid: (B·H, S/C) — chunks iterate fastest; the [n, n] state persists in
+VMEM scratch across chunk steps and resets at chunk 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sN_ref, state_ref,
+            *, chunk: int, n: int, nc: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    rc = r_ref[0].astype(jnp.float32)  # [C, n]
+    kc = k_ref[0].astype(jnp.float32)
+    vc = v_ref[0].astype(jnp.float32)
+    wc = w_ref[0].astype(jnp.float32)  # log-decay, negative
+    u = u_ref[0].astype(jnp.float32)  # [n]
+
+    lc = jnp.cumsum(wc, axis=0)  # inclusive cum-log-decay
+    e = lc - wc  # exclusive
+    state = state_ref[...]
+
+    # intra-chunk: A[t,s] = Σ_i r_t[i] k_s[i] exp(e_t[i] - lc_s[i]) (s < t)
+    # dec lives only in VMEM — never touches HBM (the point of this kernel).
+    dec = jnp.exp(e[:, None, :] - lc[None, :, :])  # [C, C, n], ratios ≤ 1
+    amat = jnp.sum(rc[:, None, :] * kc[None, :, :] * dec, axis=-1)  # [C, C]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    amat = jnp.where(tri, amat, 0.0)
+    diag = jnp.sum(rc * kc * u[None, :], axis=-1)  # [C]
+
+    y = jax.lax.dot_general(amat, vc, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + diag[:, None] * vc
+    y = y + jax.lax.dot_general(rc * jnp.exp(e), state, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    # state update: S' = diag(exp(lc_last)) S + Σ_s exp(lc_last - lc_s) k_s v_sᵀ
+    last = lc[-1]  # [n]
+    kdec = kc * jnp.exp(last[None, :] - lc)  # [C, n]
+    state = jnp.exp(last)[:, None] * state + jax.lax.dot_general(
+        kdec, vc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    state_ref[...] = state
+
+    @pl.when(c == nc - 1)
+    def _emit_state():
+        sN_ref[0] = state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_kernel(
+    r: jax.Array,  # [BH, S, n]
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: jax.Array,  # [BH, n] (pre-expanded per head)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    bh, s, n = r.shape
+    assert s % chunk == 0
+    nc = s // chunk
+    kern = functools.partial(_kernel, chunk=chunk, n=n, nc=nc)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, n), lambda b, c: (b, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, n, n), lambda b, c: (b, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bh, s, n), jnp.float32),
+            jax.ShapeDtypeStruct((bh, n, n), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

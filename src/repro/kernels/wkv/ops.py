@@ -1,0 +1,32 @@
+"""Jitted wrapper for the WKV chunk kernel.
+
+Note: carries state **from zero** (the training/prefill-from-scratch case,
+which is the §Perf cell this kernel targets). A warm incoming state would be
+threaded through an extra input block; the jnp path (models/rwkv.py) remains
+the general-state implementation and the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv_kernel
+
+
+def wkv(r, k, v, logw, u, *, chunk: int = 64, interpret=None):
+    """r/k/v/logw [B, H, S, n], u [H, n] -> (y [B,H,S,n] f32, sN [B,H,n,n])."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, s, n = r.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+
+    def flat(t):
+        return t.reshape(b * h, s, n)
+
+    u_full = jnp.broadcast_to(u[None], (b, h, n)).reshape(b * h, n)
+    y, sN = wkv_kernel(flat(r), flat(k), flat(v), flat(logw), u_full,
+                       chunk=chunk, interpret=interpret)
+    return y.reshape(b, h, s, n), sN.reshape(b, h, n, n)

@@ -1,0 +1,10 @@
+"""Oracle for the WKV kernel = the validated jnp chunked form."""
+
+from __future__ import annotations
+
+from ...models.rwkv import _wkv_chunked
+
+
+def wkv(r, k, v, logw, u, s0, *, chunk: int = 64):
+    """r/k/v/logw [B, H, S, n], u [H, n], s0 [B, H, n, n] -> (y, sN)."""
+    return _wkv_chunked(r, k, v, logw, u, s0, chunk=chunk)

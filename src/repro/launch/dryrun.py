@@ -1,0 +1,314 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, proving the distribution config is coherent without real hardware.
+
+For each cell this driver:
+  1. builds abstract params / optimizer state / batch / caches
+     (ShapeDtypeStruct — no allocation),
+  2. jits the step (train_step / prefill_step / serve_step) with explicit
+     in/out shardings on the requested mesh,
+  3. ``.lower().compile()`` — sharding mismatches, compile-time OOM or
+     unsupported collectives fail here,
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     (parsed from the optimized HLO) for EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Collective-bytes extraction from optimized HLO
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?"
+    r"((?:[a-z0-9-]+)?(?:f16|bf16|f32|f64|s8|u8|s16|s32|u32|s64|pred)\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f16": 2, "bf16": 2, "s16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|f16|bf16|s16|f32|s32|u32|f64|s64)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the optimized HLO."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        out[op] = out.get(op, 0) + b
+        count[op] = count.get(op, 0) + 1
+    return {"bytes_by_op": out, "count_by_op": count, "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+               serve_mode: str = "packed"):
+    """Returns (step_fn, in_shardings, abstract_args) for one dry-run cell."""
+    from ..configs import SHAPES, get_config, get_parallel_config
+    from ..core import params as P
+    from ..models import transformer as Tr
+    from ..optim import adamw
+    from ..parallel import param_shardings, resolve_pspec, set_global_mesh
+    from ..parallel.sharding import make_rules, shardings_like
+    from ..serving import engine as E
+    from ..train import step as TS
+
+    cfg = get_config(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    pcfg = get_parallel_config(arch, shape_name) if not smoke else None
+    if pcfg is None:
+        from ..configs.base import default_parallel
+
+        pcfg = default_parallel(cfg, shape)
+    rules = make_rules(fsdp_pod=pcfg.fsdp_pod, seq_shard=pcfg.seq_shard)
+    set_global_mesh(mesh, rules)
+
+    batch = shape.global_batch
+    seq = shape.seq_len
+
+    if shape.mode == "train":
+        opt_cfg = adamw.AdamWConfig(
+            state_dtype=jnp.bfloat16 if pcfg.opt_state_dtype == "bfloat16" else jnp.float32
+        )
+        step_fn = TS.make_train_step(cfg, pcfg, opt_cfg)
+        specs = Tr.param_specs(cfg)
+        p_abs = P.abstract_params(specs)
+        p_shard = param_shardings(specs, mesh, rules)
+        o_abs = TS.abstract_opt_state(p_abs, opt_cfg)
+        o_shard = {"mu": p_shard, "nu": p_shard, "step": NamedSharding(mesh, PartitionSpec())}
+        b_abs = TS.batch_specs(cfg, batch, seq)
+        b_axes = TS.batch_axes(cfg)
+        b_shard = {
+            k: NamedSharding(mesh, resolve_pspec(v.shape, b_axes[k], rules, mesh))
+            for k, v in b_abs.items()
+        }
+        # donate params + optimizer state (in-place update, halves peak HBM)
+        return step_fn, (p_shard, o_shard, b_shard), (p_abs, o_abs, b_abs), cfg, pcfg, (0, 1)
+
+    # Serving cells use packed ternary params, TP-only sharding: weights
+    # stay resident per model shard (no FSDP all-gather on the decode path —
+    # the whole point of 2-bit weights is that a shard fits on chip).
+    rules = make_rules(fsdp_pod=pcfg.fsdp_pod, seq_shard=pcfg.seq_shard,
+                       extra={"embed": ()})
+    set_global_mesh(mesh, rules)
+    specs = Tr.packed_param_specs(cfg)
+    p_abs = P.abstract_params(specs)
+    p_shard = param_shardings(specs, mesh, rules)
+
+    if shape.mode == "prefill":
+        step_fn = E.make_prefill_step(cfg, mode=serve_mode)
+        b_abs = TS.batch_specs(cfg, batch, seq)
+        del b_abs["labels"]
+        b_axes = TS.batch_axes(cfg)
+        b_shard = {
+            k: NamedSharding(mesh, resolve_pspec(v.shape, b_axes[k], rules, mesh))
+            for k, v in b_abs.items()
+        }
+        return step_fn, (p_shard, b_shard), (p_abs, b_abs), cfg, pcfg, ()
+
+    # decode: one new token against a seq-length cache
+    step_fn = E.make_serve_step(cfg, mode=serve_mode)
+    cache_abs, cache_axes = Tr.cache_specs(cfg, batch, seq, dtype=cfg.dtype)
+    c_shard = shardings_like(cache_abs, cache_axes, mesh, rules)
+    tok_abs = TS.batch_specs(cfg, batch, 1)
+    del tok_abs["labels"]
+    b_axes = TS.batch_axes(cfg)
+    b_shard = {
+        k: NamedSharding(mesh, resolve_pspec(v.shape, b_axes[k], rules, mesh))
+        for k, v in tok_abs.items()
+    }
+    # scalar position: synchronized decode (all sequences at seq_len-1) —
+    # slice-sized cache updates that shard cleanly (models/attention.py)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, PartitionSpec())
+    return (
+        step_fn,
+        (p_shard, b_shard, c_shard, pos_shard),
+        (p_abs, tok_abs, cache_abs, pos_abs),
+        cfg,
+        pcfg,
+        (2,),  # donate the KV caches (updated in place each step)
+    )
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    from ..configs import get_config
+
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "full-attention stack: 524k dense decode cache is quadratic-cost; "
+            "skipped per shape spec (DESIGN.md §5)"
+        )
+    return None
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False, smoke: bool = False,
+             serve_mode: str = "packed", verbose: bool = True) -> dict:
+    from .mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    step_fn, in_sh, abstract, cfg, pcfg, donate = build_cell(
+        arch, shape_name, mesh, smoke=smoke, serve_mode=serve_mode)
+
+    with mesh:
+        lowered = jax.jit(step_fn, in_shardings=in_sh, donate_argnums=donate).lower(*abstract)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    from ..analysis import hlo_cost, roofline
+    from ..configs import SHAPES, get_config
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    walk = hlo_cost.analyze(compiled.as_text())
+    chips = 512 if multi_pod else 256
+    rl = roofline.terms(walk.dot_flops, walk.hbm_bytes, walk.collective_bytes)
+    mf = roofline.model_flops(get_config(arch, smoke=smoke), SHAPES[shape_name], chips=chips)
+    useful = mf["model_flops_per_device"] / walk.dot_flops if walk.dot_flops else 0.0
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": walk.dot_flops,
+        "hbm_bytes_per_device": walk.hbm_bytes,
+        "collective_bytes_per_device": walk.collective_bytes,
+        "collectives": {"bytes_by_op": walk.coll_by_op, "count_by_op": walk.coll_count},
+        "xla_flops_body_once": xla_cost.get("flops", 0.0),
+        "roofline": rl.as_dict(),
+        "model_flops": mf,
+        "useful_flop_ratio": useful,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "microbatches": pcfg.microbatches,
+        "remat": pcfg.remat,
+        "fsdp_pod": pcfg.fsdp_pod,
+        "seq_shard": pcfg.seq_shard,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: OK "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        print(f"  flops/dev={walk.dot_flops:.3e} hbm/dev={walk.hbm_bytes:.3e} "
+              f"coll/dev={walk.collective_bytes:.3e}")
+        print(f"  roofline: compute={rl.compute_s*1e3:.1f}ms memory={rl.memory_s*1e3:.1f}ms "
+              f"collective={rl.collective_s*1e3:.1f}ms -> {rl.dominant}-bound; "
+              f"useful={useful:.2f}")
+        print(f"  memory: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB")
+    return rec
+
+
+ALL_ARCHS = [
+    "musicgen-medium", "internvl2-26b", "deepseek-v2-lite-16b", "arctic-480b",
+    "granite-8b", "llama3-405b", "gemma2-27b", "internlm2-20b",
+    "jamba-v0.1-52b", "rwkv6-3b",
+]
+ALL_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ALL_ARCHS:
+            for s in ALL_SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+    for arch, shape in cells:
+        reason = skip_reason(arch, shape)
+        if reason:
+            for mp in meshes:
+                records.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": "skipped", "reason": reason})
+            print(f"[dryrun] {arch} × {shape}: SKIP ({reason})")
+            continue
+        for mp in meshes:
+            try:
+                records.append(run_cell(arch, shape, multi_pod=mp, smoke=args.smoke))
+            except Exception as e:  # noqa: BLE001 — report and continue the sweep
+                records.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": "error", "error": f"{type(e).__name__}: {e}"})
+                print(f"[dryrun] {arch} × {shape} ({'2x16x16' if mp else '16x16'}): "
+                      f"FAIL {type(e).__name__}: {e}", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[dryrun] wrote {args.json}")
+    bad = [r for r in records if r["status"] == "error"]
+    print(f"[dryrun] {sum(r['status']=='ok' for r in records)} ok, "
+          f"{sum(r['status']=='skipped' for r in records)} skipped, {len(bad)} failed")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,88 @@
+"""Serving launcher: packed-ternary batched inference (prefill + decode).
+
+Converts trained (or randomly-initialized) float params into the 2-bit
+packed serving form, then runs the continuous-batching engine over a set of
+prompts, reporting prefill latency and decode throughput — the paper's
+Fig. 9 metrics, on CPU at smoke scale.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch tellme-0.7b --smoke \
+      --prompt-len 64 --gen 32 --batch 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..core import params as P
+from ..models import transformer as Tr
+from ..serving import engine as E
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tellme-0.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mode", default="packed", choices=["packed", "eval", "wq"])
+    ap.add_argument("--ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    specs = Tr.param_specs(cfg)
+    params = P.init_params(specs, jax.random.PRNGKey(0))
+    if args.ckpt:
+        from ..checkpoint import CheckpointManager
+
+        ckpt = CheckpointManager(args.ckpt)
+        trees, _ = ckpt.restore(ckpt.latest_step())
+        params = trees["params"]
+    serve_params = Tr.pack_tree(params, specs) if args.mode == "packed" else params
+    if args.mode == "packed":
+        fb = P.param_bytes(specs)
+        pb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(serve_params))
+        print(f"[serve] packed weights: {pb/2**20:.1f} MiB "
+              f"(float master {fb/2**20:.1f} MiB, {fb/pb:.1f}x compression)")
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    prefill = jax.jit(E.make_prefill_step(cfg, mode=args.mode))
+    serve = jax.jit(E.make_serve_step(cfg, mode=args.mode))
+
+    t0 = time.time()
+    last, caches = prefill(serve_params, {"tokens": prompts})
+    jax.block_until_ready(last)
+    t_prefill = time.time() - t0
+    caches = E.grow_caches(caches, cfg, args.prompt_len + args.gen)
+
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    out = [tok]
+    t1 = time.time()
+    for t in range(args.gen - 1):
+        pos = jnp.int32(args.prompt_len + t)
+        logits, caches = serve(serve_params, {"tokens": tok[:, None]}, caches, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t1
+
+    toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"[serve] prefill({args.prompt_len} tok x {args.batch}): {t_prefill*1e3:.1f} ms "
+          f"(incl. compile)")
+    print(f"[serve] decode: {args.gen-1} steps x {args.batch} seqs -> "
+          f"{toks_per_s:.1f} tok/s")
+    gen = jnp.stack(out, axis=1)
+    print(f"[serve] sample generated ids[0,:16]: {gen[0,:16].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

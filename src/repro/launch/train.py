@@ -1,0 +1,121 @@
+"""Training launcher: end-to-end QAT training of a ternary LM.
+
+Wires together configs → mesh → sharded train_step → data pipeline →
+checkpoint/restart → fault-tolerance runtime. On the CPU container this
+runs reduced (smoke) configs end-to-end; on TPU the same entry point takes
+the full configs (the dry-run proves those lower/compile).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch tellme-0.7b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..checkpoint import CheckpointManager
+from ..configs import SHAPES, get_config
+from ..configs.base import ShapeConfig, default_parallel
+from ..core import params as P
+from ..data import DataPipeline
+from ..models import transformer as Tr
+from ..optim import adamw
+from ..parallel import param_shardings, resolve_pspec, set_global_mesh
+from ..parallel.sharding import make_rules
+from ..runtime import PreemptionHandler, StragglerMonitor, run_train_loop
+from ..train import step as TS
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def build_trainer(cfg, pcfg, mesh, *, seq_len: int, global_batch: int,
+                  opt_cfg: adamw.AdamWConfig, compress: str = "none"):
+    rules = make_rules(fsdp_pod=pcfg.fsdp_pod, seq_shard=pcfg.seq_shard)
+    set_global_mesh(mesh, rules)
+    specs = Tr.param_specs(cfg)
+    p_shard = param_shardings(specs, mesh, rules)
+    o_shard = {"mu": p_shard, "nu": p_shard, "step": NamedSharding(mesh, PartitionSpec())}
+    b_axes = TS.batch_axes(cfg)
+    b_shard = {
+        k: NamedSharding(mesh, resolve_pspec(v.shape, b_axes[k], rules, mesh))
+        for k, v in TS.batch_specs(cfg, global_batch, seq_len).items()
+    }
+    step_fn = jax.jit(
+        TS.make_train_step(cfg, pcfg, opt_cfg, compress=compress),
+        in_shardings=(p_shard, o_shard, b_shard),
+        donate_argnums=(0, 1),
+    )
+    with mesh:
+        params = jax.device_put(
+            P.init_params(specs, jax.random.PRNGKey(0)), p_shard
+        )
+        opt_state = jax.device_put(adamw.init_state(params, opt_cfg), o_shard)
+    return step_fn, params, opt_state, p_shard, o_shard
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tellme-0.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--compress", default="none", choices=["none", "bf16"])
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    pcfg = default_parallel(cfg, shape)
+    if args.smoke:
+        pcfg = type(pcfg)(microbatches=1, remat="none", scan_layers=True)
+    mesh = make_production_mesh() if args.production_mesh else make_local_mesh()
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                                total_steps=args.steps)
+
+    step_fn, params, opt_state, p_shard, o_shard = build_trainer(
+        cfg, pcfg, mesh, seq_len=args.seq_len, global_batch=args.global_batch,
+        opt_cfg=opt_cfg, compress=args.compress,
+    )
+    pipeline = DataPipeline(cfg.vocab_size, args.seq_len, args.global_batch)
+    ckpt = CheckpointManager(args.ckpt_dir)
+
+    start_step = 0
+    if args.resume and ckpt.latest_step() is not None:
+        s = ckpt.latest_step()
+        trees, extra = ckpt.restore(s, shardings={"params": p_shard, "opt": o_shard})
+        params, opt_state = trees["params"], trees["opt"]
+        pipeline.restore(extra["pipeline"])
+        start_step = extra["step"]
+        print(f"[train] resumed from step {start_step}")
+
+    t0 = time.time()
+    report = run_train_loop(
+        train_step=step_fn, params=params, opt_state=opt_state,
+        pipeline=pipeline, ckpt=ckpt, total_steps=args.steps,
+        start_step=start_step, checkpoint_every=args.ckpt_every,
+        preemption=PreemptionHandler(), monitor=StragglerMonitor(),
+        step_hook=lambda s, m: print(
+            f"[train] step {s} loss {float(m['loss']):.4f} "
+            f"gnorm {float(m['grad_norm']):.2f} lr {float(m['lr']):.2e}"
+        ) if s % 10 == 0 or s <= 3 else None,
+    )
+    dt = time.time() - t0
+    print(f"[train] {report.steps_done} steps in {dt:.1f}s "
+          f"({dt / max(report.steps_done, 1):.2f}s/step); "
+          f"loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f}; "
+          f"stragglers={report.straggler['straggler_events']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

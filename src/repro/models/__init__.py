@@ -1,0 +1,2 @@
+"""Model zoo."""
+from . import attention, layers, mamba, mla, moe, rwkv, transformer  # noqa: F401

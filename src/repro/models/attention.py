@@ -1,0 +1,202 @@
+"""Attention execution paths (XLA forms; the Pallas kernel is the TPU twin).
+
+Two phases, specialized exactly as the paper argues (§III-B/C):
+
+* ``prefill_attention`` — fused causal attention with the *reverse-attention*
+  work saving: only the lower-triangular half of the attention map is ever
+  computed. XLA form: a static (python) loop over q chunks, each contracting
+  only against its causal kv prefix, with an online-softmax ``lax.scan`` over
+  kv blocks so the [S, S] score matrix never materializes. Compiled FLOPs
+  therefore scale as N²/2 + N·bkv/2, which the roofline extraction sees —
+  this is the paper's Table II saving, visible in ``cost_analysis()``.
+  On real TPU the Pallas kernel (kernels/flash_attention) implements the same
+  schedule; this XLA twin is what the multi-pod dry-run lowers.
+
+* ``decode_attention`` — the paper's decoupled score → softmax → aggregate
+  path: a [1, M] score vector is cheap to keep "on chip", so no fusion
+  machinery is needed; the phase is memory-bound on the KV-cache stream.
+
+GQA is computed in grouped form (no kv repetition: q reshaped to
+[B, HK, G, S, D]); sliding windows (gemma2 local layers) restrict each chunk
+to its window slice, giving O(N·W) work.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import constrain
+
+_NEG = -1e30
+
+
+def _chunk_attend(q, k, v, q_start, k_start, *, scale, softcap, window, dtype):
+    """One (q chunk × kv block) online-softmax partial: returns (m, l, o).
+
+    q [B, H, C, D]; k/v [B, H, bkv, D] (kv already repeated to full heads —
+    the repeat is a per-shard broadcast under the head-sharded TP layout).
+    """
+    s = jnp.einsum("bhqd,bhpd->bhqp", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = q_start + jnp.arange(q.shape[2])[:, None]
+    kpos = k_start + jnp.arange(k.shape[2])[None, :]
+    mask = qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, _NEG)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bhqp,bhpd->bhqd", p.astype(dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def prefill_attention(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, HK, S, D]
+    v: jax.Array,  # [B, HK, S, D]
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    q_chunks: int = 4,
+    kv_block: int | None = None,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    hk = k.shape[1]
+    dv = v.shape[-1]
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    # TP layout: q stays sharded on full heads; kv (few heads, often not
+    # divisible by the model axis) is repeated to full heads per kv *block*
+    # inside the scan — a per-shard broadcast, so each device only
+    # materializes its own head slice of one block.
+    q = constrain(q, "act_batch", "act_heads", None, None)
+
+    if s % q_chunks:
+        q_chunks = 1
+    c = s // q_chunks
+    bkv = kv_block or c
+    outs = []
+    for i in range(q_chunks):
+        qi = q[:, :, i * c : (i + 1) * c]
+        # causal prefix for this chunk (static slice — the Table II saving)
+        hi = (i + 1) * c
+        lo = 0
+        if window > 0:
+            lo = max(0, hi - (window + c - 1))
+            lo = (lo // bkv) * bkv  # align to block
+        kp = k[:, :, lo:hi]
+        vp = v[:, :, lo:hi]
+        plen = hi - lo
+        if plen % bkv:
+            pad = bkv - plen % bkv
+            kp = jnp.pad(kp, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vp = jnp.pad(vp, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            plen += pad
+        nblk = plen // bkv
+        kb = kp.reshape(b, hk, nblk, bkv, d).transpose(2, 0, 1, 3, 4)
+        vb = vp.reshape(b, hk, nblk, bkv, dv).transpose(2, 0, 1, 3, 4)
+
+        def step(carry, kv, qi=qi, i=i, lo=lo, c=c, bkv=bkv):
+            m_prev, l_prev, o_prev, jblk = carry
+            kj, vj = kv
+            if g > 1:
+                kj = jnp.repeat(kj, g, axis=1)
+                vj = jnp.repeat(vj, g, axis=1)
+            kj = constrain(kj, "act_batch", "act_heads", None, None)
+            vj = constrain(vj, "act_batch", "act_heads", None, None)
+            mj, lj, oj = _chunk_attend(
+                qi, kj, vj, i * c, lo + jblk * bkv,
+                scale=scale, softcap=softcap, window=window, dtype=q.dtype,
+            )
+            m_new = jnp.maximum(m_prev, mj)
+            a_prev = jnp.exp(m_prev - m_new)
+            a_j = jnp.exp(mj - m_new)
+            l_new = l_prev * a_prev + lj * a_j
+            o_new = o_prev * a_prev[..., None] + oj * a_j[..., None]
+            return (m_new, l_new, o_new, jblk + 1), None
+
+        init = (
+            jnp.full((b, h, c), _NEG, jnp.float32),
+            jnp.zeros((b, h, c), jnp.float32),
+            jnp.zeros((b, h, c, dv), jnp.float32),
+            jnp.int32(0),
+        )
+        (m, l, o, _), _ = jax.lax.scan(step, init, (kb, vb))
+        outs.append((o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype))
+    out = jnp.concatenate(outs, axis=2)  # [B, H, S, Dv]
+    return out
+
+
+def decode_attention(
+    q: jax.Array,  # [B, H, D] — the single new token (paper C4 decoupled path)
+    k_cache: jax.Array,  # [B, HK, M, D]
+    v_cache: jax.Array,  # [B, HK, M, D]
+    pos: jax.Array,  # [B] current position (attend to <= pos)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    b, h, d = q.shape
+    hk, m = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    qg = q.reshape(b, hk, g, d)
+    # (1) attention scores — matrix-vector over the cached keys.
+    # (§Perf C1 — computing the score dot in cache dtype — was tried to kill
+    # the backend's f32 ghost of the stacked KV cache and *refuted*: the CPU
+    # backend promotes bf16 dots either way, and the bf16-dot form regressed
+    # musicgen decode 1.5×. Reverted; see EXPERIMENTS.md §Perf cell 3.)
+    s = jnp.einsum("bkgd,bkpd->bkgp", qg, k_cache, preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(m)[None, :]
+    mask = kpos <= pos[:, None]
+    if window > 0:
+        mask &= (pos[:, None] - kpos) < window
+    s = jnp.where(mask[:, None, None], s, _NEG)
+    # (2) softmax on the [1, M] score vector
+    p = jax.nn.softmax(s, axis=-1)
+    # (3) value aggregation
+    o = jnp.einsum("bkgp,bkpd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, h, d)
+
+
+def update_kv_cache(k_cache, v_cache, k_new, v_new, pos):
+    """Write the new token's K/V at ``pos``. k_new [B, HK, D].
+
+    Two forms:
+    * scalar ``pos`` (synchronized decode, the decode_* dry-run shapes):
+      ``dynamic_update_slice`` on the seq axis — slice-sized traffic, shards
+      cleanly under GSPMD;
+    * per-batch ``pos [B]`` (continuous batching, heterogeneous slots):
+      one-hot masked write — full-cache elementwise, but sharding-safe.
+      A per-batch *scatter* is never used: dynamic scatter indices defeat
+      GSPMD sharding of the cache (it would all-gather it per layer).
+    """
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_new[:, :, None, :].astype(k_cache.dtype), pos, axis=2
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_new[:, :, None, :].astype(v_cache.dtype), pos, axis=2
+        )
+        return k_cache, v_cache
+    m = k_cache.shape[2]
+    oh = (jnp.arange(m)[None, :] == pos[:, None]).astype(k_cache.dtype)  # [B, M]
+    ohk = oh[:, None, :, None]
+    k_cache = k_cache * (1 - ohk) + k_new[:, :, None, :].astype(k_cache.dtype) * ohk
+    v_cache = v_cache * (1 - ohk) + v_new[:, :, None, :].astype(v_cache.dtype) * ohk
+    return k_cache, v_cache

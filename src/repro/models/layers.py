@@ -1,0 +1,119 @@
+"""Shared model layers: norms, RoPE, embeddings, SwiGLU MLP (all BitLinear).
+
+The quantization pipeline mirrors TeLLMe Fig. 1: RMSNorm → absmax int8 quant →
+ternary Linear → (dequant fused) → SiLU fused after the gate projection.
+On the training path the same pipeline runs as differentiable fake-quant; on
+the serving path ``mode="packed"`` consumes 2-bit packed weights.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import bitlinear
+from ..core.params import ParamSpec
+from ..parallel import constrain
+
+# ---------------------------------------------------------------------------
+# RMSNorm (paper C3: fused with absmax quant on the hardware path)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(dim: int) -> dict:
+    return {"gamma": ParamSpec((dim,), (None,), init="ones")}
+
+
+def rmsnorm(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * params["gamma"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """x [..., S, D] (D even), positions [..., S] -> rotated x."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1 = x[..., : d // 2].astype(jnp.float32)
+    x2 = x[..., d // 2 :].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head (kept high-precision, per BitNet-1.58 practice)
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(vocab: int, dim: int) -> dict:
+    return {"table": ParamSpec((vocab, dim), ("vocab", "embed"), init="embed", scale=0.02)}
+
+
+def embed(params: dict, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def lm_head_spec(dim: int, vocab: int) -> dict:
+    return bitlinear.dense_spec(dim, vocab, ("embed", "vocab"))
+
+
+def lm_head(params: dict, x: jax.Array, *, softcap: float = 0.0) -> jax.Array:
+    logits = bitlinear.dense_apply(params, x, out_dtype=jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP on BitLinear (gate/up/down ternary; SiLU fused after gate)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(dim: int, hidden: int) -> dict:
+    return {
+        "gate": bitlinear.spec(dim, hidden, ("embed", "mlp")),
+        "up": bitlinear.spec(dim, hidden, ("embed", "mlp")),
+        "down": bitlinear.spec(hidden, dim, ("mlp", "embed")),
+    }
+
+
+def mlp(params: dict, x: jax.Array, *, mode: str = "train") -> jax.Array:
+    g = bitlinear.apply(params["gate"], x, mode=mode)
+    u = bitlinear.apply(params["up"], x, mode=mode)
+    h = jax.nn.silu(g) * u  # SiLU fused into the gate matmul epilogue on HW
+    h = constrain(h, "act_batch", None, "act_mlp")
+    return bitlinear.apply(params["down"], h, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy (vocab-sharded logits friendly)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, *, ignore_id: int = -1):
+    """logits [B, S, V] f32, labels [B, S] int32 -> mean NLL over valid tokens."""
+    valid = labels != ignore_id
+    labels_safe = jnp.where(valid, labels, 0)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    picked = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def softcap_logits(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x

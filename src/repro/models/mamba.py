@@ -1,0 +1,166 @@
+"""Mamba selective-SSM layer (Jamba's attention-free block), BitLinear proj.
+
+Prefill/training uses a *chunked* parallel scan: ``lax.scan`` over sequence
+chunks carrying the [B, d_inner, d_state] state, with an associative scan
+inside each chunk — O(S) work, O(chunk · d_inner · d_state) live memory (the
+sub-quadratic path that makes jamba's ``long_500k`` cell runnable).
+Decode is the O(1) single-step recurrence.
+
+TeLLMe applicability: the in/x/dt/out projections are ternary BitLinear
+(C1/C3); C2 (attention scheduling) is inapplicable by construction —
+recorded in DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import bitlinear
+from ..core.params import ParamSpec
+from ..parallel import constrain
+
+
+def mamba_spec(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dt_rank = max(d // 16, 8)
+    return {
+        "in_proj": bitlinear.spec(d, 2 * di, ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.mamba_d_conv, di), ("conv", "mlp"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("mlp",), init="zeros"),
+        "x_proj": bitlinear.spec(di, dt_rank + 2 * ds, ("mlp", None)),
+        "dt_proj": {"w": ParamSpec((dt_rank, di), (None, "mlp")),
+                    "b": ParamSpec((di,), ("mlp",), init="ones", scale=-4.6)},
+        "a_log": ParamSpec((di, ds), ("mlp", "state"), init="ones"),
+        "d_skip": ParamSpec((di,), ("mlp",), init="ones"),
+        "out_proj": bitlinear.spec(di, d, ("mlp", "embed")),
+    }
+
+
+def _ssm_inputs(params, x, cfg, *, mode):
+    """Shared projection pipeline -> (u, z, dt, B, C, u_raw) all [B, S, ...]."""
+    di = cfg.mamba_expand * cfg.d_model
+    ds = cfg.mamba_d_state
+    dt_rank = params["dt_proj"]["w"].shape[0]
+    xz = bitlinear.apply(params["in_proj"], x, mode=mode)
+    u_raw, z = xz[..., :di], xz[..., di:]
+    u_raw = constrain(u_raw, "act_batch", None, "act_mlp")
+    # depthwise causal conv over seq
+    u = _causal_conv(u_raw, params["conv_w"], params["conv_b"])
+    u = jax.nn.silu(u)
+    xdbc = bitlinear.apply(params["x_proj"], u, mode=mode)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", xdbc[..., :dt_rank], params["dt_proj"]["w"].astype(x.dtype))
+        + params["dt_proj"]["b"].astype(x.dtype)
+    )
+    bmat = xdbc[..., dt_rank : dt_rank + ds]
+    cmat = xdbc[..., dt_rank + ds :]
+    return u, z, dt, bmat, cmat, u_raw
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv1d: u [B, S, D], w [K, D]."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i : i + u.shape[1], :] * w[i].astype(u.dtype)
+    return out + b.astype(u.dtype)
+
+
+def _scan_chunk(a_c, bx_c):
+    """Associative scan within a chunk: h_t = a_t h_{t-1} + bx_t (leading dim
+    = time). Returns all h_t plus identity-prefixed products for state carry."""
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, b_l * a_r + b_r
+
+    return jax.lax.associative_scan(combine, (a_c, bx_c), axis=1)
+
+
+def mamba_prefill(params, x, cfg, *, mode="train", chunk: int = 256, state=None):
+    """x [B, S, d] -> (y [B, S, d], state {ssm [B,di,ds], conv [B,K-1,di]})."""
+    b, s, _ = x.shape
+    di = cfg.mamba_expand * cfg.d_model
+    ds = cfg.mamba_d_state
+    u, z, dt, bmat, cmat, u_raw = _ssm_inputs(params, x, cfg, mode=mode)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # [di, ds] (negative)
+
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n_chunks = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    u_c, dt_c, b_c, c_c = map(to_chunks, (u, dt, bmat, cmat))
+    h0 = jnp.zeros((b, di, ds), jnp.float32) if state is None else state
+
+    def step(h, inp):
+        u_i, dt_i, b_i, c_i = inp  # [B, C, ...]
+        dta = dt_i.astype(jnp.float32)[..., None] * a  # [B, C, di, ds]
+        a_i = jnp.exp(dta)
+        bx = (dt_i * u_i).astype(jnp.float32)[..., None] * b_i.astype(jnp.float32)[:, :, None, :]
+        # inject carried state through the cumulative decay products:
+        # h_t = (prod_{s<=t} a_s) · h_carry + assoc_scan(bx)_t
+        a_all, h_all = _scan_chunk(a_i, bx)
+        h_all = h_all + a_all * h[:, None]
+        y = jnp.einsum("bcds,bcs->bcd", h_all, c_i.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    hN, ys = jax.lax.scan(step, h0, (u_c, dt_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+    y = y + u * params["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "act_batch", None, "act_mlp")
+    out = bitlinear.apply(params["out_proj"], y, mode=mode)
+    k = cfg.mamba_d_conv
+    conv_tail = u_raw[:, -(k - 1) :] if s >= k - 1 else jnp.pad(
+        u_raw, ((0, 0), (k - 1 - s, 0), (0, 0))
+    )
+    return out, {"ssm": hN, "conv": conv_tail}
+
+
+def mamba_decode(params, x, cfg, state, *, mode="packed"):
+    """Single-token step. x [B, 1, d]; state dict {ssm [B,di,ds], conv [B,K-1,di]}."""
+    b = x.shape[0]
+    di = cfg.mamba_expand * cfg.d_model
+    ds = cfg.mamba_d_state
+    dt_rank = params["dt_proj"]["w"].shape[0]
+    xz = bitlinear.apply(params["in_proj"], x, mode=mode)
+    u, z = xz[..., :di], xz[..., di:]
+    # conv state: last K-1 inputs
+    k = params["conv_w"].shape[0]
+    conv_in = jnp.concatenate([state["conv"], u], axis=1)  # [B, K, di]
+    u = (conv_in * params["conv_w"].astype(u.dtype)[None]).sum(axis=1, keepdims=True)
+    u = jax.nn.silu(u + params["conv_b"].astype(u.dtype))
+    xdbc = bitlinear.apply(params["x_proj"], u, mode=mode)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", xdbc[..., :dt_rank], params["dt_proj"]["w"].astype(x.dtype))
+        + params["dt_proj"]["b"].astype(x.dtype)
+    )
+    bmat = xdbc[..., dt_rank : dt_rank + ds]
+    cmat = xdbc[..., dt_rank + ds :]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dta = dt[:, 0].astype(jnp.float32)[..., None] * a  # [B, di, ds]
+    h = state["ssm"] * jnp.exp(dta) + (dt[:, 0] * u[:, 0]).astype(jnp.float32)[..., None] * bmat[
+        :, 0
+    ].astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0].astype(jnp.float32))[:, None].astype(x.dtype)
+    y = y + u * params["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = bitlinear.apply(params["out_proj"], y, mode=mode)
+    return out, {"ssm": h, "conv": conv_in[:, 1:]}
+
+
+def mamba_init_state(cfg, batch: int) -> dict:
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), jnp.bfloat16),
+    }

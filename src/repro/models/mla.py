@@ -1,0 +1,131 @@
+"""Multi-head Latent Attention (DeepSeek-V2), BitLinear projections.
+
+MLA compresses the KV stream into a small latent (kv_lora_rank) plus a
+shared RoPE key — the KV cache stores [c_kv (512) + k_rope (64)] per token
+instead of 2·H·D. Projections (down/up/q/o) are all ternary BitLinear.
+
+Prefill uses the fused causal-skip attention on decompressed heads (TeLLMe C2
+applies unchanged — see DESIGN.md §5); decode caches the latent and
+decompresses per step (weight-absorption is a recorded §Perf candidate).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core import bitlinear
+from ..parallel import constrain
+from .attention import prefill_attention
+from .layers import apply_rope, rmsnorm, rmsnorm_spec
+
+
+def mla_spec(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "q_proj": bitlinear.spec(d, h * qk_head, ("embed", "heads")),
+        "kv_down": bitlinear.spec(d, cfg.kv_lora_rank + cfg.qk_rope_head_dim, ("embed", "kv_lora")),
+        "kv_norm": rmsnorm_spec(cfg.kv_lora_rank),
+        "k_up": bitlinear.spec(cfg.kv_lora_rank, h * cfg.qk_nope_head_dim, ("kv_lora", "heads")),
+        "v_up": bitlinear.spec(cfg.kv_lora_rank, h * cfg.v_head_dim, ("kv_lora", "heads")),
+        "o_proj": bitlinear.spec(h * cfg.v_head_dim, d, ("heads", "embed")),
+    }
+
+
+def _project_qkv(params, x, cfg, positions, mode):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = bitlinear.apply(params["q_proj"], x, mode=mode).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions[:, None], theta=cfg.rope_theta)
+    kv = bitlinear.apply(params["kv_down"], x, mode=mode)
+    c_kv = rmsnorm(params["kv_norm"], kv[..., : cfg.kv_lora_rank], eps=cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank :]  # [B, S, rope] shared across heads
+    k_rope = apply_rope(k_rope[:, None], positions[:, None], theta=cfg.rope_theta)
+    return q_nope.transpose(0, 2, 1, 3), q_rope, c_kv, k_rope[:, 0]
+
+
+def mla_prefill(params, x, cfg, positions, *, mode="train"):
+    """Returns (attn_out [B, S, d], cache dict with latent KV)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _project_qkv(params, x, cfg, positions, mode)
+    k_nope = bitlinear.apply(params["k_up"], c_kv, mode=mode)
+    k_nope = k_nope.reshape(b, s, h, cfg.qk_nope_head_dim).transpose(0, 2, 1, 3)
+    v = bitlinear.apply(params["v_up"], c_kv, mode=mode)
+    v = v.reshape(b, s, h, cfg.v_head_dim).transpose(0, 2, 1, 3)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, None], (b, h, s, cfg.qk_rope_head_dim))], axis=-1)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    # v_head_dim may differ from qk dims; pad v to qk dim not needed — attention
+    # contracts q·k and aggregates v independently.
+    out = prefill_attention(q, k, v, scale=scale)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * cfg.v_head_dim)
+    out = constrain(out, "act_batch", None, "act_heads")
+    proj = bitlinear.apply(params["o_proj"], out, mode=mode)
+    cache = {"c_kv": c_kv, "k_rope": k_rope}
+    return proj, cache
+
+
+def mla_decode(params, x, cfg, cache, pos, *, mode="packed"):
+    """x [B, 1, d] new token; cache {c_kv [B, M, R], k_rope [B, M, rope]}.
+
+    Decode runs *weight-absorbed*: instead of decompressing the latent cache
+    to per-head K/V (O(M·R·H·(nope+v)) per step), the k_up/v_up matrices are
+    absorbed into the query/context side so attention contracts directly
+    against the latent — O(H·M·R). This is the MLA analogue of the paper's
+    decoupled decode path: score -> softmax -> aggregate over a small
+    on-chip score vector (DESIGN.md §2, C4).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    r = cfg.kv_lora_rank
+    pos = jnp.asarray(pos)
+    pos_b = jnp.broadcast_to(pos, (b,))
+    positions = pos_b[:, None]
+    q_nope, q_rope, c_new, kr_new = _project_qkv(params, x, cfg, positions, mode)
+    m = cache["c_kv"].shape[1]
+    if pos.ndim == 0:
+        # synchronized decode: slice-sized in-place update, shards cleanly
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1
+        )
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1
+        )
+    else:
+        # continuous batching: one-hot masked write (sharding-safe; see
+        # attention.update_kv_cache for why scatter is avoided)
+        oh = (jnp.arange(m)[None, :] == pos_b[:, None]).astype(cache["c_kv"].dtype)[..., None]
+        c_kv = cache["c_kv"] * (1 - oh) + c_new[:, 0][:, None, :].astype(cache["c_kv"].dtype) * oh
+        k_rope = cache["k_rope"] * (1 - oh) + kr_new[:, 0][:, None, :].astype(
+            cache["k_rope"].dtype
+        ) * oh
+
+    w_kup = bitlinear.material_weight(params["k_up"], mode=mode, dtype=x.dtype)
+    w_vup = bitlinear.material_weight(params["v_up"], mode=mode, dtype=x.dtype)
+    w_kup = w_kup.reshape(r, h, cfg.qk_nope_head_dim)
+    w_vup = w_vup.reshape(r, h, cfg.v_head_dim)
+
+    # (0) absorb: q_abs[h] = W_kup[h]^T q_nope[h]
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, :, 0], w_kup)
+    # (1) scores against the latent + shared rope key
+    s = jnp.einsum("bhr,bmr->bhm", q_abs.astype(jnp.float32), c_kv.astype(jnp.float32))
+    s += jnp.einsum("bhn,bmn->bhm", q_rope[:, :, 0].astype(jnp.float32),
+                    k_rope.astype(jnp.float32))
+    s *= 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    mask = jnp.arange(m)[None, :] <= pos_b[:, None]
+    s = jnp.where(mask[:, None], s, -1e30)
+    # (2) softmax on the [H, M] score vector
+    p = jax.nn.softmax(s, axis=-1)
+    # (3) aggregate latent context, then decompress once per step
+    ctx = jnp.einsum("bhm,bmr->bhr", p, c_kv.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, w_vup)
+    out = out.reshape(b, 1, h * cfg.v_head_dim)
+    proj = bitlinear.apply(params["o_proj"], out, mode=mode)
+    return proj, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,168 @@
+"""Token-choice top-k Mixture-of-Experts with expert parallelism.
+
+Dispatch uses the capacity-based one-hot einsum formulation (Mesh-TF /
+MaxText style): tokens are grouped, each group assigns its tokens to
+per-expert capacity slots via a cumsum over the top-k one-hot matrix, and
+dispatch/combine are dense einsums that GSPMD turns into all-to-alls on the
+expert-sharded (``model``) axis. Tokens overflowing an expert's capacity are
+dropped (standard; capacity_factor controls the drop rate).
+
+Expert FFNs are BitLinear SwiGLU stacks with the expert dim EP-sharded.
+Supports DeepSeek-style shared experts and Arctic's parallel dense residual.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import bitlinear
+from ..core.params import ParamSpec
+from ..parallel import constrain
+
+
+def moe_spec(dim: int, hidden: int, n_experts: int, *, router_dtype=jnp.float32) -> dict:
+    return {
+        "router": {"w": ParamSpec((dim, n_experts), ("embed", None), dtype=router_dtype)},
+        "gate": {"w": ParamSpec((n_experts, dim, hidden), ("experts", "embed", "mlp"), quant="ternary")},
+        "up": {"w": ParamSpec((n_experts, dim, hidden), ("experts", "embed", "mlp"), quant="ternary")},
+        "down": {"w": ParamSpec((n_experts, hidden, dim), ("experts", "mlp", "embed"), quant="ternary")},
+    }
+
+
+def _expert_matmul(leaf: dict, x, mode):
+    """Per-expert ternary matmul: leaf weights [E, N, K] (or packed), x [E, C, N].
+
+    §Perf note (EXPERIMENTS.md, arctic hillclimb B2): the fake-quant weight is
+    materialized in activation dtype and *explicitly constrained to be
+    replicated on the FSDP axis* before the contraction. Without this, GSPMD
+    contracts against the data-sharded embed dim and all-reduces the f32
+    hidden activations per expert matmul; with it, the (2× smaller, bf16)
+    weights are all-gathered once instead — classic FSDP gather-then-compute.
+    """
+    from ..core.packing import unpack2
+    from ..core.ternary import (
+        quantize_act,
+        quantize_act_ste,
+        ternarize,
+        ternarize_ste,
+        ternary_matmul_ref,
+    )
+
+    if mode == "train":
+        # (B4 — forcing a sharded-ternarize-then-bf16-gather order — was
+        # tried and *refuted*: XLA gathered f32 either way and the extra
+        # constraint materialized another copy; see EXPERIMENTS.md §Perf.)
+        wq = jax.vmap(ternarize_ste)(leaf["w"]).astype(x.dtype)
+        wq = constrain(wq, "act_experts", None, None)
+        aq = quantize_act_ste(x)
+        return jnp.einsum("ecn,enk->eck", aq, wq)
+
+    def one_eval(w, a):
+        w_t, ws = ternarize(w)
+        a_i8, s = quantize_act(a)
+        return ternary_matmul_ref(a_i8, s, w_t, ws, out_dtype=a.dtype)
+
+    def one_packed(wp, scale, a):
+        w_t = unpack2(wp)
+        a_i8, s = quantize_act(a)
+        return ternary_matmul_ref(a_i8, s, w_t, scale, out_dtype=a.dtype)
+
+    if mode == "eval":
+        return jax.vmap(one_eval)(leaf["w"], x)
+    if mode == "packed":
+        return jax.vmap(one_packed)(leaf["wp"], leaf["scale"], x)
+    if mode == "wq":
+        def one_wq(w, a):
+            w_t, ws = ternarize(w)
+            return (a @ (w_t.astype(a.dtype)) * ws).astype(a.dtype)
+
+        return jax.vmap(one_wq)(leaf["w"], x)
+    if mode == "wq_packed":
+        def one_wq_p(wp, scale, a):
+            return (a @ unpack2(wp).astype(a.dtype) * scale).astype(a.dtype)
+
+        return jax.vmap(one_wq_p)(leaf["wp"], leaf["scale"], x)
+    raise ValueError(mode)
+
+
+def _expert_ffn(params, x, mode):
+    """x [E, C*, dim] -> [E, C*, dim]; per-expert SwiGLU, ternary weights."""
+    g = _expert_matmul(params["gate"], x, mode)
+    u = _expert_matmul(params["up"], x, mode)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "act_experts", None, "act_mlp")
+    return _expert_matmul(params["down"], h, mode)
+
+
+def moe_ffn(
+    params: dict,
+    x: jax.Array,  # [B, S, dim]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 1024,
+    mode: str = "train",
+) -> jax.Array:
+    b, s, dim = x.shape
+    e = params["router"]["w"].shape[1]
+    tokens = b * s
+    g = min(group_size, tokens)
+    while tokens % g:
+        g //= 2
+    n_groups = tokens // g
+    cap = max(int(g * top_k * capacity_factor / e), 4)
+
+    xt = x.reshape(n_groups, g, dim)
+    # §Perf B1: pin token-group tensors to the batch sharding so the combine
+    # contraction below resolves to partial-sums + all-reduce instead of
+    # all-gathering the expert outputs (9.4 GB/step on arctic, see
+    # EXPERIMENTS.md §Perf).
+    xt = constrain(xt, "act_batch", None, None)
+    logits = jnp.einsum(
+        "Ngd,de->Nge", xt.astype(jnp.float32), params["router"]["w"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # [N, g, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # [N, g, k, E]
+    # capacity slot per (token, k): position within the expert's queue
+    slot = (jnp.cumsum(onehot.reshape(n_groups, g * top_k, e), axis=1) - 1.0).reshape(
+        n_groups, g, top_k, e
+    )
+    slot = (slot * onehot).sum(-1)  # [N, g, k] slot index for chosen expert
+    keep = slot < cap
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32) * keep[..., None]
+    # dispatch [N, g, E, C] / combine identical up to gate weights
+    dispatch = jnp.einsum("Ngke,Ngkc->Ngec", onehot, slot_oh)
+    combine = jnp.einsum("Ngke,Ngkc,Ngk->Ngec", onehot, slot_oh, gate_vals)
+
+    xe = jnp.einsum("Ngd,Ngec->eNcd", xt.astype(jnp.float32), dispatch)
+    # §Perf B3: 2-D sharding of the expert compute — experts on the model
+    # axis (EP), expert-token slots on the data axis. The dispatch einsum
+    # becomes the canonical MoE all-to-all; the matmul FLOPs stay fully
+    # sharded across all chips while the (bf16, 2-bit-quantizable) weights
+    # are the only thing gathered (B2).
+    xe = constrain(xe, "act_experts", "act_batch", None, None)
+    xe = xe.reshape(e, n_groups * cap, dim).astype(x.dtype)
+    ye = _expert_ffn(params, xe, mode).reshape(e, n_groups, cap, dim)
+    ye = constrain(ye, "act_experts", "act_batch", None, None)
+    out = jnp.einsum("eNcd,Ngec->Ngd", ye.astype(jnp.float32), combine)
+    out = constrain(out, "act_batch", None, None)
+    return out.reshape(b, s, dim).astype(x.dtype), _aux_loss(probs, onehot)
+
+
+def _aux_loss(probs, onehot):
+    """Switch-style load-balance auxiliary loss."""
+    # fraction of router prob mass vs fraction of tokens per expert
+    density = onehot.sum(axis=2).mean(axis=1)  # [N, E] token fraction
+    prob_mass = probs.mean(axis=1)  # [N, E]
+    e = probs.shape[-1]
+    return (density * prob_mass).sum(axis=-1).mean() * e
+
+
+def shared_expert_spec(dim: int, hidden: int) -> dict:
+    from .layers import mlp_spec
+
+    return mlp_spec(dim, hidden)

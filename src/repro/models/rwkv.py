@@ -1,0 +1,242 @@
+"""RWKV-6 ("Finch") layer: attention-free time mixing with data-dependent
+decay, plus squared-ReLU channel mixing. All projections ternary BitLinear.
+
+The WKV recurrence per head (head size n):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state [n_key, n_value])
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with w_t = exp(-exp(w0 + tanh(x_w W1) W2)) — the *data-dependent decay* that
+defines Finch (arXiv:2404.05892). Static lerp token-shift is used for the
+r/k/v/g streams (the paper's per-stream ddlerp LoRAs are folded into a single
+learned mix per stream — a noted simplification, same dataflow).
+
+Prefill/training runs a *chunked* parallel form: within a chunk, decay ratios
+exp(E_t - Lc_s) are ≤ 1 for s < t (numerically safe), so the intra-chunk
+contribution is a masked [C, C] matmul and the state crosses chunks through a
+``lax.scan`` — O(S) total work, the sub-quadratic path for ``long_500k``.
+Decode carries (S, x_prev) in O(1) memory — no KV cache at all.
+
+TeLLMe C2 (attention scheduling) is inapplicable — attention-free (DESIGN.md
+§5); C1/C3 (ternary matmul + fused norm/quant) fully apply.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import bitlinear
+from ..core.params import ParamSpec
+from ..parallel import constrain
+
+_LORA = 64
+
+
+def rwkv_spec(cfg) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    return {
+        "time": {
+            "mix_r": ParamSpec((d,), (None,), init="ones", scale=0.5),
+            "mix_k": ParamSpec((d,), (None,), init="ones", scale=0.5),
+            "mix_v": ParamSpec((d,), (None,), init="ones", scale=0.5),
+            "mix_g": ParamSpec((d,), (None,), init="ones", scale=0.5),
+            "mix_w": ParamSpec((d,), (None,), init="ones", scale=0.5),
+            "w0": ParamSpec((d,), (None,), init="zeros"),
+            "w1": ParamSpec((d, _LORA), (None, None), scale=0.01),
+            "w2": ParamSpec((_LORA, d), (None, None), scale=0.01),
+            "bonus": ParamSpec((h, cfg.rwkv_head_dim), ("heads", None), scale=0.1),
+            "Wr": bitlinear.spec(d, d, ("embed", "heads")),
+            "Wk": bitlinear.spec(d, d, ("embed", "heads")),
+            "Wv": bitlinear.spec(d, d, ("embed", "heads")),
+            "Wg": bitlinear.spec(d, d, ("embed", "heads")),
+            "Wo": bitlinear.spec(d, d, ("heads", "embed")),
+            "ln_w": ParamSpec((d,), (None,), init="ones"),
+            "ln_b": ParamSpec((d,), (None,), init="zeros"),
+        },
+        "channel": {
+            "mix_k": ParamSpec((d,), (None,), init="ones", scale=0.5),
+            "mix_r": ParamSpec((d,), (None,), init="ones", scale=0.5),
+            "Wk": bitlinear.spec(d, cfg.d_ff, ("embed", "mlp")),
+            "Wv": bitlinear.spec(cfg.d_ff, d, ("mlp", "embed")),
+            "Wr": bitlinear.spec(d, d, ("embed", "embed_no_fsdp")),
+        },
+    }
+
+
+def _lerp(x, x_prev, mix):
+    m = jax.nn.sigmoid(mix.astype(x.dtype))
+    return x * m + x_prev * (1 - m)
+
+
+def _decay(tp, xw):
+    """Data-dependent decay, per channel: log w in (-inf, 0)."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ tp["w1"].astype(jnp.float32))
+    logw = -jnp.exp(
+        jnp.clip(tp["w0"].astype(jnp.float32) + lora @ tp["w2"].astype(jnp.float32), -8.0, 4.0)
+    )
+    return jnp.clip(logw, -10.0, -1e-4)
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, *, chunk: int = 64):
+    """r/k/v [B, H, S, n], logw [B, H, S, n], u [H, n], s0 [B, H, n, n].
+
+    Returns (y [B, H, S, n], sN).
+
+    §Perf notes (EXPERIMENTS.md, rwkv6 hillclimb):
+    * the chunk-scan ``step`` is wrapped in ``jax.checkpoint`` so the scan's
+      backward saves only the [B, H, n, n] state carry per chunk instead of
+      the O(C²·n) intra-chunk decay tensors (recomputed in bwd) — confirmed
+      2.3× on the memory term (A1);
+    * chunk=64 measured optimal: smaller chunks (32/16) were *refuted* —
+      per-trip fixed state traffic grows with trip count faster than the
+      quadratic intra-chunk term shrinks (A3).
+    """
+    b, h, s, n = r.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+
+    def toc(t):
+        return t.reshape(b, h, nc, chunk, n).transpose(2, 0, 1, 3, 4)
+
+    r_c, k_c, v_c, w_c = map(toc, (r, k, v, logw))
+
+    def step(S, inp):
+        rc, kc, vc, wc = (t.astype(jnp.float32) for t in inp)  # [B, H, C, n]
+        lc = jnp.cumsum(wc, axis=2)  # inclusive cum-log-decay
+        e = lc - wc  # exclusive
+        # intra-chunk: A[t,s] = Σ_i r_t[i] k_s[i] exp(e_t[i] - lc_s[i]), s<t
+        dec = jnp.exp(e[:, :, :, None, :] - lc[:, :, None, :, :])  # [B,H,C,C,n] ≤1 for s<t
+        amat = jnp.einsum("bhtn,bhsn,bhtsn->bhts", rc, kc, dec)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        amat = jnp.where(tri[None, None], amat, 0.0)
+        diag = jnp.einsum("bhtn,bhtn,hn->bht", rc, kc, u.astype(jnp.float32))
+        y = jnp.einsum("bhts,bhsn->bhtn", amat, vc) + diag[..., None] * vc
+        # cross-chunk: y += (r ∘ exp(e)) @ S
+        y = y + jnp.einsum("bhtn,bhnm->bhtm", rc * jnp.exp(e), S)
+        # state update: S' = diag(exp(lc_last)) S + Σ_s exp(lc_last - lc_s) k_s v_s^T
+        last = lc[:, :, -1]  # [B, H, n]
+        S_new = jnp.exp(last)[..., None] * S + jnp.einsum(
+            "bhsn,bhsm->bhnm", kc * jnp.exp(last[:, :, None, :] - lc), vc
+        )
+        return S_new, y
+
+    sN, ys = jax.lax.scan(
+        jax.checkpoint(step, prevent_cse=False), s0.astype(jnp.float32),
+        (r_c, k_c, v_c, w_c)
+    )
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, s, n)
+    return y, sN
+
+
+def _heads(t, h, n):
+    b, s, _ = t.shape
+    return t.reshape(b, s, h, n).transpose(0, 2, 1, 3)
+
+
+def time_mix(tp, x, x_prev, s0, cfg, *, mode="train", chunk=64):
+    """x [B, S, d]; x_prev [B, 1, d] carry; s0 [B, H, n, n]."""
+    b, s, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xr = _lerp(x, shifted, tp["mix_r"])
+    xk = _lerp(x, shifted, tp["mix_k"])
+    xv = _lerp(x, shifted, tp["mix_v"])
+    xg = _lerp(x, shifted, tp["mix_g"])
+    xw = _lerp(x, shifted, tp["mix_w"])
+    r = _heads(bitlinear.apply(tp["Wr"], xr, mode=mode), h, n)
+    k = _heads(bitlinear.apply(tp["Wk"], xk, mode=mode), h, n)
+    v = _heads(bitlinear.apply(tp["Wv"], xv, mode=mode), h, n)
+    g = jax.nn.silu(bitlinear.apply(tp["Wg"], xg, mode=mode))
+    logw = _heads(_decay(tp, xw), h, n)
+    # §Perf A4: pad heads to the TP degree (40 -> 48 on a 16-way model axis)
+    # so the WKV tensors shard fully instead of XLA's partial 8-way tiling.
+    # Padded heads are all-zero (k=v=r=0 ⇒ y=0, state stays 0) and sliced off.
+    hp = ((h + 15) // 16) * 16
+    s0_p = s0
+    if hp != h:
+        padh = ((0, 0), (0, hp - h), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, padh), jnp.pad(k, padh), jnp.pad(v, padh)
+        logw = jnp.pad(logw, padh, constant_values=-1e-4)
+        s0_p = jnp.pad(s0, ((0, 0), (0, hp - h), (0, 0), (0, 0)))
+        u_p = jnp.pad(tp["bonus"], ((0, hp - h), (0, 0)))
+    else:
+        u_p = tp["bonus"]
+    r = constrain(r, "act_batch", "act_heads", None, None)
+    k = constrain(k, "act_batch", "act_heads", None, None)
+    v = constrain(v, "act_batch", "act_heads", None, None)
+    logw = constrain(logw, "act_batch", "act_heads", None, None)
+    y, sN = _wkv_chunked(r, k, v, logw, u_p, s0_p, chunk=chunk)
+    y = y[:, :h]
+    sN = sN[:, :h]
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    # per-head group norm
+    y = y.reshape(b, s, h, n)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(b, s, d) * tp["ln_w"].astype(jnp.float32) + tp["ln_b"].astype(jnp.float32)
+    y = y.astype(x.dtype) * g
+    y = constrain(y, "act_batch", None, "act_heads")
+    out = bitlinear.apply(tp["Wo"], y, mode=mode)
+    return out, x[:, -1:], sN
+
+
+def channel_mix(cp, x, x_prev, *, mode="train"):
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xk = _lerp(x, shifted, cp["mix_k"])
+    xr = _lerp(x, shifted, cp["mix_r"])
+    k = bitlinear.apply(cp["Wk"], xk, mode=mode)
+    k = jnp.square(jax.nn.relu(k))
+    k = constrain(k, "act_batch", None, "act_mlp")
+    kv = bitlinear.apply(cp["Wv"], k, mode=mode)
+    return jax.nn.sigmoid(bitlinear.apply(cp["Wr"], xr, mode=mode)) * kv, x[:, -1:]
+
+
+def time_mix_decode(tp, x, state, cfg, *, mode="packed"):
+    """Single token: x [B, 1, d]; state {wkv [B,H,n,n], x_time [B,1,d]}."""
+    b, _, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    shifted = state["x_time"].astype(x.dtype)
+    xr = _lerp(x, shifted, tp["mix_r"])
+    xk = _lerp(x, shifted, tp["mix_k"])
+    xv = _lerp(x, shifted, tp["mix_v"])
+    xg = _lerp(x, shifted, tp["mix_g"])
+    xw = _lerp(x, shifted, tp["mix_w"])
+    r = bitlinear.apply(tp["Wr"], xr, mode=mode).reshape(b, h, n).astype(jnp.float32)
+    k = bitlinear.apply(tp["Wk"], xk, mode=mode).reshape(b, h, n).astype(jnp.float32)
+    v = bitlinear.apply(tp["Wv"], xv, mode=mode).reshape(b, h, n).astype(jnp.float32)
+    g = jax.nn.silu(bitlinear.apply(tp["Wg"], xg, mode=mode))
+    w = jnp.exp(_decay(tp, xw)[:, 0].reshape(b, h, n))  # [B,H,n]
+    S = state["wkv"]
+    u = tp["bonus"].astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]  # [B,H,n,n]
+    y = jnp.einsum("bhn,bhnm->bhm", r, S + u[None, :, :, None] * kv)
+    S = w[..., :, None] * S + kv
+    y = y.reshape(b, 1, h, n)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(b, 1, d) * tp["ln_w"].astype(jnp.float32) + tp["ln_b"].astype(jnp.float32)
+    y = y.astype(x.dtype) * g
+    out = bitlinear.apply(tp["Wo"], y, mode=mode)
+    return out, {"wkv": S, "x_time": x}
+
+
+def channel_mix_decode(cp, x, x_prev, *, mode="packed"):
+    out, _ = channel_mix(cp, x, x_prev.astype(x.dtype), mode=mode)
+    return out, x
+
+
+def rwkv_init_state(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    return {
+        "wkv": jnp.zeros((batch, h, n, n), jnp.float32),
+        "x_time": jnp.zeros((batch, 1, d), dtype),
+        "x_chan": jnp.zeros((batch, 1, d), dtype),
+    }

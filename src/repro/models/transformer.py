@@ -1,0 +1,472 @@
+"""Decoder-only LM assembly covering all assigned architecture families.
+
+A model is a *block plan*: an optional unscanned prelude (e.g. DeepSeek's
+dense first layer) plus a homogeneous period of blocks scanned ``n_periods``
+times (``lax.scan`` keeps the HLO size O(period) — 126-layer llama compiles
+as one layer body). Families map to period contents:
+
+  dense      [attn+mlp]                     (gemma2: [local-attn, global-attn])
+  moe        [attn + (moe ∥ dense residual)]          (arctic)
+  mla_moe    prelude [mla+dense]; period [mla + moe+shared]   (deepseek)
+  hybrid     period of 8: mamba×7 + attn×1, moe every 2nd     (jamba)
+  ssm        [rwkv time-mix + channel-mix]                    (rwkv6)
+
+Three execution paths share the parameters (mode = train / eval / packed) —
+the packed path consumes 2-bit ternary weights (TeLLMe serving form).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import bitlinear
+from ..core.params import ParamSpec, _map_specs
+from ..parallel import constrain
+from . import attention as attn_ops
+from . import layers as L
+from . import mamba as mamba_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str  # attn | mla | mamba | rwkv
+    ffn: str  # dense | moe | moe_shared | moe_dense | rwkv_channel
+    local: bool = False  # sliding-window attention (gemma2 local layers)
+
+
+# ---------------------------------------------------------------------------
+# Block plan
+# ---------------------------------------------------------------------------
+
+
+def block_plan(cfg) -> tuple[list[LayerKind], list[LayerKind], int]:
+    """Returns (prelude_kinds, period_kinds, n_periods)."""
+    if cfg.family == "dense":
+        if cfg.local_global_period:
+            period = [
+                LayerKind("attn", "dense", local=(i % cfg.local_global_period == 0))
+                for i in range(cfg.local_global_period)
+            ]
+        else:
+            period = [LayerKind("attn", "dense")]
+        assert cfg.n_layers % len(period) == 0
+        return [], period, cfg.n_layers // len(period)
+    if cfg.family == "moe":
+        period = [LayerKind("attn", "moe_dense" if cfg.dense_residual else "moe")]
+        return [], period, cfg.n_layers
+    if cfg.family == "mla_moe":
+        prelude = [LayerKind("mla", "dense")] * cfg.first_dense_layers
+        period = [LayerKind("mla", "moe_shared" if cfg.n_shared_experts else "moe")]
+        return prelude, period, cfg.n_layers - cfg.first_dense_layers
+    if cfg.family == "hybrid":
+        p = cfg.attn_layer_period
+        period = []
+        for i in range(p):
+            mixer = "attn" if i % p == cfg.attn_layer_offset else "mamba"
+            ffn = "moe" if (cfg.n_experts and i % cfg.moe_every == cfg.moe_every - 1) else "dense"
+            period.append(LayerKind(mixer, ffn))
+        assert cfg.n_layers % p == 0
+        return [], period, cfg.n_layers // p
+    if cfg.family == "ssm":
+        return [], [LayerKind("rwkv", "rwkv_channel")], cfg.n_layers
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg) -> dict:
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "q": bitlinear.spec(d, h * hd, ("embed", "heads")),
+        "k": bitlinear.spec(d, hk * hd, ("embed", "kv_heads")),
+        "v": bitlinear.spec(d, hk * hd, ("embed", "kv_heads")),
+        "o": bitlinear.spec(h * hd, d, ("heads", "embed")),
+    }
+
+
+def _ffn_spec(cfg, kind: LayerKind, *, dense_ff: int | None = None) -> dict:
+    if kind.ffn == "dense":
+        ff = dense_ff if dense_ff else (cfg.dense_ff if cfg.family == "mla_moe" else cfg.d_ff)
+        if cfg.family in ("dense", "hybrid", "moe"):
+            ff = cfg.d_ff
+        return L.mlp_spec(cfg.d_model, ff)
+    if kind.ffn in ("moe", "moe_shared", "moe_dense"):
+        spec = {"moe": moe_mod.moe_spec(cfg.d_model, cfg.d_ff, cfg.n_experts)}
+        if kind.ffn == "moe_shared":
+            ff = (cfg.shared_expert_ff or cfg.d_ff) * cfg.n_shared_experts
+            spec["shared"] = L.mlp_spec(cfg.d_model, ff)
+        if kind.ffn == "moe_dense":
+            spec["dense"] = L.mlp_spec(cfg.d_model, cfg.dense_ff or cfg.d_ff)
+        return spec
+    if kind.ffn == "rwkv_channel":
+        return {}  # lives inside the rwkv layer spec
+    raise ValueError(kind.ffn)
+
+
+def layer_spec(cfg, kind: LayerKind) -> dict:
+    if kind.mixer == "rwkv":
+        s = rwkv_mod.rwkv_spec(cfg)
+        return {
+            "ln1": L.rmsnorm_spec(cfg.d_model),
+            "ln2": L.rmsnorm_spec(cfg.d_model),
+            "time": s["time"],
+            "channel": s["channel"],
+        }
+    spec: dict[str, Any] = {"ln1": L.rmsnorm_spec(cfg.d_model), "ln2": L.rmsnorm_spec(cfg.d_model)}
+    if kind.mixer == "attn":
+        spec["attn"] = _attn_spec(cfg)
+    elif kind.mixer == "mla":
+        spec["attn"] = mla_mod.mla_spec(cfg)
+    elif kind.mixer == "mamba":
+        spec["mamba"] = mamba_mod.mamba_spec(cfg)
+    else:
+        raise ValueError(kind.mixer)
+    if kind.ffn != "rwkv_channel":
+        spec["ffn"] = _ffn_spec(cfg, kind, dense_ff=cfg.dense_ff if cfg.family == "mla_moe" else None)
+    return spec
+
+
+def _stack_specs(tree, n: int):
+    return _map_specs(
+        lambda p, s: ParamSpec(
+            (n,) + s.shape, ("layers",) + s.axes, dtype=s.dtype, init=s.init,
+            scale=s.scale, quant=s.quant,
+        ),
+        tree,
+    )
+
+
+FRONTEND_DIMS = {"audio": 128, "vision": 1024}
+
+
+def param_specs(cfg) -> dict:
+    prelude, period, n_periods = block_plan(cfg)
+    specs: dict[str, Any] = {}
+    if cfg.frontend != "none":
+        dfe = FRONTEND_DIMS[cfg.frontend]
+        specs["frontend"] = bitlinear.dense_spec(dfe, cfg.d_model, (None, "embed"))
+    specs["embed"] = L.embedding_spec(cfg.padded_vocab, cfg.d_model)
+    for i, kind in enumerate(prelude):
+        specs[f"prelude_{i}"] = layer_spec(cfg, kind)
+    specs["blocks"] = _stack_specs(
+        {f"b{i}": layer_spec(cfg, k) for i, k in enumerate(period)}, n_periods
+    )
+    specs["final_norm"] = L.rmsnorm_spec(cfg.d_model)
+    specs["lm_head"] = L.lm_head_spec(cfg.d_model, cfg.padded_vocab)
+    return specs
+
+
+def packed_param_specs(cfg) -> dict:
+    """Serving-side spec tree: ternary weights replaced by packed+scale.
+
+    Replaces each ``{"w": ParamSpec(quant="ternary")}`` node with
+    ``{"wp": uint8 packed, "scale": f32}`` so ``bitlinear.apply`` finds the
+    packed leaves at the same level it would find ``w``.
+    """
+
+    def rec(node):
+        if isinstance(node, ParamSpec):
+            return node
+        if (
+            isinstance(node, dict)
+            and isinstance(node.get("w"), ParamSpec)
+            and node["w"].quant == "ternary"
+        ):
+            out = bitlinear.packed_spec(node["w"])
+            out.update({k: rec(v) for k, v in node.items() if k != "w"})
+            return out
+        return {k: rec(v) for k, v in node.items()}
+
+    return rec(param_specs(cfg))
+
+
+def pack_tree(params, specs):
+    """Pack a trained float param tree into the serving form."""
+
+    def rec(p, s):
+        if isinstance(s, ParamSpec):
+            return p
+        if set(s) == {"w"} and isinstance(s["w"], ParamSpec) and s["w"].quant == "ternary":
+            return bitlinear.pack_params(p["w"])
+        return {k: rec(p[k], s[k]) for k in s}
+
+    return rec(params, specs)
+
+
+# ---------------------------------------------------------------------------
+# Forward blocks
+# ---------------------------------------------------------------------------
+
+
+def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None):
+    b, s, _ = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    window = cfg.sliding_window if kind.local else 0
+    q = bitlinear.apply(bp["q"], x, mode=mode).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = bitlinear.apply(bp["k"], x, mode=mode).reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    v = bitlinear.apply(bp["v"], x, mode=mode).reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    q = L.apply_rope(q, positions[:, None], theta=cfg.rope_theta)
+    k = L.apply_rope(k, positions[:, None], theta=cfg.rope_theta)
+    q = constrain(q, "act_batch", "act_heads", None, None)
+    if cache is None:  # prefill / train
+        out = attn_ops.prefill_attention(
+            q, k, v, window=window, softcap=cfg.attn_logit_softcap,
+        )
+        new_cache = {"k": k, "v": v}
+    else:
+        k_c, v_c = attn_ops.update_kv_cache(
+            cache["k"], cache["v"], k[:, :, 0].astype(cache["k"].dtype),
+            v[:, :, 0].astype(cache["v"].dtype), pos
+        )
+        out = attn_ops.decode_attention(
+            q[:, :, 0], k_c, v_c, pos, window=window, softcap=cfg.attn_logit_softcap,
+        )[:, :, None, :].transpose(0, 2, 1, 3)
+        new_cache = {"k": k_c, "v": v_c}
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    out = constrain(out, "act_batch", None, "act_heads")
+    return bitlinear.apply(bp["o"], out, mode=mode), new_cache
+
+
+def _apply_ffn(fp, x, cfg, kind, pcfg, *, mode):
+    aux = jnp.float32(0.0)
+    if kind.ffn == "dense":
+        return L.mlp(fp, x, mode=mode), aux
+    if kind.ffn in ("moe", "moe_shared", "moe_dense"):
+        out, aux = moe_mod.moe_ffn(
+            fp["moe"], x, top_k=cfg.experts_per_tok,
+            capacity_factor=cfg.capacity_factor,
+            group_size=pcfg.moe_group_size if pcfg else 1024, mode=mode,
+        )
+        if kind.ffn == "moe_shared":
+            out = out + L.mlp(fp["shared"], x, mode=mode)
+        if kind.ffn == "moe_dense":
+            out = out + L.mlp(fp["dense"], x, mode=mode)
+        return out, aux
+    raise ValueError(kind.ffn)
+
+
+def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=None, pos=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    if kind.mixer == "rwkv":
+        st = cache or {
+            "wkv": jnp.zeros((x.shape[0], cfg.d_model // cfg.rwkv_head_dim,
+                              cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+            "x_time": jnp.zeros((x.shape[0], 1, cfg.d_model), x.dtype),
+            "x_chan": jnp.zeros((x.shape[0], 1, cfg.d_model), x.dtype),
+        }
+        h = L.rmsnorm(bp["ln1"], x, eps=cfg.norm_eps)
+        if cache is None or x.shape[1] > 1:
+            y, x_last, wkv = rwkv_mod.time_mix(
+                bp["time"], h, st["x_time"].astype(h.dtype), st["wkv"], cfg, mode=mode
+            )
+        else:
+            y, tstate = rwkv_mod.time_mix_decode(bp["time"], h, {"wkv": st["wkv"],
+                                                                 "x_time": st["x_time"]},
+                                                 cfg, mode=mode)
+            x_last, wkv = tstate["x_time"], tstate["wkv"]
+        x = x + y
+        h2 = L.rmsnorm(bp["ln2"], x, eps=cfg.norm_eps)
+        y2, x_chan = rwkv_mod.channel_mix(bp["channel"], h2, st["x_chan"].astype(h2.dtype),
+                                          mode=mode)
+        x = x + y2
+        return x, {"wkv": wkv, "x_time": x_last, "x_chan": x_chan}, aux
+
+    h = L.rmsnorm(bp["ln1"], x, eps=cfg.norm_eps)
+    if kind.mixer == "attn":
+        y, new_cache = _apply_attn(bp["attn"], h, cfg, kind, positions, mode=mode,
+                                   cache=cache, pos=pos)
+    elif kind.mixer == "mla":
+        if cache is None:
+            y, new_cache = mla_mod.mla_prefill(bp["attn"], h, cfg, positions, mode=mode)
+        else:
+            y, new_cache = mla_mod.mla_decode(bp["attn"], h, cfg, cache, pos, mode=mode)
+    elif kind.mixer == "mamba":
+        if cache is None:
+            y, new_cache = mamba_mod.mamba_prefill(bp["mamba"], h, cfg, mode=mode)
+        else:
+            y, new_cache = mamba_mod.mamba_decode(bp["mamba"], h, cfg, cache, mode=mode)
+    else:
+        raise ValueError(kind.mixer)
+    x = x + y
+    x = constrain(x, "act_batch", "act_seq", None)
+    h2 = L.rmsnorm(bp["ln2"], x, eps=cfg.norm_eps)
+    y2, aux = _apply_ffn(bp["ffn"], h2, cfg, kind, pcfg, mode=mode)
+    x = x + y2
+    x = constrain(x, "act_batch", "act_seq", None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, batch, cfg):
+    """tokens [B,S] or embeddings [B,S,Dfe] -> [B,S,d]."""
+    if cfg.frontend != "none" and "embeddings" in batch:
+        x = bitlinear.dense_apply(params["frontend"], batch["embeddings"].astype(cfg.dtype))
+    else:
+        x = L.embed(params["embed"], batch["tokens"], dtype=cfg.dtype)
+    return constrain(x, "act_batch", "act_seq", None)
+
+
+def forward(params, batch, cfg, pcfg=None, *, mode="train", collect_cache=False):
+    """Full-sequence pass. Returns (logits [B,S,V], aux, caches|None)."""
+    prelude, period, n_periods = block_plan(cfg)
+    x = embed_inputs(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    caches: dict[str, Any] = {}
+    aux_total = jnp.float32(0.0)
+    for i, kind in enumerate(prelude):
+        x, c, aux = apply_block(kind, params[f"prelude_{i}"], x, cfg, pcfg, positions, mode=mode)
+        aux_total += aux
+        if collect_cache:
+            caches[f"prelude_{i}"] = c
+
+    def body(carry, pparams):
+        x = carry
+        aux_p = jnp.float32(0.0)
+        cs = {}
+        for i, kind in enumerate(period):
+            x, c, aux = apply_block(kind, pparams[f"b{i}"], x, cfg, pcfg, positions, mode=mode)
+            aux_p += aux
+            cs[f"b{i}"] = c
+        return x, (aux_p, cs if collect_cache else None)
+
+    if pcfg is not None and pcfg.remat == "full" and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif pcfg is not None and pcfg.remat == "dots" and mode == "train":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots, prevent_cse=False
+        )
+    x, (aux_ps, period_caches) = jax.lax.scan(body, x, params["blocks"])
+    aux_total += aux_ps.sum()
+    if collect_cache:
+        caches["blocks"] = period_caches
+
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.lm_head(params["lm_head"], x, softcap=cfg.final_logit_softcap)
+    logits = constrain(logits, "act_batch", "act_seq", "act_vocab")
+    return logits, aux_total, (caches if collect_cache else None)
+
+
+def loss_fn(params, batch, cfg, pcfg=None, *, mode="train", aux_weight=0.01):
+    logits, aux, _ = forward(params, batch, cfg, pcfg, mode=mode)
+    ce = L.cross_entropy(logits, batch["labels"])
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def decode_step(params, batch, caches, pos, cfg, *, mode="eval"):
+    """One autoregressive step. batch {tokens [B,1] | embeddings [B,1,Dfe]};
+    caches from ``forward(collect_cache=True)`` (or abstract cache_specs);
+    pos [B] write/attend position. Returns (logits [B, V], new caches)."""
+    prelude, period, n_periods = block_plan(cfg)
+    x = embed_inputs(params, batch, cfg)
+    b = x.shape[0]
+    pos = jnp.asarray(pos)  # scalar (synchronized) or [B] (per-slot)
+    positions = jnp.broadcast_to(pos, (b,))[:, None]
+
+    new_caches: dict[str, Any] = {}
+    for i, kind in enumerate(prelude):
+        x, c, _ = apply_block(kind, params[f"prelude_{i}"], x, cfg, None, positions,
+                              mode=mode, cache=caches[f"prelude_{i}"], pos=pos)
+        new_caches[f"prelude_{i}"] = c
+
+    def body(carry, xs):
+        x = carry
+        pparams, pcaches = xs
+        cs = {}
+        for i, kind in enumerate(period):
+            x, c, _ = apply_block(kind, pparams[f"b{i}"], x, cfg, None, positions,
+                                  mode=mode, cache=pcaches[f"b{i}"], pos=pos)
+            cs[f"b{i}"] = c
+        return x, cs
+
+    x, blk_caches = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+    new_caches["blocks"] = blk_caches
+
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.lm_head(params["lm_head"], x, softcap=cfg.final_logit_softcap)
+    return logits[:, 0], new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache declarations (abstract, for the decode dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _kind_cache_spec(cfg, kind: LayerKind, batch: int, seq: int, dtype):
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind.mixer == "attn":
+        return {
+            "k": (jax.ShapeDtypeStruct((batch, hk, seq, hd), dtype),
+                  ("act_batch", "act_kv_heads", "act_kv_seq", None)),
+            "v": (jax.ShapeDtypeStruct((batch, hk, seq, hd), dtype),
+                  ("act_batch", "act_kv_heads", "act_kv_seq", None)),
+        }
+    if kind.mixer == "mla":
+        return {
+            "c_kv": (jax.ShapeDtypeStruct((batch, seq, cfg.kv_lora_rank), dtype),
+                     ("act_batch", "act_kv_seq", None)),
+            "k_rope": (jax.ShapeDtypeStruct((batch, seq, cfg.qk_rope_head_dim), dtype),
+                       ("act_batch", "act_kv_seq", None)),
+        }
+    if kind.mixer == "mamba":
+        di = cfg.mamba_expand * cfg.d_model
+        return {
+            "ssm": (jax.ShapeDtypeStruct((batch, di, cfg.mamba_d_state), jnp.float32),
+                    ("act_batch", "act_mlp", None)),
+            "conv": (jax.ShapeDtypeStruct((batch, cfg.mamba_d_conv - 1, di), dtype),
+                     ("act_batch", None, "act_mlp")),
+        }
+    if kind.mixer == "rwkv":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        n = cfg.rwkv_head_dim
+        return {
+            "wkv": (jax.ShapeDtypeStruct((batch, h, n, n), jnp.float32),
+                    ("act_batch", "act_heads", None, None)),
+            "x_time": (jax.ShapeDtypeStruct((batch, 1, cfg.d_model), dtype),
+                       ("act_batch", None, None)),
+            "x_chan": (jax.ShapeDtypeStruct((batch, 1, cfg.d_model), dtype),
+                       ("act_batch", None, None)),
+        }
+    raise ValueError(kind.mixer)
+
+
+def cache_specs(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    """(ShapeDtypeStruct tree, logical-axes tree) for the KV/state caches."""
+    prelude, period, n_periods = block_plan(cfg)
+
+    def split(tree):
+        shapes = {k: (split(v) if isinstance(v, dict) else v[0]) for k, v in tree.items()}
+        return shapes
+
+    def axes(tree):
+        return {k: (axes(v) if isinstance(v, dict) else v[1]) for k, v in tree.items()}
+
+    full: dict[str, Any] = {}
+    for i, kind in enumerate(prelude):
+        full[f"prelude_{i}"] = _kind_cache_spec(cfg, kind, batch, seq, dtype)
+    blocks = {}
+    for i, kind in enumerate(period):
+        one = _kind_cache_spec(cfg, kind, batch, seq, dtype)
+        blocks[f"b{i}"] = {
+            k: (jax.ShapeDtypeStruct((n_periods,) + v[0].shape, v[0].dtype),
+                ("layers",) + v[1])
+            for k, v in one.items()
+        }
+    full["blocks"] = blocks
+    return split(full), axes(full)

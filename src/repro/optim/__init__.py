@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, apply_updates, init_state, schedule, clip_by_global_norm  # noqa: F401
+from . import compression  # noqa: F401

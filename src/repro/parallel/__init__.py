@@ -1,0 +1,9 @@
+from .sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    constrain,
+    param_shardings,
+    resolve_pspec,
+    set_global_mesh,
+    current_mesh,
+    clear_global_mesh,
+)

@@ -1,0 +1,188 @@
+"""Logical-axis sharding rules for the (pod, data, model) production mesh.
+
+Models annotate tensors with *logical* axis names; this module resolves them
+to :class:`~jax.sharding.PartitionSpec` against the active mesh, enforcing:
+
+* **divisibility** — a mesh axis is only used if it divides the dim size
+  (non-divisible candidates are dropped; e.g. arctic's 56 heads or GQA's 8 kv
+  heads on a 16-way model axis fall back to replication, see DESIGN.md §4);
+* **no-reuse** — a mesh axis shards at most one dim of a tensor (greedy,
+  left-to-right over dims);
+* **missing axes** — rules mentioning axes the mesh lacks (e.g. "pod" on the
+  single-pod mesh) silently drop them, so the same model code runs on any
+  mesh.
+
+Parallelism coverage on the production mesh (see DESIGN.md §4):
+  DP    batch              -> ("pod", "data")
+  FSDP  param "embed" dim  -> ("data",) (+"pod" when cfg.fsdp_pod)
+  TP    heads/mlp/vocab    -> ("model",)
+  SP    activation seq     -> ("model",)  [long-sequence shapes]
+  EP    experts            -> ("model",)
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..core import params as P
+
+# logical axis -> ordered candidate mesh axes
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # --- parameters ---------------------------------------------------------
+    "vocab": ("model",),
+    "embed": ("data",),  # FSDP axis (extended with "pod" via fsdp_pod rules)
+    "embed_no_fsdp": (),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "kv_lora": (),
+    "layers": (),  # scanned-stack leading axis, never sharded
+    "conv": (),
+    "state": (),
+    # --- activations --------------------------------------------------------
+    "act_batch": ("pod", "data"),
+    "act_seq": (),  # becomes ("model",) under sequence parallelism
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    # decode KV-cache sequence dim: sharded over model *iff* kv heads could
+    # not shard (no-reuse resolver picks heads first when divisible) — the
+    # context-parallel decode layout for 8-kv-head GQA on a 16-way TP axis.
+    "act_kv_seq": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_experts": ("model",),
+    "act_kv": (),
+}
+
+
+def make_rules(
+    *, fsdp_pod: bool = False, seq_shard: bool = False, extra: dict | None = None
+) -> dict[str, tuple[str, ...]]:
+    """Build a rule table. ``fsdp_pod`` extends FSDP over the pod axis (ZeRO-3
+    across pods, used by 100B+ configs); ``seq_shard`` turns on sequence
+    parallelism for activations (long-context shapes)."""
+    rules = dict(DEFAULT_RULES)
+    if fsdp_pod:
+        rules["embed"] = ("pod", "data")
+    if seq_shard:
+        rules["act_seq"] = ("model",)
+    if extra:
+        rules.update(extra)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Global mesh context (set by train/serve/dryrun drivers; None on CPU tests)
+# ---------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+
+def set_global_mesh(mesh: Mesh | None, rules: dict | None = None) -> None:
+    _STATE.mesh = mesh
+    _STATE.rules = rules or DEFAULT_RULES
+
+
+def clear_global_mesh() -> None:
+    _STATE.mesh = None
+    _STATE.rules = DEFAULT_RULES
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_STATE, "rules", DEFAULT_RULES)
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+
+def resolve_pspec(
+    shape: Sequence[int],
+    axes: Sequence[Any],
+    rules: dict[str, tuple[str, ...]],
+    mesh: Mesh,
+) -> PartitionSpec:
+    """Resolve logical axes to a PartitionSpec under divisibility/no-reuse."""
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            entries.append(None)
+            continue
+        if ax not in rules:
+            raise KeyError(f"no sharding rule for logical axis {ax!r}")
+        picked: list[str] = []
+        prod = 1
+        for cand in rules[ax]:
+            if cand in used or cand not in mesh.shape:
+                continue
+            size = mesh.shape[cand]
+            if dim % (prod * size) != 0:
+                continue
+            picked.append(cand)
+            prod *= size
+        used.update(picked)
+        if not picked:
+            entries.append(None)
+        elif len(picked) == 1:
+            entries.append(picked[0])
+        else:
+            entries.append(tuple(picked))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def constrain(x: jax.Array, *axes: Any, rules: dict | None = None) -> jax.Array:
+    """``with_sharding_constraint`` on logical axes; no-op without a mesh.
+
+    Model code calls this at layer boundaries; on single-device CPU tests the
+    global mesh is unset and this returns ``x`` unchanged.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    rules = rules or current_rules()
+    spec = resolve_pspec(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_shardings(spec_tree: Any, mesh: Mesh, rules: dict | None = None) -> Any:
+    """NamedSharding pytree for a ParamSpec tree (for jit in_shardings)."""
+    rules = rules or DEFAULT_RULES
+
+    def one(path, spec: P.ParamSpec):
+        ps = resolve_pspec(spec.shape, spec.axes, rules, mesh)
+        return NamedSharding(mesh, ps)
+
+    return P._map_specs(one, spec_tree)
+
+
+def shardings_like(tree: Any, axes: Any, mesh: Mesh, rules: dict | None = None) -> Any:
+    """NamedSharding pytree for arbitrary (shape/dtype) trees + axes trees.
+
+    ``tree`` is a nested dict whose leaves expose ``.shape``; ``axes`` mirrors
+    it with tuple-of-logical-axis leaves (tuples are leaves here, which is why
+    this is a manual zipper rather than ``jax.tree.map``).
+    """
+    rules = rules or DEFAULT_RULES
+
+    def rec(s, a):
+        if isinstance(s, dict):
+            return {k: rec(s[k], a[k]) for k in s}
+        if s is None:
+            return None
+        return NamedSharding(mesh, resolve_pspec(s.shape, a, rules, mesh))
+
+    return rec(tree, axes)

@@ -1,0 +1,6 @@
+from .fault_tolerance import (  # noqa: F401
+    PreemptionHandler,
+    ResilientExecutor,
+    StragglerMonitor,
+    run_train_loop,
+)

@@ -1,0 +1,165 @@
+"""Fault-tolerance runtime: preemption-safe training, straggler monitoring,
+bounded-retry step execution, and elastic restart.
+
+Designed for the 1000+-node regime where *something is always failing*:
+
+* **Preemption / SIGTERM** → a final synchronous checkpoint before exit
+  (cloud TPU preemptions deliver a grace period; the handler flips a flag
+  the train loop checks each step).
+* **Step retry with escalation** — transient device errors retry the step
+  from the last good state; repeated failure escalates to
+  restore-from-checkpoint (the "restart" in checkpoint/restart).
+* **Straggler mitigation** — per-step wall times feed an EWMA detector; a
+  step slower than ``threshold ×`` the EWMA is logged and counted. On real
+  multi-host deployments the hook triggers workload re-balancing /
+  hot-spare swap; here it is surfaced through ``StragglerMonitor.report()``
+  (and exercised in tests with synthetic delays).
+* **Elastic restart** — on resume, the checkpoint re-shards onto the
+  current mesh (checkpoint/manager.py), so a 512-chip job can continue on
+  256 chips after losing a pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ewma: float
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker with threshold-based straggler detection."""
+
+    def __init__(self, *, alpha: float = 0.1, threshold: float = 2.0, warmup: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ewma: float | None = None
+        self.count = 0
+        self.events: list[StragglerEvent] = []
+
+    def record(self, step: int, duration: float) -> bool:
+        """Returns True if this step is flagged as a straggler."""
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = duration
+            return False
+        flagged = self.count > self.warmup and duration > self.threshold * self.ewma
+        if flagged:
+            self.events.append(StragglerEvent(step, duration, self.ewma))
+        # stragglers don't poison the baseline
+        if not flagged:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * duration
+        return flagged
+
+    def report(self) -> dict:
+        return {
+            "steps": self.count,
+            "ewma_s": self.ewma,
+            "straggler_events": len(self.events),
+        }
+
+
+class PreemptionHandler:
+    """SIGTERM/SIGINT-aware flag; the train loop checkpoints and exits."""
+
+    def __init__(self, install: bool = True):
+        self.requested = False
+        if install:
+            try:
+                signal.signal(signal.SIGTERM, self._on_signal)
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    def _on_signal(self, signum, frame):
+        self.requested = True
+
+    def request(self):  # test / manual hook
+        self.requested = True
+
+
+class ResilientExecutor:
+    """Runs a step function with bounded retry and checkpoint escalation."""
+
+    def __init__(self, *, max_retries: int = 2,
+                 on_restore: Callable[[], Any] | None = None):
+        self.max_retries = max_retries
+        self.on_restore = on_restore
+        self.retries = 0
+        self.restores = 0
+
+    def run(self, step_fn: Callable[[], Any]) -> Any:
+        last_err: Exception | None = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return step_fn()
+            except Exception as e:  # noqa: BLE001 — device errors are dynamic
+                last_err = e
+                self.retries += 1
+        if self.on_restore is not None:
+            self.restores += 1
+            self.on_restore()
+            return step_fn()  # one post-restore attempt; raises if still bad
+        raise last_err  # type: ignore[misc]
+
+
+@dataclasses.dataclass
+class TrainLoopReport:
+    steps_done: int
+    preempted: bool
+    final_step: int
+    straggler: dict
+    losses: list
+
+
+def run_train_loop(
+    *,
+    train_step,
+    params,
+    opt_state,
+    pipeline,
+    ckpt,
+    total_steps: int,
+    start_step: int = 0,
+    checkpoint_every: int = 50,
+    async_save: bool = True,
+    preemption: PreemptionHandler | None = None,
+    monitor: StragglerMonitor | None = None,
+    step_hook: Callable[[int, dict], None] | None = None,
+) -> TrainLoopReport:
+    """Checkpoint/restart-aware training loop (used by launch/train.py and
+    the fault-tolerance integration tests)."""
+    preemption = preemption or PreemptionHandler(install=False)
+    monitor = monitor or StragglerMonitor()
+    losses = []
+    step = start_step
+    while step < total_steps:
+        t0 = time.time()
+        batch = pipeline.next_batch()
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        monitor.record(step, time.time() - t0)
+        step += 1
+        if step_hook:
+            step_hook(step, metrics)
+        if step % checkpoint_every == 0 or preemption.requested or step == total_steps:
+            ckpt.save(
+                step,
+                {"params": params, "opt": opt_state},
+                extra={"pipeline": pipeline.snapshot(), "step": step},
+                blocking=not async_save or preemption.requested,
+            )
+        if preemption.requested:
+            ckpt.wait()
+            return TrainLoopReport(step - start_step, True, step,
+                                   monitor.report(), losses)
+    ckpt.wait()
+    return TrainLoopReport(step - start_step, False, step, monitor.report(), losses)

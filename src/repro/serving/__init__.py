@@ -1,0 +1,1 @@
+from .engine import ServingEngine, Request, generate, init_caches, grow_caches, make_prefill_step, make_serve_step  # noqa: F401

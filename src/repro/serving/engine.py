@@ -1,0 +1,218 @@
+"""Serving engine: packed-ternary prefill + decode with batched requests.
+
+Implements the paper's end-to-end inference flow (Fig. 1): prefill the prompt
+through the fused attention path, then autoregressive decode through the
+decoupled matrix-vector path, weights living 2-bit-packed end to end.
+
+``prefill_step`` / ``serve_step`` are the jit'd entry points the dry-run
+lowers for the ``prefill_*`` / ``decode_*`` / ``long_*`` shapes. The
+``ServingEngine`` adds continuous-batching bookkeeping (slot allocation,
+per-slot positions, EOS retirement) for the runnable examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import params as P
+from ..models import transformer as Tr
+
+
+# ---------------------------------------------------------------------------
+# Pure step functions (jit / dry-run entry points)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg, *, mode: str = "packed"):
+    """prefill_step(params, batch) -> (last_logits [B, V], caches)."""
+
+    def prefill_step(params, batch):
+        logits, _, caches = Tr.forward(params, batch, cfg, None, mode=mode, collect_cache=True)
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg, *, mode: str = "packed"):
+    """serve_step(params, batch, caches, pos) -> (logits [B, V], new caches).
+
+    One new token against a KV cache of ``seq_len`` — the decode_* shapes.
+    """
+
+    def serve_step(params, batch, caches, pos):
+        return Tr.decode_step(params, batch, caches, pos, cfg, mode=mode)
+
+    return serve_step
+
+
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shapes, _ = Tr.cache_specs(cfg, batch, max_len, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def grow_caches(caches, cfg, max_len: int):
+    """Pad prefill caches (length S) out to ``max_len`` along the seq axis."""
+
+    def pad(path_leaf, leaf):
+        name = path_leaf
+        if name in ("k", "v"):
+            pad_n = max_len - leaf.shape[-2]
+            return jnp.pad(leaf, [(0, 0)] * (leaf.ndim - 2) + [(0, pad_n), (0, 0)])
+        if name in ("c_kv", "k_rope"):
+            pad_n = max_len - leaf.shape[-2]
+            return jnp.pad(leaf, [(0, 0)] * (leaf.ndim - 2) + [(0, pad_n), (0, 0)])
+        return leaf
+
+    def rec(tree):
+        return {
+            k: (rec(v) if isinstance(v, dict) else pad(k, v)) for k, v in tree.items()
+        }
+
+    return rec(caches)
+
+
+# ---------------------------------------------------------------------------
+# Batched generation loop (greedy / temperature sampling)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: Any  # [B, T] generated ids
+    prefill_logits: Any
+
+
+def generate(
+    params,
+    cfg,
+    prompts: jax.Array,  # [B, S] token ids (right-aligned, no padding support here)
+    *,
+    steps: int,
+    mode: str = "eval",
+    temperature: float = 0.0,
+    key: jax.Array | None = None,
+) -> GenerationResult:
+    b, s = prompts.shape
+    prefill = make_prefill_step(cfg, mode=mode)
+    serve = make_serve_step(cfg, mode=mode)
+    last_logits, caches = prefill(params, {"tokens": prompts})
+    caches = grow_caches(caches, cfg, s + steps)
+
+    def sample(logits, k):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, logits / temperature, axis=-1).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tok = sample(last_logits, key)
+    out = [tok]
+    pos = jnp.full((b,), s, jnp.int32)
+    for t in range(steps - 1):
+        logits, caches = serve(params, {"tokens": tok[:, None]}, caches, pos)
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub)
+        out.append(tok)
+        pos = pos + 1
+    return GenerationResult(tokens=jnp.stack(out, axis=1), prefill_logits=last_logits)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching scheduler (slot-based)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Any  # np/jnp [S]
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Slot-based continuous batching over the jitted serve_step.
+
+    Fixed B decode slots; finished requests retire their slot, queued
+    requests prefill into free slots. Per-slot position vector drives the
+    causal mask, so heterogeneous sequence lengths coexist in one batch —
+    the batched analogue of the paper's single-stream prefill→decode flow.
+    """
+
+    def __init__(self, params, cfg, *, slots: int = 8, max_len: int = 2048,
+                 mode: str = "eval", eos_id: int = -1):
+        self.params, self.cfg, self.mode = params, cfg, mode
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.caches = init_caches(cfg, slots, max_len, dtype=cfg.dtype)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.live = [None] * slots  # slot -> Request
+        self.cur_tok = jnp.zeros((slots,), jnp.int32)
+        self.queue: list[Request] = []
+        self._serve = jax.jit(make_serve_step(cfg, mode=mode))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        # Single-request prefill, then scatter its caches into the slot.
+        prefill = make_prefill_step(self.cfg, mode=self.mode)
+        logits, caches = prefill(self.params, {"tokens": req.prompt[None]})
+        caches = grow_caches(caches, self.cfg, self.max_len)
+
+        # generic per-leaf scatter on the batch axis
+        def rec(dst, src):
+            if isinstance(dst, dict):
+                return {k: rec(dst[k], src[k]) for k in dst}
+            idx = [slice(None)] * dst.ndim
+            # batch axis: first axis where dst == slots and src == 1
+            for ax in range(dst.ndim):
+                if dst.shape[ax] == self.slots and src.shape[ax] == 1:
+                    idx[ax] = slice(slot, slot + 1)
+                    break
+            return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+
+        self.caches = rec(self.caches, caches)
+        self.pos = self.pos.at[slot].set(req.prompt.shape[0])
+        tok = int(jnp.argmax(logits[0]))
+        req.generated.append(tok)
+        self.cur_tok = self.cur_tok.at[slot].set(tok)
+        self.live[slot] = req
+
+    def step(self):
+        """One scheduler tick: fill free slots, run one batched decode step."""
+        for slot in range(self.slots):
+            if self.live[slot] is None and self.queue:
+                self._prefill_slot(slot, self.queue.pop(0))
+        if all(r is None for r in self.live):
+            return False
+        logits, self.caches = self._serve(
+            self.params, {"tokens": self.cur_tok[:, None]}, self.caches, self.pos
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.pos = self.pos + jnp.array(
+            [1 if r is not None else 0 for r in self.live], jnp.int32
+        )
+        self.cur_tok = next_tok
+        for slot, req in enumerate(self.live):
+            if req is None:
+                continue
+            tok = int(next_tok[slot])
+            req.generated.append(tok)
+            if tok == self.eos_id or len(req.generated) >= req.max_new or int(
+                self.pos[slot]
+            ) >= self.max_len - 1:
+                req.done = True
+                self.live[slot] = None
+        return True
+
+    def run(self):
+        while self.queue or any(r is not None for r in self.live):
+            if not self.step():
+                break

@@ -1,0 +1,1 @@
+from .step import make_train_step, train_shardings, batch_specs, batch_axes, abstract_opt_state  # noqa: F401

@@ -1,0 +1,22 @@
+import os
+import sys
+
+# Smoke tests and benches see the single real CPU device — the 512-device
+# override belongs exclusively to launch/dryrun.py (see system design note).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,77 @@
+"""Checkpointing: round trips, atomicity, async, elastic re-shard."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "blocks": {"w": jax.random.normal(k, (4, 8, 8)), "b": jnp.zeros((8,))},
+        "head": {"w": jax.random.normal(jax.random.fold_in(k, 1), (8, 16))},
+    }
+
+
+class TestRoundTrip:
+    def test_save_restore(self, tmp_path):
+        ckpt = CheckpointManager(str(tmp_path))
+        t = _tree()
+        ckpt.save(10, {"params": t}, extra={"pipeline": {"step": 10}})
+        trees, extra = ckpt.restore(10)
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(trees["params"])):
+            np.testing.assert_array_equal(np.array(a), np.array(b))
+        assert extra["pipeline"]["step"] == 10
+
+    def test_latest_step_and_gc(self, tmp_path):
+        ckpt = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            ckpt.save(s, {"params": {"w": jnp.ones(3) * s}})
+        assert ckpt.latest_step() == 4
+        assert ckpt.all_steps() == [3, 4]  # older GC'd
+
+    def test_async_save(self, tmp_path):
+        ckpt = CheckpointManager(str(tmp_path))
+        ckpt.save(5, {"params": _tree()}, blocking=False)
+        ckpt.wait()
+        assert ckpt.latest_step() == 5
+
+    def test_atomicity_no_partial_dirs(self, tmp_path):
+        ckpt = CheckpointManager(str(tmp_path))
+        ckpt.save(7, {"params": _tree()})
+        for d in os.listdir(tmp_path):
+            assert not d.startswith(".tmp")
+
+    def test_dtype_preserved(self, tmp_path):
+        ckpt = CheckpointManager(str(tmp_path))
+        t = {"w": jnp.ones((4,), jnp.bfloat16), "s": jnp.int32(3)}
+        ckpt.save(1, {"params": t})
+        trees, _ = ckpt.restore(1)
+        assert trees["params"]["w"].dtype == np.dtype("bfloat16") or str(
+            trees["params"]["w"].dtype
+        ) == "bfloat16"
+
+
+class TestElasticReshard:
+    """Restore onto a different mesh than the checkpoint was saved from."""
+
+    def test_reshard_to_new_mesh(self, tmp_path):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        ckpt = CheckpointManager(str(tmp_path))
+        t = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 8))}
+        ckpt.save(1, {"params": t})
+        # "new job" mesh: 1 device (the degenerate elastic case on CPU — the
+        # reshard path is identical for any device count)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        sh = {"params": {"w": NamedSharding(mesh, PartitionSpec("data", None))}}
+        trees, _ = ckpt.restore(1, shardings=sh)
+        assert trees["params"]["w"].sharding.is_equivalent_to(
+            sh["params"]["w"], trees["params"]["w"].ndim
+        )
+        np.testing.assert_array_equal(np.array(trees["params"]["w"]), np.array(t["w"]))

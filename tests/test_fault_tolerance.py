@@ -1,0 +1,171 @@
+"""Fault-tolerance runtime: stragglers, retries, preemption, restart."""
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    PreemptionHandler,
+    ResilientExecutor,
+    StragglerMonitor,
+    run_train_loop,
+)
+from repro.runtime.fault_tolerance import TrainLoopReport
+
+
+class TestStragglerMonitor:
+    def test_flags_slow_steps(self):
+        m = StragglerMonitor(alpha=0.5, threshold=2.0, warmup=2)
+        for i in range(10):
+            m.record(i, 1.0)
+        assert m.record(10, 5.0) is True
+        assert len(m.events) == 1
+        assert m.report()["straggler_events"] == 1
+
+    def test_straggler_does_not_poison_baseline(self):
+        m = StragglerMonitor(alpha=0.5, threshold=2.0, warmup=1)
+        for i in range(5):
+            m.record(i, 1.0)
+        m.record(5, 100.0)
+        assert m.ewma < 2.0
+
+    def test_no_flags_during_warmup(self):
+        m = StragglerMonitor(warmup=10)
+        assert not any(m.record(i, float(1 + 10 * (i == 3))) for i in range(5))
+
+
+class TestResilientExecutor:
+    def test_retries_transient_failures(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError("transient device error")
+            return "ok"
+
+        ex = ResilientExecutor(max_retries=3)
+        assert ex.run(flaky) == "ok"
+        assert ex.retries == 2
+
+    def test_escalates_to_restore(self):
+        state = {"restored": False, "n": 0}
+
+        def bad_until_restore():
+            state["n"] += 1
+            if not state["restored"]:
+                raise RuntimeError("wedged")
+            return "recovered"
+
+        def restore():
+            state["restored"] = True
+
+        ex = ResilientExecutor(max_retries=1, on_restore=restore)
+        assert ex.run(bad_until_restore) == "recovered"
+        assert ex.restores == 1
+
+    def test_raises_after_exhaustion(self):
+        ex = ResilientExecutor(max_retries=1)
+        with pytest.raises(ValueError):
+            ex.run(lambda: (_ for _ in ()).throw(ValueError("fatal")))
+
+
+class _FakePipe:
+    def __init__(self):
+        self.step = 0
+
+    def next_batch(self):
+        self.step += 1
+        return {"x": self.step}
+
+    def snapshot(self):
+        return {"step": self.step}
+
+    def restore(self, s):
+        self.step = s["step"]
+
+
+class _FakeCkpt:
+    def __init__(self):
+        self.saves = []
+
+    def save(self, step, trees, extra=None, blocking=True):
+        self.saves.append((step, extra, blocking))
+
+    def wait(self):
+        pass
+
+
+class TestTrainLoop:
+    def _step(self, params, opt, batch):
+        return params + 1, opt, {"loss": 1.0 / (params + 1)}
+
+    def test_checkpoints_on_schedule(self):
+        ckpt = _FakeCkpt()
+        rep = run_train_loop(
+            train_step=self._step, params=0, opt_state=0, pipeline=_FakePipe(),
+            ckpt=ckpt, total_steps=10, checkpoint_every=4,
+        )
+        assert isinstance(rep, TrainLoopReport)
+        assert [s for s, _, _ in ckpt.saves] == [4, 8, 10]
+        assert not rep.preempted
+
+    def test_preemption_checkpoints_and_exits(self):
+        ckpt = _FakeCkpt()
+        pre = PreemptionHandler(install=False)
+
+        def hook(step, metrics):
+            if step == 3:
+                pre.request()
+
+        rep = run_train_loop(
+            train_step=self._step, params=0, opt_state=0, pipeline=_FakePipe(),
+            ckpt=ckpt, total_steps=100, checkpoint_every=50, preemption=pre,
+            step_hook=hook,
+        )
+        assert rep.preempted and rep.final_step == 3
+        # final save is synchronous (blocking=True) under preemption
+        assert ckpt.saves[-1][0] == 3 and ckpt.saves[-1][2] is True
+
+    def test_restart_resumes_exactly(self, tmp_path):
+        """Full restart integration: loop → preempt → restore → identical
+        data order and step count as an uninterrupted run."""
+        from repro.checkpoint import CheckpointManager
+        from repro.data import DataPipeline
+
+        seen_a = []
+
+        def step_record(params, opt, batch):
+            seen_a.append(batch["tokens"][0, 0])
+            return params, opt, {"loss": 0.0}
+
+        pipe = DataPipeline(100, 8, 2)
+        ck = CheckpointManager(str(tmp_path))
+        run_train_loop(train_step=step_record, params=np.zeros(1), opt_state=np.zeros(1),
+                       pipeline=pipe, ckpt=ck, total_steps=6, checkpoint_every=3)
+
+        # interrupted twin
+        seen_b = []
+
+        def step_record_b(params, opt, batch):
+            seen_b.append(batch["tokens"][0, 0])
+            return params, opt, {"loss": 0.0}
+
+        pipe2 = DataPipeline(100, 8, 2)
+        ck2 = CheckpointManager(str(tmp_path / "b"))
+        pre = PreemptionHandler(install=False)
+
+        def hook(step, m):
+            if step == 3:
+                pre.request()
+
+        run_train_loop(train_step=step_record_b, params=np.zeros(1),
+                       opt_state=np.zeros(1), pipeline=pipe2, ckpt=ck2, total_steps=6,
+                       checkpoint_every=3, preemption=pre, step_hook=hook)
+        # resume
+        trees, extra = ck2.restore(ck2.latest_step())
+        pipe3 = DataPipeline(100, 8, 2)
+        pipe3.restore(extra["pipeline"])
+        run_train_loop(train_step=step_record_b, params=np.zeros(1),
+                       opt_state=np.zeros(1), pipeline=pipe3, ckpt=ck2,
+                       total_steps=6, start_step=extra["step"], checkpoint_every=3)
+        assert seen_b == seen_a

@@ -1,0 +1,257 @@
+"""Layer-level correctness: attention paths, mamba, rwkv, moe, mla."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import params as P
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.models import attention as A
+from repro.models import mamba as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import rwkv as R
+
+
+class TestPrefillAttention:
+    @pytest.mark.parametrize("h,hk", [(4, 4), (4, 2), (8, 2)])
+    def test_gqa_matches_reference(self, h, hk):
+        b, s, d = 2, 128, 32
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, hk, s, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, hk, s, d))
+        got = A.prefill_attention(q, k, v)
+        want = fa_ref.mha_reference(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-3, atol=2e-3)
+
+    def test_window_and_chunks(self):
+        b, h, s, d = 1, 2, 256, 16
+        q = jax.random.normal(jax.random.PRNGKey(3), (b, h, s, d))
+        k = jax.random.normal(jax.random.PRNGKey(4), (b, h, s, d))
+        v = jax.random.normal(jax.random.PRNGKey(5), (b, h, s, d))
+        for q_chunks in (1, 4, 8):
+            got = A.prefill_attention(q, k, v, window=48, q_chunks=q_chunks)
+            want = fa_ref.mha_reference(q, k, v, window=48)
+            np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-3,
+                                       atol=2e-3)
+
+    def test_mixed_v_dim(self):
+        """MLA-style: v head dim differs from qk head dim."""
+        b, h, s, d, dv = 1, 2, 64, 24, 16
+        q = jax.random.normal(jax.random.PRNGKey(6), (b, h, s, d))
+        k = jax.random.normal(jax.random.PRNGKey(7), (b, h, s, d))
+        v = jax.random.normal(jax.random.PRNGKey(8), (b, h, s, dv))
+        out = A.prefill_attention(q, k, v)
+        assert out.shape == (b, h, s, dv)
+
+
+class TestDecodeAttention:
+    def test_matches_last_row_of_prefill(self):
+        b, h, hk, s, d = 2, 4, 2, 96, 16
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, hk, s, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, hk, s, d))
+        full = fa_ref.mha_reference(q, k, v)
+        got = A.decode_attention(q[:, :, -1], k, v, jnp.full((b,), s - 1))
+        np.testing.assert_allclose(np.array(got), np.array(full[:, :, -1]),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_scalar_and_vector_pos_agree(self):
+        b, h, s, d = 2, 2, 64, 16
+        q = jax.random.normal(jax.random.PRNGKey(3), (b, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(4), (b, h, s, d))
+        v = jax.random.normal(jax.random.PRNGKey(5), (b, h, s, d))
+        a = A.decode_attention(q, k, v, jnp.int32(40))
+        bvec = A.decode_attention(q, k, v, jnp.full((b,), 40))
+        np.testing.assert_allclose(np.array(a), np.array(bvec), rtol=1e-6)
+
+    def test_cache_update_scalar_vs_vector(self):
+        b, hk, s, d = 2, 2, 32, 8
+        kc = jnp.zeros((b, hk, s, d))
+        vc = jnp.zeros((b, hk, s, d))
+        kn = jax.random.normal(jax.random.PRNGKey(6), (b, hk, d))
+        vn = jax.random.normal(jax.random.PRNGKey(7), (b, hk, d))
+        k1, v1 = A.update_kv_cache(kc, vc, kn, vn, jnp.int32(5))
+        k2, v2 = A.update_kv_cache(kc, vc, kn, vn, jnp.full((b,), 5))
+        np.testing.assert_allclose(np.array(k1), np.array(k2), rtol=1e-6)
+        np.testing.assert_allclose(np.array(v1), np.array(v2), rtol=1e-6)
+        np.testing.assert_allclose(np.array(k1[:, :, 5]), np.array(kn), rtol=1e-6)
+        assert float(jnp.abs(k1[:, :, 6:]).max()) == 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class _MambaCfg:
+    d_model: int = 32
+    mamba_expand: int = 2
+    mamba_d_state: int = 8
+    mamba_d_conv: int = 4
+    norm_eps: float = 1e-5
+
+
+class TestMamba:
+    def test_chunked_equals_sequential(self):
+        cfg = _MambaCfg()
+        params = P.init_params(M.mamba_spec(cfg), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+        y_par, state_par = M.mamba_prefill(params, x, cfg, chunk=16)
+        st = M.mamba_init_state(cfg, 2)
+        st = {"ssm": st["ssm"], "conv": st["conv"].astype(jnp.float32)}
+        ys = []
+        for t in range(64):
+            yt, st = M.mamba_decode(params, x[:, t : t + 1], cfg, st, mode="train")
+            ys.append(yt)
+        y_seq = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.array(y_par), np.array(y_seq), atol=1e-4)
+        np.testing.assert_allclose(np.array(state_par["ssm"]), np.array(st["ssm"]),
+                                   atol=1e-4)
+        # conv handoff state must match the sequential one
+        np.testing.assert_allclose(np.array(state_par["conv"], np.float32),
+                                   np.array(st["conv"], np.float32), atol=1e-4)
+
+    def test_prefill_then_decode_continues(self):
+        cfg = _MambaCfg()
+        params = P.init_params(M.mamba_spec(cfg), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 24, cfg.d_model)) * 0.5
+        y_full, _ = M.mamba_prefill(params, x, cfg, chunk=8)
+        y_pre, st = M.mamba_prefill(params, x[:, :16], cfg, chunk=8)
+        st = {"ssm": st["ssm"], "conv": st["conv"].astype(jnp.float32)}
+        outs = []
+        for t in range(16, 24):
+            yt, st = M.mamba_decode(params, x[:, t : t + 1], cfg, st, mode="train")
+            outs.append(yt)
+        np.testing.assert_allclose(
+            np.array(jnp.concatenate(outs, axis=1)), np.array(y_full[:, 16:]), atol=1e-4
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class _RwkvCfg:
+    d_model: int = 64
+    d_ff: int = 128
+    rwkv_head_dim: int = 16
+    norm_eps: float = 1e-5
+
+
+class TestRwkv:
+    def test_chunked_wkv_equals_sequential(self):
+        cfg = _RwkvCfg()
+        params = P.init_params(R.rwkv_spec(cfg), jax.random.PRNGKey(0))
+        B, S = 2, 48
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+        st = R.rwkv_init_state(cfg, B, dtype=jnp.float32)
+        y_par, _, sN = R.time_mix(params["time"], x, st["x_time"], st["wkv"], cfg,
+                                  chunk=16)
+        state = {"wkv": st["wkv"], "x_time": st["x_time"]}
+        ys = []
+        for t in range(S):
+            yt, state = R.time_mix_decode(params["time"], x[:, t : t + 1], state, cfg,
+                                          mode="train")
+            ys.append(yt)
+        y_seq = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.array(y_par), np.array(y_seq), atol=2e-3)
+        np.testing.assert_allclose(np.array(sN), np.array(state["wkv"]), atol=2e-3)
+
+    def test_decay_is_data_dependent(self):
+        """Finch's defining feature: decay varies with the input."""
+        cfg = _RwkvCfg()
+        params = P.init_params(R.rwkv_spec(cfg), jax.random.PRNGKey(0))
+        x1 = jnp.ones((1, 4, cfg.d_model)) * 0.5
+        x2 = -x1
+        d1 = R._decay(params["time"], x1)
+        d2 = R._decay(params["time"], x2)
+        assert float(jnp.abs(d1 - d2).max()) > 1e-6
+        assert float(d1.max()) < 0  # log-decay always negative
+
+    def test_channel_mix_shift(self):
+        cfg = _RwkvCfg()
+        params = P.init_params(R.rwkv_spec(cfg), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, cfg.d_model))
+        xp = jnp.zeros((1, 1, cfg.d_model))
+        full, _ = R.channel_mix(params["channel"], x, xp)
+        one, _ = R.channel_mix_decode(params["channel"], x[:, :1], xp, mode="train")
+        np.testing.assert_allclose(np.array(full[:, :1]), np.array(one), rtol=1e-5,
+                                   atol=1e-6)
+
+
+class TestMoE:
+    def _setup(self, e=8, k=2, dim=32, ff=16):
+        spec = MOE.moe_spec(dim, ff, e)
+        params = P.init_params(spec, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, dim))
+        return params, x
+
+    def test_output_shape_and_finite(self):
+        params, x = self._setup()
+        out, aux = MOE.moe_ffn(params, x, top_k=2)
+        assert out.shape == x.shape
+        assert np.isfinite(np.array(out)).all()
+        assert float(aux) > 0
+
+    def test_dropless_capacity_is_deterministic_route(self):
+        """With capacity >= group size no tokens drop: output invariant to
+        unrelated batch rows (routing independence)."""
+        params, x = self._setup()
+        out1, _ = MOE.moe_ffn(params, x, top_k=2, capacity_factor=8.0)
+        x2 = x.at[1].set(jax.random.normal(jax.random.PRNGKey(9), x[1].shape))
+        out2, _ = MOE.moe_ffn(params, x2, top_k=2, capacity_factor=8.0)
+        np.testing.assert_allclose(np.array(out1[0]), np.array(out2[0]), atol=1e-5)
+
+    def test_capacity_drops_tokens(self):
+        params, x = self._setup()
+        full, _ = MOE.moe_ffn(params, x, top_k=2, capacity_factor=8.0)
+        tight, _ = MOE.moe_ffn(params, x, top_k=2, capacity_factor=0.25)
+        assert float(jnp.abs(full - tight).max()) > 1e-4
+
+    def test_aux_loss_balanced_router_is_lower(self):
+        params, x = self._setup()
+        # uniform router -> aux == 1 (perfect balance) ; skewed -> higher
+        e = params["router"]["w"].shape[1]
+        probs_uniform = jnp.ones((1, 64, e)) / e
+        onehot = jax.nn.one_hot(jnp.arange(64) % e, e)[None]
+        aux_u = MOE._aux_loss(probs_uniform, onehot[:, :, None, :])
+        skew = jax.nn.one_hot(jnp.zeros(64, jnp.int32), e)[None]
+        aux_s = MOE._aux_loss(skew * 0.99 + 0.01 / e, skew[:, :, None, :])
+        assert float(aux_s) > float(aux_u)
+
+    def test_modes_agree(self):
+        params, x = self._setup()
+        from repro.models.transformer import pack_tree
+
+        o_train, _ = MOE.moe_ffn(params, x, top_k=2, capacity_factor=8.0, mode="train")
+        o_eval, _ = MOE.moe_ffn(params, x, top_k=2, capacity_factor=8.0, mode="eval")
+        np.testing.assert_allclose(np.array(o_train), np.array(o_eval), rtol=1e-3,
+                                   atol=1e-3)
+
+
+class TestMLA:
+    def test_absorbed_decode_matches_prefill_row(self):
+        cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+        spec = MLA.mla_spec(cfg)
+        params = P.init_params(spec, jax.random.PRNGKey(0))
+        B, S = 2, 24
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        out_full, cache = MLA.mla_prefill(params, x, cfg, positions, mode="wq")
+        # decode the last token with the absorbed path, cache holding < S
+        out_pre, cache_pre = MLA.mla_prefill(params, x[:, : S - 1], cfg,
+                                             positions[:, : S - 1], mode="wq")
+        cache_pre = {
+            "c_kv": jnp.pad(cache_pre["c_kv"], ((0, 0), (0, 1), (0, 0))),
+            "k_rope": jnp.pad(cache_pre["k_rope"], ((0, 0), (0, 1), (0, 0))),
+        }
+        out_dec, _ = MLA.mla_decode(params, x[:, S - 1 :], cfg, cache_pre,
+                                    jnp.int32(S - 1), mode="wq")
+        np.testing.assert_allclose(np.array(out_dec[:, 0]), np.array(out_full[:, -1]),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_cache_is_compressed(self):
+        """The MLA selling point: latent cache ≪ full KV."""
+        cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+        full_kv = 2 * cfg.n_heads * cfg.head_dim
+        latent = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        assert latent < full_kv / 1.5

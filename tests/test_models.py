@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and finiteness (deliverable f)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, get_parallel_config, list_archs
+from repro.core import params as P
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, apply_updates, init_state
+
+ALL_ARCHS = [
+    "musicgen-medium", "internvl2-26b", "deepseek-v2-lite-16b", "arctic-480b",
+    "granite-8b", "llama3-405b", "gemma2-27b", "internlm2-20b",
+    "jamba-v0.1-52b", "rwkv6-3b", "tellme-0.7b",
+]
+
+
+def _batch(cfg, b, s, key=1):
+    k = jax.random.PRNGKey(key)
+    if cfg.frontend != "none":
+        return {
+            "embeddings": jax.random.normal(k, (b, s, T.FRONTEND_DIMS[cfg.frontend]),
+                                            jnp.float32),
+            "labels": jax.random.randint(k, (b, s), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(k, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k, (b, s), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_config(arch, smoke=True)
+        params = P.init_params(T.param_specs(cfg), jax.random.PRNGKey(0))
+        B, S = 2, 32
+        logits, aux, _ = T.forward(params, _batch(cfg, B, S), cfg, mode="train")
+        assert logits.shape == (B, S, cfg.padded_vocab)
+        assert np.isfinite(np.array(logits)).all()
+
+    def test_train_step_reduces_loss_direction(self, arch):
+        """One SGD-flavoured AdamW step on a fixed batch must not blow up and
+        the loss must be finite before and after."""
+        cfg = get_config(arch, smoke=True)
+        specs = T.param_specs(cfg)
+        params = P.init_params(specs, jax.random.PRNGKey(0))
+        batch = _batch(cfg, 2, 16)
+        opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+        opt = init_state(params, opt_cfg)
+
+        def loss_fn(p):
+            return T.loss_fn(p, batch, cfg, mode="train")[0]
+
+        l0, grads = jax.value_and_grad(loss_fn)(params)
+        params2, opt, m = apply_updates(params, grads, opt, opt_cfg)
+        l1 = loss_fn(params2)
+        assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+        assert float(m["grad_norm"]) > 0
+
+    def test_full_config_matches_assignment(self, arch):
+        """The registered full config carries the exact public hparams."""
+        cfg = get_config(arch, smoke=False)
+        expect = {
+            "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+            "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+            "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+            "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+            "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+            "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+            "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+            "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+            "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+            "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+            "tellme-0.7b": (24, 1536, 16, 16, 4096, 32000),
+        }[arch]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+               cfg.vocab_size)
+        assert got == expect
+
+
+class TestConfigSystem:
+    def test_all_archs_registered(self):
+        archs = list_archs()
+        for a in ALL_ARCHS:
+            assert a in archs
+
+    def test_param_count_estimates(self):
+        # sanity: estimates land within ~25% of the nameplate sizes
+        approx = {
+            "granite-8b": 8e9,
+            "llama3-405b": 405e9,
+            "gemma2-27b": 27e9,
+            "internlm2-20b": 20e9,
+            "arctic-480b": 480e9,
+        }
+        for arch, expect in approx.items():
+            est = get_config(arch).param_count_estimate()
+            assert 0.7 * expect < est < 1.35 * expect, (arch, est)
+
+    def test_moe_active_params_smaller(self):
+        for arch in ("arctic-480b", "deepseek-v2-lite-16b", "jamba-v0.1-52b"):
+            cfg = get_config(arch)
+            assert cfg.active_param_count_estimate() < 0.5 * cfg.param_count_estimate()
+
+    def test_padded_vocab_divisible(self):
+        for arch in ALL_ARCHS:
+            cfg = get_config(arch)
+            assert cfg.padded_vocab % 256 == 0
+            assert cfg.padded_vocab >= cfg.vocab_size
+
+    def test_parallel_defaults(self):
+        pc = get_parallel_config("llama3-405b", "train_4k")
+        assert pc.fsdp_pod and pc.seq_shard and pc.microbatches >= 4
+        pc = get_parallel_config("rwkv6-3b", "decode_32k")
+        assert pc.microbatches == 1
+
+    def test_sub_quadratic_flags(self):
+        assert get_config("rwkv6-3b").sub_quadratic
+        assert get_config("jamba-v0.1-52b").sub_quadratic
+        assert not get_config("llama3-405b").sub_quadratic
+        assert not get_config("gemma2-27b").sub_quadratic  # global layers remain
+
+
+class TestBlockPlan:
+    def test_jamba_interleave(self):
+        cfg = get_config("jamba-v0.1-52b")
+        prelude, period, n = T.block_plan(cfg)
+        assert len(period) == 8 and n == 4 and not prelude
+        assert [k.mixer for k in period].count("attn") == 1  # 1:7 ratio
+        assert [k.ffn for k in period].count("moe") == 4  # every 2nd layer
+
+    def test_gemma_local_global(self):
+        cfg = get_config("gemma2-27b")
+        _, period, n = T.block_plan(cfg)
+        assert [k.local for k in period] == [True, False] and n == 23
+
+    def test_deepseek_first_dense(self):
+        cfg = get_config("deepseek-v2-lite-16b")
+        prelude, period, n = T.block_plan(cfg)
+        assert len(prelude) == 1 and prelude[0].ffn == "dense"
+        assert period[0].ffn == "moe_shared" and n == 26
+
+    def test_rwkv_attention_free(self):
+        cfg = get_config("rwkv6-3b")
+        _, period, _ = T.block_plan(cfg)
+        assert period[0].mixer == "rwkv"

@@ -1,0 +1,124 @@
+"""Core ternary quantization: round trips, STE, train/serve consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing as P
+from repro.core import ternary as T
+from repro.core import bitlinear as BL
+
+
+class TestTernarize:
+    def test_values_in_range(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        w_t, scale = T.ternarize(w)
+        assert set(np.unique(np.array(w_t))) <= {-1, 0, 1}
+        assert float(scale) > 0
+
+    def test_scale_is_absmean(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 128))
+        _, scale = T.ternarize(w)
+        np.testing.assert_allclose(float(scale), float(jnp.mean(jnp.abs(w))), rtol=1e-6)
+
+    def test_ste_value_matches_hard_quant(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+        w_t, s = T.ternarize(w)
+        np.testing.assert_allclose(
+            np.array(T.ternarize_ste(w)), np.array(w_t, np.float32) * float(s), rtol=1e-6
+        )
+
+    def test_ste_gradient_is_identity(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (16, 8))
+        g = jax.grad(lambda w: (T.ternarize_ste(w) * 2.0).sum())(w)
+        # STE passes gradients through (absmean scale contributes a small
+        # correction; the bulk must be the upstream gradient).
+        assert np.abs(np.array(g)).mean() > 0.5
+
+    def test_act_quant_roundtrip_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (8, 100)) * 5
+        x_i8, s = T.quantize_act(x)
+        err = np.abs(np.array(x_i8, np.float32) * np.array(s) - np.array(x))
+        assert err.max() <= float(s.max()) * 0.5 + 1e-6
+
+
+class TestPacking:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+    @settings(max_examples=25, deadline=None)
+    def test_pack2_roundtrip(self, seed, kdiv):
+        rng = np.random.default_rng(seed)
+        w = rng.integers(-1, 2, size=(16, kdiv * 4)).astype(np.int8)
+        got = np.array(P.unpack2(P.pack2(jnp.asarray(w))))
+        np.testing.assert_array_equal(got, w)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_pack_b3_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.integers(-1, 2, size=(20, 8)).astype(np.int8)
+        got = np.array(P.unpack_b3(P.pack_b3(jnp.asarray(w))))
+        np.testing.assert_array_equal(got, w)
+
+    def test_pack_b3_density(self):
+        # base-3 packing stores 5 trits/byte = 1.6 bits/weight
+        w = jnp.zeros((400, 8), jnp.int8)
+        assert P.pack_b3(w).shape == (80, 8)
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([2, 3, 4]))
+    @settings(max_examples=25, deadline=None)
+    def test_group_encode_roundtrip(self, seed, g):
+        rng = np.random.default_rng(seed)
+        w = rng.integers(-1, 2, size=(g * 7, 5)).astype(np.int8)
+        idx = P.encode_groups(jnp.asarray(w), g)
+        assert int(idx.max()) < 3**g
+        np.testing.assert_array_equal(np.array(P.decode_groups(idx, g)), w)
+
+    def test_combo_matrix_is_decode_table(self):
+        g = 3
+        c = np.array(P.combo_matrix(g))
+        assert c.shape == (3, 27)
+        # column j must decode index j
+        for j in [0, 1, 13, 26]:
+            digits = [(j // 3**i) % 3 - 1 for i in range(g)]
+            np.testing.assert_array_equal(c[:, j], digits)
+
+
+class TestQuantConsistency:
+    """The invariant tying QAT to serving (DESIGN.md §8)."""
+
+    def test_train_forward_equals_int_path(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (4, 60))
+        w = jax.random.normal(jax.random.PRNGKey(1), (60, 24))
+        qat = T.fake_quant_matmul(x, w)
+        w_t, ws = T.ternarize(w)
+        x_i8, xs = T.quantize_act(x)
+        intp = T.ternary_matmul_ref(x_i8, xs, w_t, ws)
+        np.testing.assert_allclose(np.array(qat), np.array(intp), rtol=1e-5, atol=1e-5)
+
+    def test_bitlinear_modes_agree(self):
+        spec = BL.spec(64, 32, ("embed", "mlp"))
+        w = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+        x = jax.random.normal(jax.random.PRNGKey(3), (5, 64))
+        params = {"w": w}
+        packed = BL.pack_params(w)
+        y_train = BL.apply(params, x, mode="train")
+        y_eval = BL.apply(params, x, mode="eval")
+        y_packed = BL.apply(packed, x, mode="packed")
+        np.testing.assert_allclose(np.array(y_eval), np.array(y_packed), rtol=1e-6)
+        np.testing.assert_allclose(np.array(y_train), np.array(y_eval), rtol=1e-4, atol=1e-4)
+
+    def test_material_weight_consistency(self):
+        w = jax.random.normal(jax.random.PRNGKey(4), (32, 16))
+        packed = BL.pack_params(w)
+        m_eval = BL.material_weight({"w": w}, mode="eval", dtype=jnp.float32)
+        m_packed = BL.material_weight(packed, mode="packed", dtype=jnp.float32)
+        np.testing.assert_allclose(np.array(m_eval), np.array(m_packed), rtol=1e-6)
+
+    def test_compression_ratio(self):
+        w = jax.random.normal(jax.random.PRNGKey(5), (1024, 1024))
+        packed = BL.pack_params(w)
+        ratio = w.size * 4 / (packed["wp"].size * 1)
+        assert ratio == 16.0  # fp32 -> 2 bit

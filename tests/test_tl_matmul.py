@@ -1,0 +1,75 @@
+"""Faithful TeLLMe Algorithm 1 (table-lookup matmul) — bit-exactness + the
+paper's Table I resource-model ablation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing as P
+from repro.core import ternary as T
+from repro.core import tl_matmul as TL
+
+
+class TestAlgorithm1:
+    @pytest.mark.parametrize("g", [2, 3, 4])
+    @pytest.mark.parametrize("shape", [(1, 24, 16), (4, 60, 32), (7, 96, 40)])
+    def test_bit_exact_vs_dense(self, g, shape):
+        m, n, k = shape
+        n -= n % g
+        key = jax.random.PRNGKey(g * 100 + m)
+        w_t, _ = T.ternarize(jax.random.normal(key, (n, k)))
+        x_i8, _ = T.quantize_act(jax.random.normal(jax.random.PRNGKey(1), (m, n)))
+        w_idx = TL.preprocess_weights(w_t, g=g)
+        dense = jnp.matmul(x_i8.astype(jnp.int32), w_t.astype(jnp.int32))
+        tl = TL.tl_matmul_int(x_i8, w_idx, g=g)
+        np.testing.assert_array_equal(np.array(tl), np.array(dense))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_bit_exact_property(self, seed):
+        rng = np.random.default_rng(seed)
+        m, t, k = int(rng.integers(1, 6)), int(rng.integers(2, 30)), int(rng.integers(1, 24))
+        g = 3
+        w = rng.integers(-1, 2, size=(t * g, k)).astype(np.int8)
+        x = rng.integers(-127, 128, size=(m, t * g)).astype(np.int8)
+        w_idx = TL.preprocess_weights(jnp.asarray(w), g=g)
+        dense = x.astype(np.int64) @ w.astype(np.int64)
+        tl = np.array(TL.tl_matmul_int(jnp.asarray(x), w_idx, g=g))
+        np.testing.assert_array_equal(tl, dense)
+
+    def test_dequantized_matches_ref(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (60, 20))
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 60))
+        w_t, ws = T.ternarize(w)
+        x_i8, xs = T.quantize_act(x)
+        ref = T.ternary_matmul_ref(x_i8, xs, w_t, ws)
+        tl = TL.tl_matmul(x_i8, xs, TL.preprocess_weights(w_t), ws)
+        np.testing.assert_allclose(np.array(tl), np.array(ref), rtol=1e-5)
+
+    def test_table_count(self):
+        assert TL.table_count(96, 3) == 32  # paper's T=32 config at N=96
+
+
+class TestTableICostModel:
+    """Paper Table I: TL < naive < partial storage at (G=3, T=32, Q=16)."""
+
+    def test_reproduces_paper_numbers(self):
+        m = TL.lut_cost_model(3, 32, 16)
+        assert round(m["tl"]) in range(52000, 52200)
+        assert round(m["naive"]) in range(59900, 60100)
+        assert round(m["partial"]) in range(61200, 61400)
+
+    def test_ordering_is_stable_nearby(self):
+        # the design choice holds across the nearby design space
+        for g in (2, 3):
+            for t in (16, 32, 64):
+                m = TL.lut_cost_model(g, t, 16)
+                assert m["tl"] < m["partial"], (g, t)
+
+    def test_large_g_flips_tradeoff(self):
+        # 3^G table growth eventually dominates — the reason the paper
+        # stops at G=3 (27-entry tables).
+        m = TL.lut_cost_model(6, 32, 16)
+        assert m["tl"] > m["naive"]
