@@ -1,0 +1,84 @@
+"""Decode fast path: tokens/s vs context length, frontier skipping vs dense.
+
+Three measurements:
+
+1. **Frontier-skipping schedule** — analytic kv-block counts for the fused
+   decode-attention kernel (``schedule_blocks``): blocks actually run at a
+   given live position vs the dense schedule's ``max_len/bkv``, i.e. decode
+   attention cost tracking the *live* context length rather than the padded
+   cache — the decode analogue of bench_attention_schedule's Table II rows.
+2. **Device-resident generate throughput** — wall-clock tokens/s of the
+   ``lax.scan`` serving loop at smoke scale, packed vs eval weight paths,
+   across prompt lengths (relative shape; CPU absolute numbers are not the
+   paper's KV260 ones).
+3. **Decode GEMV weight stream** — bytes/weight of the small-M packed path
+   vs the dequantized eval path (the 2-bit streaming claim, paper §III-C).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import params as P
+from repro.kernels.decode_attention import ops as da_ops
+from repro.models import transformer as T
+from repro.serving import engine as E
+
+
+def generate_tokens_per_s(cfg, params, *, batch: int, prompt_len: int, steps: int,
+                          mode: str) -> float:
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
+                                 0, cfg.vocab_size)
+    r = E.generate(params, cfg, prompts, steps=steps, mode=mode)  # compile+warm
+    jax.block_until_ready(r.tokens)
+    t0 = time.perf_counter()
+    r = E.generate(params, cfg, prompts, steps=steps, mode=mode)
+    jax.block_until_ready(r.tokens)
+    dt = time.perf_counter() - t0
+    return batch * steps / dt
+
+
+def run() -> list[str]:
+    rows = []
+
+    # --- 1. frontier skipping: blocks run vs dense, per live position --------
+    max_len, bkv = 1024, 128
+    live64, dense = da_ops.schedule_blocks([64], max_len, bkv=bkv)
+    for pos in (64, 256, 512, 1023):
+        live, dense = da_ops.schedule_blocks([pos], max_len, bkv=bkv)
+        rows.append(
+            f"decode_blocks_pos{pos},{live},dense={dense} (max_len={max_len} bkv={bkv})"
+        )
+    rows.append(f"decode_skip_saving_pos64,{dense/live64:.0f}x,vs dense at pos=64")
+    wlive, _ = da_ops.schedule_blocks([1023], max_len, bkv=bkv, window=128)
+    rows.append(f"decode_blocks_window128,{wlive},sliding window foot")
+    # ragged batch: cost is the sum of per-slot frontiers, not slots·max_len
+    live, dense = da_ops.schedule_blocks([64, 256, 1023], max_len, bkv=bkv)
+    rows.append(f"decode_blocks_ragged_batch,{live},dense={dense}")
+
+    # --- 2. end-to-end scan-loop tokens/s, packed vs eval --------------------
+    scfg = get_config("tellme-0.7b", smoke=True)
+    specs = T.param_specs(scfg)
+    raw = P.init_params(specs, jax.random.PRNGKey(0))
+    packed = T.pack_tree(raw, specs)
+    for plen in (16, 64):
+        for mode, prm in (("eval", raw), ("packed", packed)):
+            tok_s = generate_tokens_per_s(scfg, prm, batch=2, prompt_len=plen,
+                                          steps=8, mode=mode)
+            rows.append(f"decode_toks_s_{mode}_ctx{plen},{tok_s:.1f},batch=2 smoke")
+
+    # --- 3. decode weight stream: bytes per weight ---------------------------
+    n = scfg.param_count_estimate()
+    rows.append(f"decode_stream_packed_bits_per_w,2.0,wp uint8 4 trits/byte")
+    rows.append(f"decode_stream_eval_bits_per_w,8.0,int8 dequant path")
+    rows.append(f"decode_stream_saving,4.0x,params={n/1e6:.1f}M")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -15,6 +15,7 @@ def main() -> int:
         ("tableI_ternary_matmul", "benchmarks.bench_ternary_matmul"),
         ("tableII_attention_schedule", "benchmarks.bench_attention_schedule"),
         ("fig9_inference", "benchmarks.bench_inference"),
+        ("decode_fast_path", "benchmarks.bench_decode"),
         ("tableV_compression", "benchmarks.bench_compression"),
     ]
     failures = 0

@@ -53,7 +53,8 @@ def main():
     assert np.array_equal(np.array(le), np.array(lp)), "packed path must be bit-exact"
     print("packed inference == eval path (bit-exact)")
 
-    # 5. generate
+    # 5. generate — the whole decode loop is one on-device lax.scan
+    # (sampling, EOS masking, position advance; no per-token host sync)
     out = E.generate(packed, cfg, toks[:, :16], steps=8, mode="packed")
     print(f"generated ids: {out.tokens[0].tolist()}")
 

@@ -2,6 +2,10 @@
 batching over the packed-ternary engine — heterogeneous prompts share decode
 slots, finished requests retire, queued requests prefill into free slots.
 
+Decode state (current token, per-slot position, done flags, budgets) lives on
+device; each scheduler tick issues a single batched host transfer, so tick
+latency is one decode step, not a per-slot readback loop (DESIGN.md §decode).
+
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 
@@ -38,7 +42,8 @@ def main():
     dt = time.time() - t0
     total = sum(len(r.generated) for r in reqs)
     print(f"served {len(reqs)} requests / {total} tokens in {ticks} ticks "
-          f"({dt:.1f}s incl. compile)")
+          f"({dt:.1f}s incl. compile, {total/dt:.1f} tok/s, "
+          f"1 host transfer/tick)")
     for r in reqs:
         print(f"  req {r.rid}: prompt={len(r.prompt)} -> {r.generated}")
 

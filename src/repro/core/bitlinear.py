@@ -69,9 +69,16 @@ def pack_params(w) -> dict:
     return {"wp": wp, "scale": scale}
 
 
-def apply(params: dict, x, *, mode: str = "train", use_kernel: bool = False,
+def apply(params: dict, x, *, mode: str = "train", use_kernel: bool | str = "auto",
           out_dtype: Any = None):
-    """Apply BitLinear. ``x`` is [..., n_in]; returns [..., n_out]."""
+    """Apply BitLinear. ``x`` is [..., n_in]; returns [..., n_out].
+
+    ``use_kernel="auto"`` routes the packed path through the Pallas kernels on
+    TPU (decode-shaped calls — a few rows per step — take the small-M
+    ``ternary_gemv`` weight-streaming path; prefill tiles take the blocked
+    ``ternary_matmul``) and through the bit-identical XLA form elsewhere.
+    Stacked weights (MoE experts fed as [E, N/4, K]) always use the XLA form.
+    """
     out_dtype = out_dtype or x.dtype
     if mode == "train":
         w = params["w"]
@@ -82,10 +89,16 @@ def apply(params: dict, x, *, mode: str = "train", use_kernel: bool = False,
         return ternary.ternary_matmul_ref(x_i8, x_scale, w_t, w_scale, out_dtype=out_dtype)
     if mode == "packed":
         x_i8, x_scale = ternary.quantize_act(x)
+        if use_kernel == "auto":
+            import jax
+
+            use_kernel = jax.default_backend() == "tpu" and params["wp"].ndim == 2
         if use_kernel:
             from ..kernels.ternary_matmul import ops as tm_ops
 
-            return tm_ops.ternary_matmul(
+            # ternary_gemv owns the decode-shape dispatch: small M takes the
+            # sublane weight-streaming path, larger M the tiled matmul.
+            return tm_ops.ternary_gemv(
                 x_i8, x_scale, params["wp"], params["scale"], out_dtype=out_dtype
             )
         # XLA path: unpack (fused by XLA into the matmul producer) + int matmul.

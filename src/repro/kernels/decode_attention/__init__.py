@@ -1,0 +1,10 @@
+"""Fused single-token KV-cache attention (decode fast path).
+
+Pallas twin of ``models.attention.decode_attention``: one new query token per
+slot against a ring of cached K/V, with per-slot frontier block skipping so
+cost tracks the *live* context length rather than the padded ``max_len`` —
+the decode analogue of the prefill kernel's reverse/causal-skip schedule.
+"""
+
+from .ops import decode_attention, schedule_blocks  # noqa: F401
+from .ref import decode_attention_reference  # noqa: F401

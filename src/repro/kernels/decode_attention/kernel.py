@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: single-token q vs KV cache with frontier block skipping.
+
+The decode twin of ``kernels/flash_attention`` (DESIGN.md §decode). One grid
+step owns (slot·kv-head, kv-block); the online-softmax state (m, l, acc) for
+the slot's query group lives in VMEM scratch across the kv-block loop, exactly
+the prefill recurrence with the q axis collapsed to the GQA group.
+
+Where the prefill kernel skips *upper-triangular* blocks, decode skips blocks
+past each slot's **frontier**: the per-slot position vector is scalar-prefetched
+into SMEM, and
+
+  * ``pl.when`` predication — blocks with ``j*bkv > pos[b]`` (or entirely below
+    the sliding-window foot) never execute their dot/softmax/aggregate body, so
+    per-slot compute tracks the live context length, not the padded ``max_len``
+    (the decode analogue of the paper's reversed-reorder work saving, §III-B);
+  * the k/v ``index_map`` clamps past-frontier block indices to the frontier
+    block — Pallas's pipeline never re-fetches a block whose index repeats, so
+    the skipped blocks also cost no HBM traffic.
+
+Slots at heterogeneous positions therefore coexist in one batched call: each
+``b`` reads its own ``pos[b]`` frontier. GQA uses the same index-map trick as
+the prefill kernel: q is pre-grouped to [B·HK, G, D] so the G query heads that
+share a kv head contract against one streamed k/v block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, bkv: int, window: int, softcap: float, nkv: int, hk: int,
+):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    p = pos_ref[bh // hk]  # this slot's frontier position
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Frontier skip: only blocks intersecting [max(p-window+1, 0), p] run.
+    jmax = p // bkv
+    live = j <= jmax
+    if window > 0:
+        jmin = jnp.maximum(p - window + 1, 0) // bkv
+        live = jnp.logical_and(live, j >= jmin)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0]  # [G, D]
+        k = k_ref[0]  # [bkv, D]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [G, bkv]
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= p
+        if window > 0:
+            mask = jnp.logical_and(mask, p - kpos < window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new[:, None])
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * alpha + pexp.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            pexp.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == nkv - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bkv", "window", "softcap", "scale", "interpret")
+)
+def decode_attention_kernel(
+    q: jax.Array,    # [B*HK, G, D] grouped queries (G padded to sublane)
+    k: jax.Array,    # [B*HK, M, D] cache (M padded to a bkv multiple)
+    v: jax.Array,    # [B*HK, M, D]
+    pos: jax.Array,  # [B] int32 per-slot frontier
+    *,
+    bkv: int = 128,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    bhk, g, d = q.shape
+    m = k.shape[1]
+    b = pos.shape[0]
+    hk = bhk // b
+    assert m % bkv == 0, (m, bkv)
+    scale = scale if scale is not None else 1.0 / d**0.5
+    nkv = m // bkv
+
+    kern = functools.partial(
+        _kernel, scale=scale, bkv=bkv, window=window, softcap=softcap,
+        nkv=nkv, hk=hk,
+    )
+
+    def kv_index(bh, j, pos_ref):
+        # Clamp skipped indices into the live [window-foot, frontier] range: a
+        # repeated block index is not re-fetched by the pipeline, so skipped
+        # blocks — past the frontier or below the window foot — move no HBM
+        # traffic either.
+        p = pos_ref[bh // hk]
+        lo = jnp.maximum(p - window + 1, 0) // bkv if window > 0 else 0
+        return (bh, jnp.clip(j, lo, p // bkv), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bhk, nkv),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, j, pos_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, bkv, d), kv_index),
+            pl.BlockSpec((1, bkv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, j, pos_ref: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bhk, g, d), q.dtype),
+        interpret=interpret,
+    )(pos, q, k, v)

@@ -1,0 +1,80 @@
+"""Jitted wrapper + analytic schedule model for the decode attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_kernel
+
+
+def decode_attention(
+    q: jax.Array,        # [B, H, D] single new token per slot
+    k_cache: jax.Array,  # [B, HK, M, D]
+    v_cache: jax.Array,  # [B, HK, M, D]
+    pos: jax.Array,      # [B] (or scalar) attend-to-<=pos frontier
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    bkv: int = 128,
+    interpret=None,
+) -> jax.Array:
+    """Fused decode attention; returns [B, H, D].
+
+    Pads the cache length to a ``bkv`` multiple (padded keys sit past every
+    slot's frontier, so the in-kernel mask discards them) and the GQA group to
+    the 8-row sublane (padded q rows are sliced away).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, d = q.shape
+    hk, m = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+
+    bkv = min(bkv, _round_up(m, 128))
+    mp = _round_up(m, bkv)
+    if mp != m:
+        pad = ((0, 0), (0, 0), (0, mp - m), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+
+    gp = _round_up(g, 8)  # sublane shape for the grouped-query block
+    qg = q.reshape(b, hk, g, d)
+    if gp != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+
+    out = decode_attention_kernel(
+        qg.reshape(b * hk, gp, d),
+        k_cache.reshape(b * hk, mp, d),
+        v_cache.reshape(b * hk, mp, d),
+        pos,
+        bkv=bkv, window=window, softcap=softcap, scale=scale,
+        interpret=interpret,
+    )
+    return out.reshape(b, hk, gp, d)[:, :, :g].reshape(b, h, d)
+
+
+def schedule_blocks(pos, max_len: int, *, bkv: int = 128, window: int = 0):
+    """Analytic kv-block counts for one decode step (per slot·kv-head).
+
+    Returns ``(live, dense)``: blocks the frontier-skipping schedule runs vs
+    the dense schedule's ``ceil(max_len / bkv)``. This is the decode analogue
+    of ``benchmarks.bench_attention_schedule.schedule_counts`` and what
+    ``benchmarks/bench_decode.py`` reports.
+    """
+    import numpy as np
+
+    pos = np.atleast_1d(np.asarray(pos))
+    dense = -(-max_len // bkv)
+    jmax = np.minimum(pos // bkv, dense - 1)
+    jmin = np.zeros_like(jmax)
+    if window > 0:
+        jmin = np.maximum(pos - window + 1, 0) // bkv
+    live = (jmax - jmin + 1).astype(np.int64)
+    return int(live.sum()), int(dense * pos.size)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for single-token KV-cache attention (decode step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def decode_attention_reference(
+    q, k_cache, v_cache, pos, *, window: int = 0, softcap: float = 0.0,
+    scale: float | None = None
+):
+    """q [B, H, D]; k/v cache [B, HK, M, D]; pos [B] (attend to <= pos).
+
+    GQA via kv repetition; f32 score/softmax throughout. This is the oracle
+    both the Pallas kernel and the XLA serving form are tested against.
+    """
+    b, h, d = q.shape
+    hk, m = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / d**0.5
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    kq = jnp.repeat(k_cache, g, axis=1)  # [B, H, M, D]
+    vq = jnp.repeat(v_cache, g, axis=1)
+    s = jnp.einsum("bhd,bhmd->bhm", q, kq, preferred_element_type=jnp.float32)
+    s = s.astype(jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(m)[None, :]
+    mask = kpos <= pos[:, None]
+    if window > 0:
+        mask &= (pos[:, None] - kpos) < window
+    s = jnp.where(mask[:, None], s, _NEG)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhm,bhmd->bhd", p.astype(q.dtype), vq)

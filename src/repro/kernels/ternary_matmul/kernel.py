@@ -49,6 +49,45 @@ def _kernel(x_ref, xs_ref, wp_ref, ws_ref, o_ref, *, out_dtype):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "out_dtype", "interpret"))
+def ternary_gemv_kernel(
+    x_i8: jax.Array,  # [bm, N] int8 — decode activations, bm ∈ {8, 16}
+    x_scale: jax.Array,  # [bm, 1] f32
+    wp: jax.Array,  # [N/4, K] uint8 (planar pack2)
+    w_scale: jax.Array,  # [1, 1] f32
+    *,
+    bm: int = 8,
+    bk: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Small-M decode path: 1-D grid over K, activations fully VMEM-resident.
+
+    The prefill kernel's grid tiles M; at decode M is a handful of slots, so
+    the whole sublane-shaped activation block [bm<=16, N] stays in VMEM for the
+    entire weight stream and each packed weight byte is touched exactly once —
+    HBM traffic is the 2-bit weight stream plus one [bm, K] output, the
+    memory-bound regime the paper's decode analysis targets (§III-C).
+    """
+    m, n = x_i8.shape
+    n4, k = wp.shape
+    assert n4 * 4 == n, (n4, n)
+    assert m == bm and bm <= 16 and k % bk == 0, (m, bm, k, bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, out_dtype=out_dtype),
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda j: (0, 0)),
+            pl.BlockSpec((bm, 1), lambda j: (0, 0)),
+            pl.BlockSpec((n4, bk), lambda j: (0, j)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
+        interpret=interpret,
+    )(x_i8, x_scale, wp, w_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "out_dtype", "interpret"))
 def ternary_matmul_kernel(
     x_i8: jax.Array,  # [M, N] int8
     x_scale: jax.Array,  # [M, 1] f32

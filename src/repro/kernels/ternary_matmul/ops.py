@@ -9,11 +9,47 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import ternary_matmul_kernel
+from .kernel import ternary_gemv_kernel, ternary_matmul_kernel
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def ternary_gemv(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32, interpret=None):
+    """Decode GEMV: x_i8 [..., N] int8 (few rows) × packed wp [N/4, K] -> [..., K].
+
+    Small-M twin of :func:`ternary_matmul`: M is padded to a sublane block
+    (``bm = 8`` or ``16``) instead of a 128-row MXU tile, and the grid runs
+    over K only, so the 2-bit weight stream is read exactly once against a
+    VMEM-resident activation block. Bit-identical to :func:`ternary_matmul`
+    (same plane-major int32 accumulation and fused dequant epilogue).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    *lead, n = x_i8.shape
+    m = 1
+    for d in lead:
+        m *= d
+    if m > 16:  # not a decode shape — use the tiled prefill path
+        return ternary_matmul(
+            x_i8, x_scale, wp, w_scale, out_dtype=out_dtype, interpret=interpret
+        )
+    bm = _round_up(max(m, 1), 8)  # 8 or 16: sublane-shaped activation block
+    x2 = x_i8.reshape(m, n)
+    s2 = x_scale.reshape(m, 1)
+    if bm != m:
+        x2 = jnp.pad(x2, ((0, bm - m), (0, 0)))
+        s2 = jnp.pad(s2, ((0, bm - m), (0, 0)))
+    n4, k = wp.shape
+    bk = 512 if k % 512 == 0 else 128
+    kp = _round_up(k, bk)
+    wp2 = jnp.pad(wp, ((0, 0), (0, kp - k))) if kp != k else wp
+    ws = jnp.asarray(w_scale, jnp.float32).reshape(1, 1)
+    out = ternary_gemv_kernel(
+        x2, s2, wp2, ws, bm=bm, bk=bk, out_dtype=out_dtype, interpret=interpret
+    )
+    return out[:m, :k].reshape(*lead, k)
 
 
 def ternary_matmul(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32, interpret=None):

@@ -145,7 +145,26 @@ def decode_attention(
     window: int = 0,
     softcap: float = 0.0,
     scale: float | None = None,
+    impl: str = "auto",
 ) -> jax.Array:
+    """Single-token attention against the KV cache.
+
+    ``impl`` selects the execution path:
+      * ``"kernel"`` — the fused Pallas kernel (kernels/decode_attention):
+        online-softmax over kv blocks with per-slot frontier skipping, so
+        compute tracks the live context length rather than the padded cache;
+      * ``"xla"``    — this module's dense XLA form over the full padded
+        cache (the interpret/CPU fallback and the dry-run lowering);
+      * ``"auto"``   — kernel on TPU, XLA elsewhere.
+    """
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "xla"
+    if impl == "kernel":
+        from ..kernels.decode_attention import ops as da_ops
+
+        return da_ops.decode_attention(
+            q, k_cache, v_cache, pos, window=window, softcap=softcap, scale=scale
+        )
     b, h, d = q.shape
     hk, m = k_cache.shape[1], k_cache.shape[2]
     g = h // hk

@@ -63,7 +63,14 @@ def embedding_spec(vocab: int, dim: int) -> dict:
 
 
 def embed(params: dict, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
-    return params["table"].astype(dtype)[tokens]
+    table = params["table"]
+    if isinstance(table, jax.Array) or isinstance(tokens, jax.core.Tracer):
+        # Under a trace, numpy tables must become jax values (numpy indexing
+        # rejects tracers); the conversion is constant-folded into the jaxpr.
+        return jnp.asarray(table).astype(dtype)[tokens]
+    # Eager numpy (checkpoint-restored) table: gather the [B, S] rows
+    # host-side rather than uploading the whole [vocab, dim] table per call.
+    return jnp.asarray(table[tokens]).astype(dtype)
 
 
 def lm_head_spec(dim: int, vocab: int) -> dict:

@@ -208,7 +208,8 @@ def pack_tree(params, specs):
 # ---------------------------------------------------------------------------
 
 
-def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None):
+def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
+                attn_impl="auto"):
     b, s, _ = x.shape
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     window = cfg.sliding_window if kind.local else 0
@@ -230,6 +231,7 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None):
         )
         out = attn_ops.decode_attention(
             q[:, :, 0], k_c, v_c, pos, window=window, softcap=cfg.attn_logit_softcap,
+            impl=attn_impl,
         )[:, :, None, :].transpose(0, 2, 1, 3)
         new_cache = {"k": k_c, "v": v_c}
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
@@ -255,7 +257,8 @@ def _apply_ffn(fp, x, cfg, kind, pcfg, *, mode):
     raise ValueError(kind.ffn)
 
 
-def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=None, pos=None):
+def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=None,
+                pos=None, attn_impl="auto"):
     """Returns (x, new_cache, aux)."""
     aux = jnp.float32(0.0)
     if kind.mixer == "rwkv":
@@ -285,7 +288,7 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
     h = L.rmsnorm(bp["ln1"], x, eps=cfg.norm_eps)
     if kind.mixer == "attn":
         y, new_cache = _apply_attn(bp["attn"], h, cfg, kind, positions, mode=mode,
-                                   cache=cache, pos=pos)
+                                   cache=cache, pos=pos, attn_impl=attn_impl)
     elif kind.mixer == "mla":
         if cache is None:
             y, new_cache = mla_mod.mla_prefill(bp["attn"], h, cfg, positions, mode=mode)
@@ -369,10 +372,14 @@ def loss_fn(params, batch, cfg, pcfg=None, *, mode="train", aux_weight=0.01):
     return ce + aux_weight * aux, {"ce": ce, "aux": aux}
 
 
-def decode_step(params, batch, caches, pos, cfg, *, mode="eval"):
+def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto"):
     """One autoregressive step. batch {tokens [B,1] | embeddings [B,1,Dfe]};
     caches from ``forward(collect_cache=True)`` (or abstract cache_specs);
-    pos [B] write/attend position. Returns (logits [B, V], new caches)."""
+    pos [B] write/attend position. Returns (logits [B, V], new caches).
+
+    ``attn_impl`` routes the attention mixers' cache read: ``"kernel"`` is the
+    fused Pallas decode-attention path (frontier skipping over the padded
+    cache), ``"xla"`` the dense form, ``"auto"`` kernel-on-TPU."""
     prelude, period, n_periods = block_plan(cfg)
     x = embed_inputs(params, batch, cfg)
     b = x.shape[0]
@@ -382,7 +389,8 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval"):
     new_caches: dict[str, Any] = {}
     for i, kind in enumerate(prelude):
         x, c, _ = apply_block(kind, params[f"prelude_{i}"], x, cfg, None, positions,
-                              mode=mode, cache=caches[f"prelude_{i}"], pos=pos)
+                              mode=mode, cache=caches[f"prelude_{i}"], pos=pos,
+                              attn_impl=attn_impl)
         new_caches[f"prelude_{i}"] = c
 
     def body(carry, xs):
@@ -391,7 +399,8 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval"):
         cs = {}
         for i, kind in enumerate(period):
             x, c, _ = apply_block(kind, pparams[f"b{i}"], x, cfg, None, positions,
-                                  mode=mode, cache=pcaches[f"b{i}"], pos=pos)
+                                  mode=mode, cache=pcaches[f"b{i}"], pos=pos,
+                                  attn_impl=attn_impl)
             cs[f"b{i}"] = c
         return x, cs
 

@@ -8,6 +8,18 @@ decoupled matrix-vector path, weights living 2-bit-packed end to end.
 lowers for the ``prefill_*`` / ``decode_*`` / ``long_*`` shapes. The
 ``ServingEngine`` adds continuous-batching bookkeeping (slot allocation,
 per-slot positions, EOS retirement) for the runnable examples.
+
+**Host-sync-free decode** (DESIGN.md §decode): the token loop never round-trips
+to the host per token. ``generate`` runs the whole decode as one
+``jax.lax.scan`` over steps — sampling, EOS/done masking, and position
+advance all on device — and materializes tokens once at the end.
+``ServingEngine.step()`` keeps ``cur_tok`` / ``pos`` / ``done`` / generation
+counters as device arrays; the only host transfer per scheduler tick is a
+single ``jax.device_get`` of one packed int32 [5, slots] state array (prev
+token, next token, position, done flag, token count), from which the Python
+side does its slot bookkeeping. The previous implementation issued
+``int(next_tok[slot])`` / ``int(self.pos[slot])`` per slot per token — two
+blocking transfers per slot per generated token.
 """
 
 from __future__ import annotations
@@ -38,14 +50,17 @@ def make_prefill_step(cfg, *, mode: str = "packed"):
     return prefill_step
 
 
-def make_serve_step(cfg, *, mode: str = "packed"):
+def make_serve_step(cfg, *, mode: str = "packed", attn_impl: str = "auto"):
     """serve_step(params, batch, caches, pos) -> (logits [B, V], new caches).
 
     One new token against a KV cache of ``seq_len`` — the decode_* shapes.
+    ``attn_impl`` routes cache attention to the fused Pallas decode kernel
+    ("kernel"), the dense XLA form ("xla"), or backend-default ("auto").
     """
 
     def serve_step(params, batch, caches, pos):
-        return Tr.decode_step(params, batch, caches, pos, cfg, mode=mode)
+        return Tr.decode_step(params, batch, caches, pos, cfg, mode=mode,
+                              attn_impl=attn_impl)
 
     return serve_step
 
@@ -56,24 +71,32 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 
 def grow_caches(caches, cfg, max_len: int):
-    """Pad prefill caches (length S) out to ``max_len`` along the seq axis."""
+    """Pad prefill caches (length S) out to ``max_len`` along the seq axis.
 
-    def pad(path_leaf, leaf):
-        name = path_leaf
-        if name in ("k", "v"):
-            pad_n = max_len - leaf.shape[-2]
-            return jnp.pad(leaf, [(0, 0)] * (leaf.ndim - 2) + [(0, pad_n), (0, 0)])
-        if name in ("c_kv", "k_rope"):
-            pad_n = max_len - leaf.shape[-2]
-            return jnp.pad(leaf, [(0, 0)] * (leaf.ndim - 2) + [(0, pad_n), (0, 0)])
-        return leaf
+    Which leaves carry a sequence axis — and which axis it is — is decided by
+    *path* against the ``cache_specs`` axes tree (the leaves whose logical
+    axes contain ``act_kv_seq``: attention ``k``/``v``, MLA ``c_kv``/
+    ``k_rope``), not by leaf name, so nested state dicts whose leaves happen
+    to share those names (or caches with no seq axis at all: mamba conv/ssm,
+    rwkv wkv) are never touched. Already-sized caches pass through unchanged,
+    making the call idempotent.
+    """
+    _, axes_tree = Tr.cache_specs(cfg, 1, 1)
 
-    def rec(tree):
-        return {
-            k: (rec(v) if isinstance(v, dict) else pad(k, v)) for k, v in tree.items()
-        }
+    def rec(c, a):
+        if isinstance(c, dict):
+            return {k: rec(c[k], a[k]) for k in c}
+        if "act_kv_seq" not in a:
+            return c
+        ax = a.index("act_kv_seq")
+        pad_n = max_len - c.shape[ax]
+        if pad_n <= 0:
+            return c
+        pads = [(0, 0)] * c.ndim
+        pads[ax] = (0, pad_n)
+        return jnp.pad(c, pads)
 
-    return rec(caches)
+    return rec(caches, axes_tree)
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +110,54 @@ class GenerationResult:
     prefill_logits: Any
 
 
+def _sample(logits, key, temperature, *, greedy: bool):
+    """Greedy argmax or temperature sampling; one definition for the prefill
+    token and every scan step. ``greedy`` is static; ``temperature`` may be a
+    traced scalar so distinct temperatures share one compiled scan."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+# Jitted decode-scan cache: configs are frozen dataclasses (hashable), so the
+# static context keys the compiled loop — repeat generate() calls with the
+# same shape/config reuse the compiled scan instead of retracing it.
+# Temperature is a *traced* operand (only greedy-vs-stochastic is static), so
+# per-request temperatures don't grow the cache or retrace.
+_DECODE_SCAN_CACHE: dict = {}
+
+
+def _decode_scan(cfg, *, steps: int, mode: str, greedy: bool,
+                 eos_id: int | None, attn_impl: str):
+    key_t = (cfg, steps, mode, greedy, eos_id, attn_impl)
+    fn = _DECODE_SCAN_CACHE.get(key_t)
+    if fn is not None:
+        return fn
+
+    def run(params, caches, tok0, pos0, done0, key, temperature):
+        def body(carry, _):
+            tok, pos, done, caches, k = carry
+            logits, caches = Tr.decode_step(params, {"tokens": tok[:, None]}, caches,
+                                            pos, cfg, mode=mode, attn_impl=attn_impl)
+            k, sub = jax.random.split(k)
+            nxt = _sample(logits, sub, temperature, greedy=greedy)
+            if eos_id is not None:
+                nxt = jnp.where(done, jnp.int32(eos_id), nxt)
+                new_done = done | (nxt == eos_id)
+            else:
+                new_done = done
+            pos = pos + jnp.where(done, 0, 1).astype(jnp.int32)
+            return (nxt, pos, new_done, caches, k), nxt
+
+        _, toks = jax.lax.scan(body, (tok0, pos0, done0, caches, key), None,
+                               length=steps - 1)
+        return jnp.concatenate([tok0[:, None], toks.T], axis=1)
+
+    fn = jax.jit(run)
+    _DECODE_SCAN_CACHE[key_t] = fn
+    return fn
+
+
 def generate(
     params,
     cfg,
@@ -96,29 +167,37 @@ def generate(
     mode: str = "eval",
     temperature: float = 0.0,
     key: jax.Array | None = None,
+    eos_id: int | None = None,
+    attn_impl: str = "auto",
 ) -> GenerationResult:
+    """Device-resident generation: prefill, then one ``lax.scan`` over steps.
+
+    The scan body runs decode_step + sampling + per-slot done masking fully on
+    device; no token ever crosses to the host until the final result. With
+    ``eos_id`` set, finished slots emit ``eos_id`` and stop advancing their
+    cache position (their decode still runs — a fixed-shape batch — but its
+    writes land on a frozen position, which ``update_kv_cache`` overwrites
+    idempotently). Greedy output is bit-identical to the per-token Python
+    loop this replaces.
+    """
     b, s = prompts.shape
     prefill = make_prefill_step(cfg, mode=mode)
-    serve = make_serve_step(cfg, mode=mode)
     last_logits, caches = prefill(params, {"tokens": prompts})
     caches = grow_caches(caches, cfg, s + steps)
 
-    def sample(logits, k):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(k, logits / temperature, axis=-1).astype(jnp.int32)
-
     key = key if key is not None else jax.random.PRNGKey(0)
-    tok = sample(last_logits, key)
-    out = [tok]
-    pos = jnp.full((b,), s, jnp.int32)
-    for t in range(steps - 1):
-        logits, caches = serve(params, {"tokens": tok[:, None]}, caches, pos)
-        key, sub = jax.random.split(key)
-        tok = sample(logits, sub)
-        out.append(tok)
-        pos = pos + 1
-    return GenerationResult(tokens=jnp.stack(out, axis=1), prefill_logits=last_logits)
+    greedy = temperature <= 0
+    tok0 = _sample(last_logits, key, temperature, greedy=greedy)
+    pos0 = jnp.full((b,), s, jnp.int32)
+    done0 = (tok0 == eos_id) if eos_id is not None else jnp.zeros((b,), bool)
+
+    if steps > 1:
+        scan = _decode_scan(cfg, steps=steps, mode=mode, greedy=greedy,
+                            eos_id=eos_id, attn_impl=attn_impl)
+        tokens = scan(params, caches, tok0, pos0, done0, key, jnp.float32(temperature))
+    else:
+        tokens = tok0[:, None]
+    return GenerationResult(tokens=tokens, prefill_logits=last_logits)
 
 
 # ---------------------------------------------------------------------------
@@ -142,10 +221,15 @@ class ServingEngine:
     requests prefill into free slots. Per-slot position vector drives the
     causal mask, so heterogeneous sequence lengths coexist in one batch —
     the batched analogue of the paper's single-stream prefill→decode flow.
+
+    All per-slot decode state (current token, position, done flag, generated
+    count, budget) lives on device; ``step()`` issues exactly one host
+    transfer per scheduler tick — ``jax.device_get`` of one packed int32
+    [5, slots] array — regardless of slot count or tokens generated.
     """
 
     def __init__(self, params, cfg, *, slots: int = 8, max_len: int = 2048,
-                 mode: str = "eval", eos_id: int = -1):
+                 mode: str = "eval", eos_id: int = -1, attn_impl: str = "auto"):
         self.params, self.cfg, self.mode = params, cfg, mode
         self.slots = slots
         self.max_len = max_len
@@ -154,14 +238,21 @@ class ServingEngine:
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.live = [None] * slots  # slot -> Request
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
+        self.done = jnp.zeros((slots,), bool)
+        self.gen_count = jnp.zeros((slots,), jnp.int32)
+        self.max_new_arr = jnp.zeros((slots,), jnp.int32)
         self.queue: list[Request] = []
-        self._serve = jax.jit(make_serve_step(cfg, mode=mode))
+        self._pending_first: set[int] = set()  # slots whose prefill token is unrecorded
+        self._serve = jax.jit(make_serve_step(cfg, mode=mode, attn_impl=attn_impl))
+        self._advance = jax.jit(partial(_advance, eos_id=eos_id, max_len=max_len))
 
     def submit(self, req: Request):
         self.queue.append(req)
 
     def _prefill_slot(self, slot: int, req: Request):
         # Single-request prefill, then scatter its caches into the slot.
+        # No host sync here: the argmax stays on device and the token value is
+        # read out (once, batched) at the next tick's packed device_get.
         prefill = make_prefill_step(self.cfg, mode=self.mode)
         logits, caches = prefill(self.params, {"tokens": req.prompt[None]})
         caches = grow_caches(caches, self.cfg, self.max_len)
@@ -180,34 +271,42 @@ class ServingEngine:
 
         self.caches = rec(self.caches, caches)
         self.pos = self.pos.at[slot].set(req.prompt.shape[0])
-        tok = int(jnp.argmax(logits[0]))
-        req.generated.append(tok)
-        self.cur_tok = self.cur_tok.at[slot].set(tok)
+        self.cur_tok = self.cur_tok.at[slot].set(
+            jnp.argmax(logits[0]).astype(jnp.int32)
+        )
+        self.done = self.done.at[slot].set(False)
+        self.gen_count = self.gen_count.at[slot].set(1)
+        self.max_new_arr = self.max_new_arr.at[slot].set(req.max_new)
         self.live[slot] = req
+        self._pending_first.add(slot)
 
     def step(self):
-        """One scheduler tick: fill free slots, run one batched decode step."""
+        """One scheduler tick: fill free slots, one batched decode step, one
+        host transfer."""
         for slot in range(self.slots):
             if self.live[slot] is None and self.queue:
                 self._prefill_slot(slot, self.queue.pop(0))
         if all(r is None for r in self.live):
             return False
+        active = jnp.array([r is not None for r in self.live])
+        first_tok = self.cur_tok  # includes tokens from prefills this tick
         logits, self.caches = self._serve(
             self.params, {"tokens": self.cur_tok[:, None]}, self.caches, self.pos
         )
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.pos = self.pos + jnp.array(
-            [1 if r is not None else 0 for r in self.live], jnp.int32
+        (self.cur_tok, self.pos, self.done, self.gen_count, packed) = self._advance(
+            logits, first_tok, self.pos, self.done, self.gen_count,
+            self.max_new_arr, active,
         )
-        self.cur_tok = next_tok
+        state = jax.device_get(packed)  # the tick's single host transfer
+        first, nxt, _, done, _ = state
         for slot, req in enumerate(self.live):
             if req is None:
                 continue
-            tok = int(next_tok[slot])
-            req.generated.append(tok)
-            if tok == self.eos_id or len(req.generated) >= req.max_new or int(
-                self.pos[slot]
-            ) >= self.max_len - 1:
+            if slot in self._pending_first:
+                req.generated.append(int(first[slot]))
+                self._pending_first.discard(slot)
+            req.generated.append(int(nxt[slot]))
+            if done[slot]:
                 req.done = True
                 self.live[slot] = None
         return True
@@ -216,3 +315,31 @@ class ServingEngine:
         while self.queue or any(r is not None for r in self.live):
             if not self.step():
                 break
+
+
+def _advance(logits, first_tok, pos, done, gen_count, max_new, active, *,
+             eos_id: int, max_len: int):
+    """Pure per-tick state transition (jitted once per engine).
+
+    Greedy-samples the batch, advances active slots' positions/counters, and
+    folds the retirement conditions (EOS, budget, cache-full) into ``done`` —
+    all device-side. Returns the new state plus one packed int32 [5, slots]
+    array (prefill token, next token, position, done, count) so the scheduler
+    reads everything back in a single transfer.
+    """
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    inc = active.astype(jnp.int32)
+    new_pos = pos + inc
+    new_count = gen_count + inc
+    new_done = done | (
+        active
+        & (
+            (next_tok == eos_id)
+            | (new_count >= max_new)
+            | (new_pos >= max_len - 1)
+        )
+    )
+    packed = jnp.stack([
+        first_tok, next_tok, new_pos, new_done.astype(jnp.int32), new_count
+    ])
+    return next_tok, new_pos, new_done, new_count, packed

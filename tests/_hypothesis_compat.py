@@ -1,0 +1,29 @@
+"""Graceful hypothesis fallback: property tests skip, deterministic tests run.
+
+A module-level ``pytest.importorskip("hypothesis")`` would skip *whole*
+modules — including their deterministic bit-exactness tests — wherever
+hypothesis isn't installed. Importing ``given``/``settings``/``st`` from here
+instead keeps those running: without hypothesis, ``@given`` marks just the
+property tests as skipped and the strategy constructors become inert stubs.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised where hypothesis is absent
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f

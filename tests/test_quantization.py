@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # property tests skip if absent
 
 from repro.core import packing as P
 from repro.core import ternary as T

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # property tests skip if absent
 
 from repro.analysis import hlo_cost
 from repro.core.params import ParamSpec
