@@ -16,6 +16,7 @@ def main() -> int:
         ("tableII_attention_schedule", "benchmarks.bench_attention_schedule"),
         ("fig9_inference", "benchmarks.bench_inference"),
         ("decode_fast_path", "benchmarks.bench_decode"),
+        ("prefill_fast_path", "benchmarks.bench_prefill"),
         ("tableV_compression", "benchmarks.bench_compression"),
     ]
     failures = 0

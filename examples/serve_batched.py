@@ -1,10 +1,20 @@
 """Batched serving example (deliverable b, serving flavour): continuous
 batching over the packed-ternary engine — heterogeneous prompts share decode
-slots, finished requests retire, queued requests prefill into free slots.
+slots, finished requests retire, queued requests are admitted into free slots
+and prefill *incrementally*.
+
+Prefill is chunked and cache-resident (DESIGN.md §prefill): each scheduler
+tick appends up to ``cfg.prefill_chunk_budget`` chunk-tokens of prompt
+straight into the batched KV cache at each slot's frontier — through the
+fused ``prefill_append`` path — while every decoding slot still advances one
+token. A long prompt therefore never stalls the batch: watch the per-tick
+trace below interleave chunk appends with decode steps. Chunk sizes come
+from ``cfg.prefill_chunk_sizes`` ({64, 128, 256}), so the engine compiles at
+most three prefill shapes no matter how ragged the prompt lengths are.
 
 Decode state (current token, per-slot position, done flags, budgets) lives on
 device; each scheduler tick issues a single batched host transfer, so tick
-latency is one decode step, not a per-slot readback loop (DESIGN.md §decode).
+latency is one fused step, not a per-slot readback loop (DESIGN.md §decode).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -24,14 +34,17 @@ def main():
     specs = T.param_specs(cfg)
     params = T.pack_tree(P.init_params(specs, jax.random.PRNGKey(0)), specs)
 
-    # six requests with different prompt lengths and generation budgets
+    # eight requests with ragged prompt lengths — including multi-chunk
+    # prompts (200, 150 tokens) that prefill across several ticks — and
+    # different generation budgets
+    lens = [8, 200, 24, 150, 64, 12, 96, 40]
     reqs = [
         E.Request(rid=i, prompt=jax.random.randint(jax.random.PRNGKey(i),
-                                                   (8 + 4 * i,), 0, cfg.vocab_size),
+                                                   (lens[i],), 0, cfg.vocab_size),
                   max_new=4 + 2 * (i % 3))
-        for i in range(6)
+        for i in range(len(lens))
     ]
-    eng = E.ServingEngine(params, cfg, slots=3, max_len=64, mode="packed")
+    eng = E.ServingEngine(params, cfg, slots=3, max_len=512, mode="packed")
     for r in reqs:
         eng.submit(r)
     t0 = time.time()
@@ -39,10 +52,14 @@ def main():
     while eng.queue or any(s is not None for s in eng.live):
         eng.step()
         ticks += 1
+        if ticks <= 12:
+            print(f"  tick {ticks:2d}: {eng.prefilling_slots} slot(s) prefilling, "
+                  f"{eng.decoding_slots} decoding, {len(eng.queue)} queued")
     dt = time.time() - t0
     total = sum(len(r.generated) for r in reqs)
     print(f"served {len(reqs)} requests / {total} tokens in {ticks} ticks "
           f"({dt:.1f}s incl. compile, {total/dt:.1f} tok/s, "
+          f"{eng.compiled_prefill_shapes} fused prefill shapes, "
           f"1 host transfer/tick)")
     for r in reqs:
         print(f"  req {r.rid}: prompt={len(r.prompt)} -> {r.generated}")

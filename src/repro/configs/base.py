@@ -59,6 +59,13 @@ class ModelConfig:
     # --- quantization (the paper's technique) -----------------------------------
     ternary: bool = True
     act_bits: int = 8
+    # --- serving: chunked prefill / continuous batching --------------------------
+    # Prompts are split into chunks drawn from this grid (each size must divide
+    # every larger one), so the engine compiles exactly len(sizes) prefill
+    # shapes — ever. The budget caps chunk-tokens processed per scheduler tick
+    # alongside the decode step, bounding decode stall under concurrent prefill.
+    prefill_chunk_sizes: tuple = (64, 128, 256)
+    prefill_chunk_budget: int = 512
     # --- numerics ----------------------------------------------------------------
     norm_eps: float = 1e-5
     rope_theta: float = 10000.0

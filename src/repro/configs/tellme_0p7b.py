@@ -20,6 +20,11 @@ def full() -> ModelConfig:
         head_dim=96,
         d_ff=4096,
         vocab_size=32000,
+        # chunked prefill: the paper's 64/128-token prompt latency points sit
+        # on the two small buckets; 256 covers long-prompt chunking. One tick
+        # admits up to 512 chunk-tokens next to the decode step.
+        prefill_chunk_sizes=(64, 128, 256),
+        prefill_chunk_budget=512,
     )
 
 
@@ -34,6 +39,8 @@ def smoke() -> ModelConfig:
         head_dim=16,
         d_ff=128,
         vocab_size=256,
+        prefill_chunk_sizes=(64, 128, 256),
+        prefill_chunk_budget=256,
     )
 
 

@@ -48,7 +48,8 @@ def _kernel(
 
     # --- causal / window frontier: run only unmasked blocks (paper C2a) -----
     if causal_skip:
-        live = j <= i  # bq == bkv ⇒ block fully masked iff j > i
+        # block fully masked iff its lowest kpos exceeds its highest qpos
+        live = j * bkv <= (i + 1) * bq - 1
         if window > 0:
             live = jnp.logical_and(live, i * bq - ((j + 1) * bkv - 1) < window)
     else:
@@ -86,8 +87,8 @@ def _kernel(
             preferred_element_type=jnp.float32,
         )
 
-    # --- finalize once the causal frontier is reached (j == i) --------------
-    @pl.when(j == jnp.minimum(i, nkv - 1))
+    # --- finalize at the last causally-live kv block for this q block -------
+    @pl.when(j == jnp.minimum(((i + 1) * bq - 1) // bkv, nkv - 1))
     def _finalize():
         l = l_ref[...]
         o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
@@ -112,7 +113,7 @@ def flash_attention_kernel(
 ) -> jax.Array:
     b, h, s, d = q.shape
     hk = k.shape[1]
-    assert h % hk == 0 and s % bq == 0 and s % bkv == 0 and bq == bkv
+    assert h % hk == 0 and s % bq == 0 and s % bkv == 0
     group = h // hk
     scale = scale if scale is not None else 1.0 / d**0.5
     nq, nkv = s // bq, s // bkv

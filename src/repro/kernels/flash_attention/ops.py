@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -14,15 +16,22 @@ def flash_attention(
 ):
     """Fused causal attention, q [B, H, S, D], k/v [B, HK, S, D].
 
-    Pads S up to a block multiple (padded kv positions are masked off by the
-    causal frontier; padded q rows are sliced away).
+    Caller-specified ``bq`` / ``bkv`` are honored as distinct q/kv block sizes
+    (each must be a positive multiple of 8 — the sublane width) and only
+    clamped down to the 128-padded sequence length; S is padded up to a
+    common multiple of both (padded kv positions are masked off by the causal
+    frontier; padded q rows are sliced away).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, h, s, d = q.shape
-    blk = max(bq, bkv)
-    bq = bkv = min(blk, _round_up(s, 128))
-    sp = _round_up(s, bq)
+    for name, blk in (("bq", bq), ("bkv", bkv)):
+        if blk <= 0 or blk % 8:
+            raise ValueError(f"{name}={blk} must be a positive multiple of 8")
+    sp128 = _round_up(s, 128)
+    bq = min(bq, sp128)
+    bkv = min(bkv, sp128)
+    sp = _round_up(s, math.lcm(bq, bkv))
     if sp != s:
         pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
         q = jnp.pad(q, pad)

@@ -1,0 +1,1 @@
+"""Chunked cache-append prefill attention kernel (DESIGN.md §prefill)."""

@@ -1,0 +1,204 @@
+"""Pallas TPU kernel: chunked cache-append prefill attention.
+
+The prefill twin of ``kernels/decode_attention`` (DESIGN.md §prefill). One
+grid step owns (slot·kv-head, kv-block); a q-chunk of ``C`` tokens at
+absolute positions ``offset .. offset+C-1`` attends to the slot's existing
+KV-cache *prefix* (positions ``< offset``) plus itself, and the chunk's K/V
+are written straight into the batched cache at the slot's offset — per-request
+caches are never materialized or host-scattered.
+
+Schedule, mirroring the paper's reversed-reorder saving (§III-B) mapped onto
+a cache prefix:
+
+  * the per-slot ``offset`` vector is scalar-prefetched into SMEM; prefix
+    kv-blocks past the slot's frontier (``j·bkv >= offset``) are skipped via
+    ``pl.when`` — chunk cost tracks the *live* prefix length, not the padded
+    ``max_len`` — and the k/v ``index_map`` clamps skipped block indices into
+    the live range so they also move no HBM traffic;
+  * the chunk's own K/V ride in VMEM as separate operands (C ≤ 256): the last
+    grid step attends causally within the chunk — the lower-triangular half
+    only, same work shape as the flash kernel's diagonal block — and stores
+    the chunk into the cache through aliased output blocks of shape (1, C, D)
+    at block index ``offset // C`` (the engine keeps ``offset ≡ 0 (mod C)``).
+
+GQA uses the same index-map trick as the decode kernel: q is pre-grouped to
+[B·HK, G·C, D] so the G query heads sharing a kv head contract against one
+streamed k/v block; the causal mask depends on the row's intra-chunk index
+``row % C`` only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    off_ref, q_ref, kn_ref, vn_ref, kc_ref, vc_ref,
+    o_ref, ko_ref, vo_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, bkv: int, c: int, window: int, softcap: float,
+    nkv: int, hk: int, prefix_limit: int,
+):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    off = off_ref[bh // hk]  # this slot's cache frontier (chunk write base)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = q_ref.shape[1]  # G*C
+    # intra-chunk index of each grouped-q row (row = g*C + i)
+    def _row_i(cols):
+        return jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0) % c
+
+    def _online_update(s, kpos, v):
+        qpos = off + _row_i(s.shape[1])
+        mask = kpos <= qpos
+        if window > 0:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    # --- prefix phase: frontier-skipped kv blocks of the existing cache -----
+    live = jnp.logical_and(j < nkv, j * bkv < off)
+    if prefix_limit > 0:
+        # slots diverted into the trash tail (off >= prefix_limit) are
+        # write-only: their prefix scan is dead, not a full-cache stream
+        live = jnp.logical_and(live, off < prefix_limit)
+    if window > 0:
+        # lowest prefix position any chunk row attends is off - window + 1
+        live = jnp.logical_and(live, (j + 1) * bkv - 1 >= off - window + 1)
+
+    @pl.when(live)
+    def _prefix():
+        q = q_ref[0]  # [G*C, D]
+        k = kc_ref[0]  # [bkv, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # prefix keys only: positions >= off belong to the chunk phase
+        kpos = jnp.where(kpos < off, kpos, jnp.int32(2**30))
+        _online_update(s, kpos, vc_ref[0])
+
+    # --- chunk phase: causal self-attention + the cache append --------------
+    @pl.when(j == nkv)
+    def _chunk():
+        q = q_ref[0]
+        kn = kn_ref[0]  # [C, D]
+        s = jax.lax.dot_general(
+            q, kn, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _online_update(s, kpos, vn_ref[0])
+
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        ko_ref[0] = kn_ref[0].astype(ko_ref.dtype)
+        vo_ref[0] = vn_ref[0].astype(vo_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bkv", "window", "softcap", "scale",
+                              "prefix_limit", "interpret")
+)
+def prefill_append_kernel(
+    q: jax.Array,        # [B*HK, G*C, D] grouped chunk queries
+    k_new: jax.Array,    # [B*HK, C, D] chunk keys (to append)
+    v_new: jax.Array,    # [B*HK, C, D]
+    k_cache: jax.Array,  # [B*HK, M, D] batched cache (M a bkv multiple)
+    v_cache: jax.Array,  # [B*HK, M, D]
+    offset: jax.Array,   # [B] int32 per-slot frontier / write base (≡ 0 mod C)
+    *,
+    bkv: int = 128,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    prefix_limit: int = 0,  # >0: offsets past it are write-only (no prefix scan)
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    bhk, gc, d = q.shape
+    c = k_new.shape[1]
+    m = k_cache.shape[1]
+    b = offset.shape[0]
+    hk = bhk // b
+    assert m % bkv == 0, (m, bkv)
+    assert m % c == 0 and gc % c == 0, (m, gc, c)
+    scale = scale if scale is not None else 1.0 / d**0.5
+    nkv = m // bkv
+
+    kern = functools.partial(
+        _kernel, scale=scale, bkv=bkv, c=c, window=window, softcap=softcap,
+        nkv=nkv, hk=hk, prefix_limit=prefix_limit,
+    )
+
+    def kv_index(bh, j, off_ref):
+        # Clamp skipped prefix indices into the live [window-foot, frontier]
+        # range: a repeated block index is never re-fetched by the pipeline,
+        # so skipped blocks move no HBM traffic. The chunk step (j == nkv)
+        # also lands on the frontier block (fetched but unused).
+        off = off_ref[bh // hk]
+        hi = jnp.maximum(off - 1, 0) // bkv
+        lo = jnp.maximum(off - window, 0) // bkv if window > 0 else 0
+        return (bh, jnp.clip(j, lo, hi), 0)
+
+    def chunk_out_index(bh, j, off_ref):
+        return (bh, off_ref[bh // hk] // c, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bhk, nkv + 1),
+        in_specs=[
+            pl.BlockSpec((1, gc, d), lambda bh, j, off_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, c, d), lambda bh, j, off_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, c, d), lambda bh, j, off_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, bkv, d), kv_index),
+            pl.BlockSpec((1, bkv, d), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, gc, d), lambda bh, j, off_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, c, d), chunk_out_index),
+            pl.BlockSpec((1, c, d), chunk_out_index),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((gc, d), jnp.float32),
+            pltpu.VMEM((gc,), jnp.float32),
+            pltpu.VMEM((gc,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bhk, gc, d), q.dtype),
+            jax.ShapeDtypeStruct((bhk, m, d), k_cache.dtype),
+            jax.ShapeDtypeStruct((bhk, m, d), v_cache.dtype),
+        ],
+        # cache operands alias their outputs: the only blocks written back are
+        # the (1, C, D) chunk windows — the rest of the cache stays resident.
+        input_output_aliases={4: 1, 5: 2},
+        interpret=interpret,
+    )(offset, q, k_new, v_new, k_cache, v_cache)

@@ -1,0 +1,82 @@
+"""Jitted wrapper + analytic schedule model for the prefill-append kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import prefill_append_kernel
+
+
+def prefill_append(
+    q: jax.Array,        # [B, H, C, D] chunk queries (rope'd at offset..offset+C-1)
+    k_new: jax.Array,    # [B, HK, C, D] chunk keys
+    v_new: jax.Array,    # [B, HK, C, D]
+    k_cache: jax.Array,  # [B, HK, M, D] batched cache
+    v_cache: jax.Array,  # [B, HK, M, D]
+    offset: jax.Array,   # [B] (or scalar) per-slot write base, ≡ 0 (mod C)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    bkv: int = 128,
+    prefix_limit: int = 0,
+    interpret=None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused chunk prefill: attend to cache prefix + self, append K/V in place.
+
+    Returns (out [B, H, C, D], k_cache', v_cache'). The cache length M must be
+    a multiple of the chunk size C (the engine pads ``max_len`` accordingly);
+    ``bkv`` is halved until it divides M so unaligned smoke caches still run.
+    ``prefix_limit > 0`` marks offsets at/past it as *write-only* (the
+    engine's trash-diverted slots): their prefix blocks all go dead instead
+    of streaming the whole cache for an output nobody reads.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, c, d = q.shape
+    hk, m = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+
+    bkv = min(bkv, m)
+    while m % bkv:
+        bkv //= 2
+
+    qg = q.reshape(b, hk, g, c, d).reshape(b * hk, g * c, d)
+    out, k_cache, v_cache = prefill_append_kernel(
+        qg,
+        k_new.reshape(b * hk, c, d),
+        v_new.reshape(b * hk, c, d),
+        k_cache.reshape(b * hk, m, d),
+        v_cache.reshape(b * hk, m, d),
+        offset,
+        bkv=bkv, window=window, softcap=softcap, scale=scale,
+        prefix_limit=prefix_limit, interpret=interpret,
+    )
+    return (
+        out.reshape(b, hk, g, c, d).reshape(b, h, c, d),
+        k_cache.reshape(b, hk, m, d),
+        v_cache.reshape(b, hk, m, d),
+    )
+
+
+def schedule_blocks(offsets, max_len: int, *, bkv: int = 128, window: int = 0):
+    """Analytic kv-block counts for one chunk-append step (per slot·kv-head).
+
+    Returns ``(live, dense)``: blocks the frontier-skipping schedule runs
+    (live prefix blocks + the chunk step, which is one grid step whatever the
+    chunk size) vs the dense schedule's ``ceil(max_len/bkv) + 1``. The
+    prefill analogue of ``decode_attention.ops.schedule_blocks``.
+    """
+    import numpy as np
+
+    offsets = np.atleast_1d(np.asarray(offsets))
+    nkv = -(-max_len // bkv)
+    dense = nkv + 1
+    hi = -(-offsets // bkv)  # blocks with j*bkv < offset
+    lo = np.zeros_like(hi)
+    if window > 0:
+        lo = np.minimum(np.maximum(offsets - window, 0) // bkv, hi)
+    live = (hi - lo + 1).astype(np.int64)  # prefix blocks + the chunk step
+    return int(live.sum()), int(dense * offsets.size)

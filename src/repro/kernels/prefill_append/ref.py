@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for chunked cache-append prefill attention.
+
+A q-chunk of ``C`` tokens at absolute positions ``offset .. offset+C-1``
+attends to the slot's existing KV-cache prefix (positions ``< offset``) plus
+itself (causal within the chunk), and the chunk's K/V land in the cache at
+``[offset, offset+C)``. This is the oracle both the Pallas kernel and the XLA
+serving form (models/attention.prefill_append_attention) are tested against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def append_kv_cache_reference(k_cache, v_cache, k_new, v_new, offset):
+    """Write the chunk's K/V at ``[offset, offset+C)``. k_new [B, HK, C, D];
+    offset [B] (or scalar) per-slot write base.
+
+    Deliberately *not* the production gather/select form
+    (models/attention.append_kv_cache): a per-slot ``dynamic_update_slice``
+    loop, so the oracle is an independent implementation of the append
+    semantics rather than the same code validated against itself.
+    """
+    b = k_cache.shape[0]
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    for i in range(b):
+        start = (jnp.int32(i), jnp.int32(0), offset[i], jnp.int32(0))
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new[i: i + 1].astype(k_cache.dtype), start)
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new[i: i + 1].astype(v_cache.dtype), start)
+    return k_cache, v_cache
+
+
+def prefill_append_reference(
+    q, k_new, v_new, k_cache, v_cache, offset, *,
+    window: int = 0, softcap: float = 0.0, scale: float | None = None,
+):
+    """q [B, H, C, D]; k/v_new [B, HK, C, D]; cache [B, HK, M, D]; offset [B].
+
+    Returns (out [B, H, C, D], k_cache', v_cache'). GQA via kv repetition;
+    f32 score/softmax throughout.
+    """
+    b, h, c, d = q.shape
+    hk, m = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / d**0.5
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    k_cache, v_cache = append_kv_cache_reference(k_cache, v_cache, k_new, v_new, offset)
+    kq = jnp.repeat(k_cache, g, axis=1)  # [B, H, M, D]
+    vq = jnp.repeat(v_cache, g, axis=1)
+    s = jnp.einsum("bhcd,bhmd->bhcm", q, kq, preferred_element_type=jnp.float32)
+    s = s.astype(jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = offset[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    kpos = jnp.arange(m)[None, None, :]  # [1, 1, M]
+    mask = kpos <= qpos[:, :, None]
+    if window > 0:
+        mask &= (qpos[:, :, None] - kpos) < window
+    s = jnp.where(mask[:, None], s, _NEG)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhcm,bhmd->bhcd", p.astype(q.dtype), vq)
+    return out, k_cache, v_cache

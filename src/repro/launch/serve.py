@@ -1,9 +1,12 @@
-"""Serving launcher: packed-ternary batched inference (prefill + decode).
+"""Serving launcher: packed-ternary continuous batching (chunked prefill + decode).
 
 Converts trained (or randomly-initialized) float params into the 2-bit
-packed serving form, then runs the continuous-batching engine over a set of
-prompts, reporting prefill latency and decode throughput — the paper's
-Fig. 9 metrics, on CPU at smoke scale.
+packed serving form, then serves a ragged batch of prompts through the
+continuous-batching engine: prompts prefill in fixed-size chunks (bucketed to
+``cfg.prefill_chunk_sizes`` — at most three compiled prefill shapes) written
+straight into the batched KV cache, while decoding slots keep advancing every
+tick. Reports time-to-first-token and decode throughput — the paper's Fig. 9
+metrics, on CPU at smoke scale.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch tellme-0.7b --smoke \
@@ -16,7 +19,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import get_config
 from ..core import params as P
@@ -29,9 +31,19 @@ def main(argv=None):
     ap.add_argument("--arch", default="tellme-0.7b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt lengths across the batch")
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots (default: batch)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache length (default: prompt+gen rounded up)")
     ap.add_argument("--mode", default="packed", choices=["packed", "eval", "wq"])
+    ap.add_argument("--prefill", default="auto",
+                    choices=["auto", "chunked", "legacy"],
+                    help="chunked = fused cache-resident prefill; legacy = "
+                         "per-request bucketed prefill + scatter")
     ap.add_argument("--ckpt")
     args = ap.parse_args(argv)
 
@@ -51,36 +63,45 @@ def main(argv=None):
         print(f"[serve] packed weights: {pb/2**20:.1f} MiB "
               f"(float master {fb/2**20:.1f} MiB, {fb/pb:.1f}x compression)")
 
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    lens = [args.prompt_len] * args.batch
+    if args.ragged:
+        lens = [max(8, args.prompt_len // (1 << (i % 3))) for i in range(args.batch)]
+    prompts = [
+        jax.random.randint(jax.random.PRNGKey(i + 1), (l,), 0, cfg.vocab_size)
+        for i, l in enumerate(lens)
+    ]
+    max_len = args.max_len or max(lens) + args.gen + 1
+    eng = E.ServingEngine(
+        serve_params, cfg, slots=args.slots or args.batch, max_len=max_len,
+        mode=args.mode, prefill=args.prefill,
     )
-    prefill = jax.jit(E.make_prefill_step(cfg, mode=args.mode))
-    serve = jax.jit(E.make_serve_step(cfg, mode=args.mode))
+    reqs = [E.Request(rid=i, prompt=p, max_new=args.gen) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
 
     t0 = time.time()
-    last, caches = prefill(serve_params, {"tokens": prompts})
-    jax.block_until_ready(last)
-    t_prefill = time.time() - t0
-    caches = E.grow_caches(caches, cfg, args.prompt_len + args.gen)
+    first_tok_at = {}
+    ticks = 0
+    while eng.queue or any(s is not None for s in eng.live):
+        eng.step()
+        ticks += 1
+        for r in reqs:
+            if r.generated and r.rid not in first_tok_at:
+                first_tok_at[r.rid] = time.time() - t0
+    dt = time.time() - t0
 
-    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
-    out = [tok]
-    t1 = time.time()
-    for t in range(args.gen - 1):
-        pos = jnp.int32(args.prompt_len + t)
-        logits, caches = serve(serve_params, {"tokens": tok[:, None]}, caches, pos)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t1
-
-    toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"[serve] prefill({args.prompt_len} tok x {args.batch}): {t_prefill*1e3:.1f} ms "
-          f"(incl. compile)")
-    print(f"[serve] decode: {args.gen-1} steps x {args.batch} seqs -> "
-          f"{toks_per_s:.1f} tok/s")
-    gen = jnp.stack(out, axis=1)
-    print(f"[serve] sample generated ids[0,:16]: {gen[0,:16].tolist()}")
+    total = sum(len(r.generated) for r in reqs)
+    rejected = sum(1 for r in reqs if r.done and not r.generated)
+    ttft = sorted(first_tok_at.values())
+    print(f"[serve] prefill={eng.prefill} lens={lens}: {ticks} ticks, "
+          f"{total} tokens in {dt*1e3:.1f} ms (incl. compile, "
+          f"{rejected} rejected)")
+    if ttft:
+        print(f"[serve] time-to-first-token ms: "
+              f"min={ttft[0]*1e3:.1f} max={ttft[-1]*1e3:.1f}")
+    print(f"[serve] decode throughput: {total/max(dt, 1e-9):.1f} tok/s "
+          f"({eng.compiled_prefill_shapes} fused prefill shapes compiled)")
+    print(f"[serve] sample generated ids[0,:16]: {reqs[0].generated[:16]}")
     return 0
 
 

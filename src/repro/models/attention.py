@@ -192,6 +192,95 @@ def decode_attention(
     return o.reshape(b, h, d)
 
 
+def prefill_append_attention(
+    q: jax.Array,        # [B, H, C, D] chunk queries (positions offset..offset+C-1)
+    k_new: jax.Array,    # [B, HK, C, D] chunk keys
+    v_new: jax.Array,    # [B, HK, C, D]
+    k_cache: jax.Array,  # [B, HK, M, D] batched KV cache
+    v_cache: jax.Array,  # [B, HK, M, D]
+    offset: jax.Array,   # [B] (or scalar) per-slot cache frontier, ≡ 0 (mod C)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    impl: str = "auto",
+    prefix_limit: int = 0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked prefill against a cache prefix (the ``mode="prefill_chunk"`` path).
+
+    A chunk of ``C`` tokens attends to the slot's existing cache prefix
+    (positions ``< offset``, frontier-masked) plus itself (causal within the
+    chunk), and the chunk's K/V are appended to the cache at
+    ``[offset, offset+C)``. Returns (out [B, H, C, D], k_cache', v_cache').
+
+    ``impl`` selects the execution path:
+      * ``"kernel"`` — the fused Pallas kernel (kernels/prefill_append):
+        frontier-skipped prefix blocks + in-place chunk append through aliased
+        output windows, so skipped cache blocks move no HBM traffic;
+      * ``"xla"``    — this module's dense form over the full padded cache
+        (the interpret/CPU fallback and the dry-run lowering);
+      * ``"auto"``   — kernel on TPU, XLA elsewhere.
+
+    ``prefix_limit > 0`` (serving: the engine's trash-tail base) marks
+    offsets at/past it write-only: the kernel skips their whole prefix scan.
+    The XLA form ignores it — its compute is dense either way, and diverted
+    rows' outputs are garbage by contract.
+    """
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "xla"
+    if impl == "kernel":
+        from ..kernels.prefill_append import ops as pa_ops
+
+        return pa_ops.prefill_append(
+            q, k_new, v_new, k_cache, v_cache, offset,
+            window=window, softcap=softcap, scale=scale,
+            prefix_limit=prefix_limit,
+        )
+    b, h, c, d = q.shape
+    hk, m = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    k_cache, v_cache = append_kv_cache(k_cache, v_cache, k_new, v_new, offset)
+    # grouped GQA form (no kv repetition), dense over the padded cache
+    qg = q.reshape(b, hk, g, c, d)
+    s = jnp.einsum("bkgcd,bkpd->bkgcp", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = offset[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    kpos = jnp.arange(m)[None, None, :]  # [1, 1, M]
+    mask = kpos <= qpos[:, :, None]
+    if window > 0:
+        mask &= (qpos[:, :, None] - kpos) < window
+    s = jnp.where(mask[:, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcp,bkpd->bkgcd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, h, c, d), k_cache, v_cache
+
+
+def append_kv_cache(k_cache, v_cache, k_new, v_new, offset):
+    """Write a C-token chunk's K/V at ``[offset, offset+C)``. k_new [B, HK, C, D].
+
+    Per-slot ``offset [B]`` uses a gather + masked select on the seq axis —
+    full-cache elementwise like ``update_kv_cache``'s one-hot form, but
+    sharding-safe (no dynamic scatter, which would defeat GSPMD sharding of
+    the cache). The Pallas kernel path never calls this: it stores the chunk
+    through aliased output windows instead.
+    """
+    b, hk, m, d = k_cache.shape
+    c = k_new.shape[2]
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    rel = jnp.arange(m)[None, :] - offset[:, None]  # [B, M] intra-chunk index
+    inside = (rel >= 0) & (rel < c)
+    idx = jnp.clip(rel, 0, c - 1)[:, None, :, None]  # [B, 1, M, 1]
+    gk = jnp.take_along_axis(k_new.astype(k_cache.dtype), idx, axis=2)
+    gv = jnp.take_along_axis(v_new.astype(v_cache.dtype), idx, axis=2)
+    sel = inside[:, None, :, None]
+    return jnp.where(sel, gk, k_cache), jnp.where(sel, gv, v_cache)
+
+
 def update_kv_cache(k_cache, v_cache, k_new, v_new, pos):
     """Write the new token's K/V at ``pos``. k_new [B, HK, D].
 

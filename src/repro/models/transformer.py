@@ -209,7 +209,7 @@ def pack_tree(params, specs):
 
 
 def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
-                attn_impl="auto"):
+                attn_impl="auto", prefix_limit=0):
     b, s, _ = x.shape
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     window = cfg.sliding_window if kind.local else 0
@@ -224,6 +224,13 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
             q, k, v, window=window, softcap=cfg.attn_logit_softcap,
         )
         new_cache = {"k": k, "v": v}
+    elif s > 1:  # mode="prefill_chunk": chunk attends to cache prefix + self
+        out, k_c, v_c = attn_ops.prefill_append_attention(
+            q, k, v, cache["k"], cache["v"], pos,
+            window=window, softcap=cfg.attn_logit_softcap, impl=attn_impl,
+            prefix_limit=prefix_limit,
+        )
+        new_cache = {"k": k_c, "v": v_c}
     else:
         k_c, v_c = attn_ops.update_kv_cache(
             cache["k"], cache["v"], k[:, :, 0].astype(cache["k"].dtype),
@@ -258,7 +265,7 @@ def _apply_ffn(fp, x, cfg, kind, pcfg, *, mode):
 
 
 def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=None,
-                pos=None, attn_impl="auto"):
+                pos=None, attn_impl="auto", prefix_limit=0):
     """Returns (x, new_cache, aux)."""
     aux = jnp.float32(0.0)
     if kind.mixer == "rwkv":
@@ -286,9 +293,15 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
         return x, {"wkv": wkv, "x_time": x_last, "x_chan": x_chan}, aux
 
     h = L.rmsnorm(bp["ln1"], x, eps=cfg.norm_eps)
+    if cache is not None and x.shape[1] > 1 and kind.mixer != "attn":
+        raise NotImplementedError(
+            f"prefill_chunk (multi-token step against a cache) is only "
+            f"implemented for the attn mixer, not {kind.mixer!r}"
+        )
     if kind.mixer == "attn":
         y, new_cache = _apply_attn(bp["attn"], h, cfg, kind, positions, mode=mode,
-                                   cache=cache, pos=pos, attn_impl=attn_impl)
+                                   cache=cache, pos=pos, attn_impl=attn_impl,
+                                   prefix_limit=prefix_limit)
     elif kind.mixer == "mla":
         if cache is None:
             y, new_cache = mla_mod.mla_prefill(bp["attn"], h, cfg, positions, mode=mode)
@@ -410,6 +423,61 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto
     x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
     logits = L.lm_head(params["lm_head"], x, softcap=cfg.final_logit_softcap)
     return logits[:, 0], new_caches
+
+
+def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
+                       attn_impl="auto", last_row=None, prefix_limit=0):
+    """One chunked-prefill step (``mode="prefill_chunk"``): a C-token chunk per
+    slot runs against the batched caches, appending each layer's K/V at the
+    slot's ``offset`` and attending to the cache prefix + itself.
+
+    batch {tokens [B, C]}; caches as in ``decode_step`` (seq length M must be
+    a multiple of C); offset [B] per-slot cache frontier (``≡ 0 mod C`` — the
+    engine's chunk schedule guarantees it). Returns (logits, new caches with
+    the chunk's K/V written in place). With ``last_row=None`` logits cover
+    every chunk row ([B, C, V]); with ``last_row [B]`` set, each slot's hidden
+    state is gathered at that row *before* the LM head, so only [B, V] logits
+    are computed — the serving tick needs one row per finishing slot, and the
+    full-vocab head over all C rows is the dominant per-tick matmul otherwise.
+    ``attn_impl`` routes the chunk attention through the fused Pallas
+    ``prefill_append`` kernel ("kernel"), the dense XLA form ("xla"), or
+    backend-default ("auto").
+    """
+    prelude, period, n_periods = block_plan(cfg)
+    x = embed_inputs(params, batch, cfg)
+    b, c = x.shape[:2]
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    positions = offset[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+
+    new_caches: dict[str, Any] = {}
+    for i, kind in enumerate(prelude):
+        x, cch, _ = apply_block(kind, params[f"prelude_{i}"], x, cfg, None, positions,
+                                mode=mode, cache=caches[f"prelude_{i}"], pos=offset,
+                                attn_impl=attn_impl, prefix_limit=prefix_limit)
+        new_caches[f"prelude_{i}"] = cch
+
+    def body(carry, xs):
+        x = carry
+        pparams, pcaches = xs
+        cs = {}
+        for i, kind in enumerate(period):
+            x, cch, _ = apply_block(kind, pparams[f"b{i}"], x, cfg, None, positions,
+                                    mode=mode, cache=pcaches[f"b{i}"], pos=offset,
+                                    attn_impl=attn_impl, prefix_limit=prefix_limit)
+            cs[f"b{i}"] = cch
+        return x, cs
+
+    x, blk_caches = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+    new_caches["blocks"] = blk_caches
+
+    if last_row is not None:
+        x = jnp.take_along_axis(
+            x, jnp.asarray(last_row, jnp.int32)[:, None, None], axis=1)
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.lm_head(params["lm_head"], x, softcap=cfg.final_logit_softcap)
+    if last_row is not None:
+        return logits[:, 0], new_caches
+    return logits, new_caches
 
 
 # ---------------------------------------------------------------------------

@@ -1,1 +1,12 @@
-from .engine import ServingEngine, Request, generate, init_caches, grow_caches, make_prefill_step, make_serve_step  # noqa: F401
+from .engine import (  # noqa: F401
+    Request,
+    ServingEngine,
+    chunk_schedule,
+    fit_caches,
+    generate,
+    grow_caches,
+    init_caches,
+    make_prefill_step,
+    make_serve_step,
+    prefill_bucketed,
+)

@@ -1,25 +1,35 @@
-"""Serving engine: packed-ternary prefill + decode with batched requests.
+"""Serving engine: packed-ternary chunked prefill + decode with continuous batching.
 
 Implements the paper's end-to-end inference flow (Fig. 1): prefill the prompt
 through the fused attention path, then autoregressive decode through the
 decoupled matrix-vector path, weights living 2-bit-packed end to end.
 
 ``prefill_step`` / ``serve_step`` are the jit'd entry points the dry-run
-lowers for the ``prefill_*`` / ``decode_*`` / ``long_*`` shapes. The
-``ServingEngine`` adds continuous-batching bookkeeping (slot allocation,
-per-slot positions, EOS retirement) for the runnable examples.
+lowers for the ``prefill_*`` / ``decode_*`` / ``long_*`` shapes.
 
 **Host-sync-free decode** (DESIGN.md §decode): the token loop never round-trips
 to the host per token. ``generate`` runs the whole decode as one
 ``jax.lax.scan`` over steps — sampling, EOS/done masking, and position
 advance all on device — and materializes tokens once at the end.
-``ServingEngine.step()`` keeps ``cur_tok`` / ``pos`` / ``done`` / generation
-counters as device arrays; the only host transfer per scheduler tick is a
-single ``jax.device_get`` of one packed int32 [5, slots] state array (prev
-token, next token, position, done flag, token count), from which the Python
-side does its slot bookkeeping. The previous implementation issued
-``int(next_tok[slot])`` / ``int(self.pos[slot])`` per slot per token — two
-blocking transfers per slot per generated token.
+
+**Chunked cache-resident prefill** (DESIGN.md §prefill): ``ServingEngine``
+never materializes a per-request cache. Prompts are split into fixed-size
+chunks drawn from ``cfg.prefill_chunk_sizes`` (default {64, 128, 256} — so
+the engine compiles at most three prefill shapes, ever), and every scheduler
+tick runs ONE fused jit that appends up to ``prefill_chunk_budget``
+chunk-tokens straight into the batched KV cache at each slot's offset *and*
+advances one decode token for every decoding slot — the batched analogue of
+the paper's single-stream prefill→decode handoff, with no decode stall while
+a long prompt prefills. Per-slot decode state (current token, position, done
+flag, counters) stays on device; each tick issues exactly one host transfer
+(``jax.device_get`` of one packed int32 array — [4, slots] on fused ticks,
+[6, slots] on decode-only ticks).
+
+Families without a chunkable attention mixer (mla / mamba / rwkv) fall back
+to the legacy per-request prefill through ``prefill_bucketed``, which caches
+the compiled step per length key — bucketed to the chunk grid for the dense
+family, exact-length for recurrent-state/MoE families where pad tokens would
+integrate into the state — so repeat lengths never retrace.
 """
 
 from __future__ import annotations
@@ -30,9 +40,13 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core import params as P
 from ..models import transformer as Tr
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
 
 
 # ---------------------------------------------------------------------------
@@ -70,16 +84,15 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
 
-def grow_caches(caches, cfg, max_len: int):
-    """Pad prefill caches (length S) out to ``max_len`` along the seq axis.
+def _resize_caches(caches, cfg, max_len: int, *, crop: bool):
+    """Pad (and, with ``crop``, slice) caches to ``max_len`` on the seq axis.
 
     Which leaves carry a sequence axis — and which axis it is — is decided by
     *path* against the ``cache_specs`` axes tree (the leaves whose logical
     axes contain ``act_kv_seq``: attention ``k``/``v``, MLA ``c_kv``/
     ``k_rope``), not by leaf name, so nested state dicts whose leaves happen
     to share those names (or caches with no seq axis at all: mamba conv/ssm,
-    rwkv wkv) are never touched. Already-sized caches pass through unchanged,
-    making the call idempotent.
+    rwkv wkv) are never touched.
     """
     _, axes_tree = Tr.cache_specs(cfg, 1, 1)
 
@@ -89,14 +102,117 @@ def grow_caches(caches, cfg, max_len: int):
         if "act_kv_seq" not in a:
             return c
         ax = a.index("act_kv_seq")
-        pad_n = max_len - c.shape[ax]
-        if pad_n <= 0:
-            return c
-        pads = [(0, 0)] * c.ndim
-        pads[ax] = (0, pad_n)
-        return jnp.pad(c, pads)
+        n = c.shape[ax]
+        if n > max_len and crop:
+            return jax.lax.slice_in_dim(c, 0, max_len, axis=ax)
+        if n < max_len:
+            pads = [(0, 0)] * c.ndim
+            pads[ax] = (0, max_len - n)
+            return jnp.pad(c, pads)
+        return c
 
     return rec(caches, axes_tree)
+
+
+def grow_caches(caches, cfg, max_len: int):
+    """Pad prefill caches (length S) out to ``max_len`` along the seq axis.
+    Already-sized (or longer) caches pass through unchanged, making the call
+    idempotent. Axis selection is path-based — see ``_resize_caches``."""
+    return _resize_caches(caches, cfg, max_len, crop=False)
+
+
+def fit_caches(caches, cfg, max_len: int):
+    """Grow *or crop* caches to exactly ``max_len`` on the seq axis.
+
+    Bucketed prefill returns caches at the bucket length, which may overshoot
+    the serving cache (a 30-token prompt in a 64 bucket against a 32-token
+    cache); cropped positions sit past every live frontier — only padding K/V
+    ever lives there — so cropping never drops attended state.
+    """
+    return _resize_caches(caches, cfg, max_len, crop=True)
+
+
+# ---------------------------------------------------------------------------
+# Chunk schedule + length-bucketed prefill (3 compiled shapes, ever)
+# ---------------------------------------------------------------------------
+
+
+def chunk_schedule(length: int, sizes=(64, 128, 256)) -> list[int]:
+    """Split a prompt into chunk sizes from ``sizes``, greedily large→small,
+    the tail padded up to the smallest size.
+
+    Invariant (relied on by the kernel's aliased cache-append window): each
+    size divides every larger size, so when a chunk of size ``C`` is issued
+    the running offset — a sum of chunks all ≥ C — is a multiple of C.
+    """
+    sizes = sorted(sizes)
+    for a, b in zip(sizes, sizes[1:]):
+        if b % a:
+            raise ValueError(f"chunk sizes must form a divisibility chain: {sizes}")
+    rem = _round_up(max(length, 1), sizes[0])
+    out = []
+    while rem:
+        c = next(s for s in reversed(sizes) if s <= rem)
+        out.append(c)
+        rem -= c
+    return out
+
+
+def bucket_length(s: int, sizes=(64, 128, 256)) -> int:
+    """Bucket a prompt length to the chunk grid: the smallest size that fits,
+    else the next multiple of the largest size."""
+    sizes = sorted(sizes)
+    for b in sizes:
+        if s <= b:
+            return b
+    return _round_up(s, sizes[-1])
+
+
+# Compiled bucketed-prefill cache: keyed by (cfg, mode, bucket). Configs are
+# frozen dataclasses (hashable), so distinct prompt lengths that share a
+# bucket reuse one compiled step instead of recompiling per length.
+_BUCKETED_PREFILL_CACHE: dict = {}
+
+
+def prefill_bucketed(params, cfg, prompts: jax.Array, *, mode: str = "packed",
+                     lengths: jax.Array | None = None):
+    """Length-bucketed prefill: pads ``prompts [B, S]`` up to the chunk-size
+    grid (attention-masked padding — pad tokens sit past every row's causal
+    frontier, and the returned logits are gathered at each row's true last
+    token), so prefill compiles once per *bucket*, not per prompt length.
+
+    Bucketing is only sound when pad tokens cannot reach real state: the
+    ``dense`` family's attention K/V caches index by position, so pad rows
+    land past every live frontier. Recurrent state (rwkv wkv / mamba conv-ssm)
+    *integrates* the pads, and MoE capacity routing lets them crowd out real
+    tokens — those families keep exact-length prefill, still cached per
+    (cfg, mode, length) so repeat lengths don't retrace.
+
+    Returns (last_logits [B, V], caches with seq length = bucket | S).
+    """
+    b, s = prompts.shape
+    if cfg.family == "dense":
+        sizes = tuple(cfg.prefill_chunk_sizes) or (64, 128, 256)
+        bucket = bucket_length(s, sizes)
+    else:
+        bucket = s  # pad-unsafe families: exact length, cached per length
+    key_t = (cfg, mode, bucket)
+    fn = _BUCKETED_PREFILL_CACHE.get(key_t)
+    if fn is None:
+        def step(params, batch, lens):
+            logits, _, caches = Tr.forward(params, batch, cfg, None, mode=mode,
+                                           collect_cache=True)
+            last = jnp.take_along_axis(
+                logits, (lens - 1)[:, None, None], axis=1
+            )[:, 0]
+            return last, caches
+
+        fn = jax.jit(step)
+        _BUCKETED_PREFILL_CACHE[key_t] = fn
+    padded = jnp.pad(prompts, ((0, 0), (0, bucket - s)))
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    return fn(params, {"tokens": padded}, jnp.asarray(lengths, jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -170,20 +286,21 @@ def generate(
     eos_id: int | None = None,
     attn_impl: str = "auto",
 ) -> GenerationResult:
-    """Device-resident generation: prefill, then one ``lax.scan`` over steps.
+    """Device-resident generation: bucketed prefill, then one ``lax.scan``.
 
-    The scan body runs decode_step + sampling + per-slot done masking fully on
-    device; no token ever crosses to the host until the final result. With
-    ``eos_id`` set, finished slots emit ``eos_id`` and stop advancing their
-    cache position (their decode still runs — a fixed-shape batch — but its
-    writes land on a frozen position, which ``update_kv_cache`` overwrites
-    idempotently). Greedy output is bit-identical to the per-token Python
-    loop this replaces.
+    Prefill goes through ``prefill_bucketed`` — distinct prompt lengths that
+    share a bucket on the ``cfg.prefill_chunk_sizes`` grid reuse one compiled
+    step. The scan body runs decode_step + sampling + per-slot done masking
+    fully on device; no token ever crosses to the host until the final
+    result. With ``eos_id`` set, finished slots emit ``eos_id`` and stop
+    advancing their cache position (their decode still runs — a fixed-shape
+    batch — but its writes land on a frozen position, which
+    ``update_kv_cache`` overwrites idempotently). Greedy output is
+    bit-identical to the per-token Python loop this replaces.
     """
     b, s = prompts.shape
-    prefill = make_prefill_step(cfg, mode=mode)
-    last_logits, caches = prefill(params, {"tokens": prompts})
-    caches = grow_caches(caches, cfg, s + steps)
+    last_logits, caches = prefill_bucketed(params, cfg, prompts, mode=mode)
+    caches = fit_caches(caches, cfg, s + steps)
 
     key = key if key is not None else jax.random.PRNGKey(0)
     greedy = temperature <= 0
@@ -201,7 +318,7 @@ def generate(
 
 
 # ---------------------------------------------------------------------------
-# Continuous batching scheduler (slot-based)
+# Continuous batching scheduler (slot-based, chunked prefill)
 # ---------------------------------------------------------------------------
 
 
@@ -214,27 +331,73 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class _PrefillPlan:
+    """Host-side chunk bookkeeping for a slot mid-prefill."""
+    tokens: np.ndarray  # [P] prompt padded to the chunk schedule
+    chunks: list  # chunk sizes, greedy large→small
+    ci: int  # next chunk index
+    off: int  # cache offset consumed so far (≡ 0 mod chunks[ci])
+    true_len: int  # unpadded prompt length
+
+
 class ServingEngine:
-    """Slot-based continuous batching over the jitted serve_step.
+    """Continuous batching over a fused chunked-prefill + decode tick.
 
     Fixed B decode slots; finished requests retire their slot, queued
-    requests prefill into free slots. Per-slot position vector drives the
-    causal mask, so heterogeneous sequence lengths coexist in one batch —
-    the batched analogue of the paper's single-stream prefill→decode flow.
+    requests are admitted into free slots and prefill *incrementally*: each
+    tick appends at most ``cfg.prefill_chunk_budget`` chunk-tokens into the
+    batched KV cache (at each slot's frontier, via the ``prefill_append``
+    path) while every decoding slot still advances one token — prefill never
+    stalls decode, and per-request caches are never materialized or
+    host-scattered. Chunk sizes come from ``cfg.prefill_chunk_sizes``, so at
+    most ``len(sizes)`` fused prefill shapes are ever compiled (3 by
+    default); ticks with no prefill work reuse the plain decode step.
+
+    The cache carries ``chunk_max`` trash rows past ``max_len``: slots with
+    no work this tick are diverted there (chunk writes at ``trash_base``,
+    decode writes at the last row), keeping every tick a fixed-shape batched
+    call without masking machinery inside the kernels.
 
     All per-slot decode state (current token, position, done flag, generated
     count, budget) lives on device; ``step()`` issues exactly one host
     transfer per scheduler tick — ``jax.device_get`` of one packed int32
-    [5, slots] array — regardless of slot count or tokens generated.
+    array ([4, slots] fused tick, [6, slots] decode-only tick) — regardless
+    of slot count or tokens generated.
     """
 
     def __init__(self, params, cfg, *, slots: int = 8, max_len: int = 2048,
-                 mode: str = "eval", eos_id: int = -1, attn_impl: str = "auto"):
+                 mode: str = "eval", eos_id: int = -1, attn_impl: str = "auto",
+                 prefill: str = "auto"):
         self.params, self.cfg, self.mode = params, cfg, mode
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
-        self.caches = init_caches(cfg, slots, max_len, dtype=cfg.dtype)
+        self.attn_impl = attn_impl
+        if prefill == "auto":
+            # chunked needs per-token batch independence: attention + dense
+            # FFN only (MoE capacity dropping couples tokens across slots, so
+            # trash-diverted rows could perturb live routing — opt in
+            # explicitly with prefill="chunked" if capacity is generous).
+            prefill = "chunked" if cfg.family == "dense" else "legacy"
+        self.prefill = prefill
+        sizes = tuple(sorted(cfg.prefill_chunk_sizes)) or (64, 128, 256)
+        # Drop chunk sizes no admissible prompt (len < max_len) can ever
+        # fill — otherwise a 64-row engine pays a 256-row trash tail (8x KV
+        # memory) for chunk shapes that would never compile anyway.
+        self.chunk_sizes = tuple(
+            s for s in sizes if s <= bucket_length(max_len, sizes))
+        chunk_schedule(1, self.chunk_sizes)  # validate the divisibility chain
+        cmax = self.chunk_sizes[-1]
+        if self.prefill == "chunked":
+            # usable [0, trash_base) + one chunk_max trash tail for diverted
+            # writes; trash_base is a multiple of every chunk size.
+            self.trash_base = _round_up(max_len, cmax)
+            self.cache_len = self.trash_base + cmax
+        else:
+            self.trash_base = None
+            self.cache_len = max_len
+        self.caches = init_caches(cfg, slots, self.cache_len, dtype=cfg.dtype)
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.live = [None] * slots  # slot -> Request
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
@@ -242,20 +405,62 @@ class ServingEngine:
         self.gen_count = jnp.zeros((slots,), jnp.int32)
         self.max_new_arr = jnp.zeros((slots,), jnp.int32)
         self.queue: list[Request] = []
-        self._pending_first: set[int] = set()  # slots whose prefill token is unrecorded
-        self._serve = jax.jit(make_serve_step(cfg, mode=mode, attn_impl=attn_impl))
-        self._advance = jax.jit(partial(_advance, eos_id=eos_id, max_len=max_len))
+        self._plan: list[_PrefillPlan | None] = [None] * slots
+        self._pending_first: set[int] = set()  # legacy path: unrecorded prefill token
+        self._fused: dict[int, Any] = {}  # chunk size -> fused tick jit
+        self._serve = _serve_step_cached(cfg, mode, attn_impl)
+        self._advance = _advance_cached(eos_id, max_len)
 
     def submit(self, req: Request):
         self.queue.append(req)
 
+    @property
+    def prefilling_slots(self) -> int:
+        """Slots currently mid-prefill (chunks still pending)."""
+        return sum(p is not None for p in self._plan)
+
+    @property
+    def decoding_slots(self) -> int:
+        """Live slots past their prefill (decoding one token per tick)."""
+        return sum(r is not None and p is None
+                   for r, p in zip(self.live, self._plan))
+
+    @property
+    def compiled_prefill_shapes(self) -> int:
+        """Fused prefill shapes compiled so far (≤ len(cfg.prefill_chunk_sizes))."""
+        return len(self._fused)
+
+    # -- admission ----------------------------------------------------------
+
+    def _admit(self, slot: int, req: Request) -> bool:
+        """Admit ``req`` into ``slot``; returns False (request rejected, marked
+        done with no output) when the prompt cannot fit the cache — one
+        oversized request must not crash the scheduler and strand the rest."""
+        prompt = np.asarray(req.prompt)
+        if prompt.shape[0] == 0 or prompt.shape[0] >= self.max_len:
+            req.done = True
+            return False
+        if self.prefill == "legacy":
+            self._prefill_slot(slot, req)
+            return True
+        chunks = chunk_schedule(prompt.shape[0], self.chunk_sizes)
+        padded = np.zeros((sum(chunks),), np.int64)
+        padded[: prompt.shape[0]] = prompt
+        self._plan[slot] = _PrefillPlan(tokens=padded, chunks=chunks, ci=0,
+                                        off=0, true_len=prompt.shape[0])
+        self.live[slot] = req
+        self.max_new_arr = self.max_new_arr.at[slot].set(req.max_new)
+        return True
+
     def _prefill_slot(self, slot: int, req: Request):
-        # Single-request prefill, then scatter its caches into the slot.
-        # No host sync here: the argmax stays on device and the token value is
-        # read out (once, batched) at the next tick's packed device_get.
-        prefill = make_prefill_step(self.cfg, mode=self.mode)
-        logits, caches = prefill(self.params, {"tokens": req.prompt[None]})
-        caches = grow_caches(caches, self.cfg, self.max_len)
+        # Legacy per-request prefill (non-attn mixer families): bucketed to
+        # the chunk-size grid so compiles are per bucket, then the per-request
+        # caches are scattered into the slot. The chunked path never runs
+        # this — its chunks land in the batched cache directly.
+        prompt = jnp.asarray(req.prompt)
+        logits, caches = prefill_bucketed(self.params, self.cfg, prompt[None],
+                                          mode=self.mode)
+        caches = fit_caches(caches, self.cfg, self.cache_len)
 
         # generic per-leaf scatter on the batch axis
         def rec(dst, src):
@@ -270,26 +475,94 @@ class ServingEngine:
             return dst.at[tuple(idx)].set(src.astype(dst.dtype))
 
         self.caches = rec(self.caches, caches)
-        self.pos = self.pos.at[slot].set(req.prompt.shape[0])
-        self.cur_tok = self.cur_tok.at[slot].set(
-            jnp.argmax(logits[0]).astype(jnp.int32)
-        )
-        self.done = self.done.at[slot].set(False)
+        plen = int(req.prompt.shape[0])
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        # the prefill token goes through the same retirement predicate as the
+        # chunked path's fin_done (device-side, no sync): max_new=1 requests
+        # emit exactly one token and an EOS first token stops the slot.
+        done0 = ((first == self.eos_id)
+                 | (req.max_new <= 1)
+                 | (plen >= self.max_len - 1))
+        self.pos = self.pos.at[slot].set(plen)
+        self.cur_tok = self.cur_tok.at[slot].set(first)
+        self.done = self.done.at[slot].set(done0)
         self.gen_count = self.gen_count.at[slot].set(1)
         self.max_new_arr = self.max_new_arr.at[slot].set(req.max_new)
         self.live[slot] = req
         self._pending_first.add(slot)
 
-    def step(self):
-        """One scheduler tick: fill free slots, one batched decode step, one
-        host transfer."""
-        for slot in range(self.slots):
-            if self.live[slot] is None and self.queue:
-                self._prefill_slot(slot, self.queue.pop(0))
-        if all(r is None for r in self.live):
-            return False
+    # -- the fused chunked-prefill + decode tick ------------------------------
+
+    def _get_fused(self, chunk: int):
+        fn = self._fused.get(chunk)
+        if fn is None:
+            fn = _fused_tick_step(
+                self.cfg, chunk, mode=self.mode, attn_impl=self.attn_impl,
+                eos_id=self.eos_id, max_len=self.max_len,
+                cache_len=self.cache_len, trash_base=self.trash_base)
+            self._fused[chunk] = fn
+        return fn
+
+    def _fused_tick(self, prefilling: list) -> bool:
+        slots = self.slots
+        head = self._plan[prefilling[0]]
+        chunk = head.chunks[head.ci]
+        budget = max(self.cfg.prefill_chunk_budget, chunk)
+        selected = [s for s in prefilling
+                    if self._plan[s].chunks[self._plan[s].ci] == chunk]
+        selected = selected[: budget // chunk]
+
+        chunk_tok = np.zeros((slots, chunk), np.int64)
+        chunk_off = np.full((slots,), self.trash_base, np.int32)
+        finishing = np.zeros((slots,), bool)
+        last_row = np.zeros((slots,), np.int32)
+        fin_pos = np.zeros((slots,), np.int32)
+        for s in selected:
+            p = self._plan[s]
+            chunk_tok[s] = p.tokens[p.off: p.off + chunk]
+            chunk_off[s] = p.off
+            if p.ci == len(p.chunks) - 1:
+                finishing[s] = True
+                last_row[s] = p.true_len - 1 - p.off
+                fin_pos[s] = p.true_len
+        dec_active = np.array(
+            [self.live[s] is not None and self._plan[s] is None
+             for s in range(slots)])
+
+        fused = self._get_fused(chunk)
+        (self.caches, self.cur_tok, self.pos, self.done, self.gen_count,
+         packed) = fused(
+            self.params, self.caches, self.cur_tok, self.pos, self.done,
+            self.gen_count, self.max_new_arr, jnp.asarray(dec_active),
+            jnp.asarray(chunk_tok), jnp.asarray(chunk_off),
+            jnp.asarray(finishing), jnp.asarray(last_row),
+            jnp.asarray(fin_pos))
+        tok, _, done_, _ = jax.device_get(packed)  # the tick's one transfer
+
+        for s in range(slots):
+            req = self.live[s]
+            if req is None:
+                continue
+            if finishing[s]:
+                self._plan[s] = None
+                req.generated.append(int(tok[s]))
+                if done_[s]:
+                    req.done = True
+                    self.live[s] = None
+            elif s in selected:  # mid-prefill: advance the plan
+                p = self._plan[s]
+                p.off += chunk
+                p.ci += 1
+            elif dec_active[s]:
+                req.generated.append(int(tok[s]))
+                if done_[s]:
+                    req.done = True
+                    self.live[s] = None
+        return True
+
+    def _decode_tick(self) -> bool:
         active = jnp.array([r is not None for r in self.live])
-        first_tok = self.cur_tok  # includes tokens from prefills this tick
+        first_tok = self.cur_tok  # includes tokens from legacy prefills this tick
         logits, self.caches = self._serve(
             self.params, {"tokens": self.cur_tok[:, None]}, self.caches, self.pos
         )
@@ -298,18 +571,37 @@ class ServingEngine:
             self.max_new_arr, active,
         )
         state = jax.device_get(packed)  # the tick's single host transfer
-        first, nxt, _, done, _ = state
+        first, nxt, _, done, _, entry_done = state
         for slot, req in enumerate(self.live):
             if req is None:
                 continue
             if slot in self._pending_first:
                 req.generated.append(int(first[slot]))
                 self._pending_first.discard(slot)
+                if entry_done[slot]:  # retired on its prefill token
+                    req.done = True
+                    self.live[slot] = None
+                    continue
             req.generated.append(int(nxt[slot]))
             if done[slot]:
                 req.done = True
                 self.live[slot] = None
         return True
+
+    def step(self):
+        """One scheduler tick: admit queued requests into free slots, then one
+        fused chunked-prefill + decode step (or a plain decode step when no
+        slot is mid-prefill). One host transfer either way."""
+        for slot in range(self.slots):
+            while self.live[slot] is None and self.queue:
+                if self._admit(slot, self.queue.pop(0)):
+                    break  # rejected requests don't consume the slot
+        if all(r is None for r in self.live):
+            return False
+        prefilling = [s for s in range(self.slots) if self._plan[s] is not None]
+        if prefilling:
+            return self._fused_tick(prefilling)
+        return self._decode_tick()
 
     def run(self):
         while self.queue or any(r is not None for r in self.live):
@@ -319,27 +611,123 @@ class ServingEngine:
 
 def _advance(logits, first_tok, pos, done, gen_count, max_new, active, *,
              eos_id: int, max_len: int):
-    """Pure per-tick state transition (jitted once per engine).
+    """Pure per-tick state transition for decode-only ticks (jitted once per
+    engine).
 
     Greedy-samples the batch, advances active slots' positions/counters, and
     folds the retirement conditions (EOS, budget, cache-full) into ``done`` —
-    all device-side. Returns the new state plus one packed int32 [5, slots]
-    array (prefill token, next token, position, done, count) so the scheduler
-    reads everything back in a single transfer.
+    all device-side. Returns the new state plus one packed int32 [6, slots]
+    array (prefill token, next token, position, done, count, done-at-entry —
+    the last row tells the scheduler a slot retired on its prefill token, so
+    its decode output this tick must be discarded) so the scheduler reads
+    everything back in a single transfer.
     """
     next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     inc = active.astype(jnp.int32)
     new_pos = pos + inc
     new_count = gen_count + inc
-    new_done = done | (
-        active
-        & (
-            (next_tok == eos_id)
-            | (new_count >= max_new)
-            | (new_pos >= max_len - 1)
-        )
-    )
+    new_done = done | (active & _retire(next_tok, new_pos, new_count, max_new,
+                                        eos_id=eos_id, max_len=max_len))
     packed = jnp.stack([
-        first_tok, next_tok, new_pos, new_done.astype(jnp.int32), new_count
+        first_tok, next_tok, new_pos, new_done.astype(jnp.int32), new_count,
+        done.astype(jnp.int32),
     ])
     return next_tok, new_pos, new_done, new_count, packed
+
+
+def _retire(next_tok, new_pos, new_count, max_new, *, eos_id: int, max_len: int):
+    """The one retirement predicate both tick paths share: EOS emitted,
+    generation budget spent, or cache full."""
+    return ((next_tok == eos_id)
+            | (new_count >= max_new)
+            | (new_pos >= max_len - 1))
+
+
+# Module-level compiled-step caches (configs are frozen dataclasses, hence
+# hashable): repeat ServingEngine instances with the same geometry — tests,
+# benchmarks, restarted servers — reuse compiled ticks instead of retracing.
+_SERVE_STEP_CACHE: dict = {}
+_ADVANCE_CACHE: dict = {}
+_FUSED_TICK_CACHE: dict = {}
+
+
+def _serve_step_cached(cfg, mode: str, attn_impl: str):
+    key_t = (cfg, mode, attn_impl)
+    fn = _SERVE_STEP_CACHE.get(key_t)
+    if fn is None:
+        # caches are donated (matching the fused tick) so decode-only ticks
+        # update the KV cache in place instead of copying it every step —
+        # the engine reassigns self.caches from the result each tick.
+        fn = jax.jit(make_serve_step(cfg, mode=mode, attn_impl=attn_impl),
+                     donate_argnums=(2,))
+        _SERVE_STEP_CACHE[key_t] = fn
+    return fn
+
+
+def _advance_cached(eos_id: int, max_len: int):
+    key_t = (eos_id, max_len)
+    fn = _ADVANCE_CACHE.get(key_t)
+    if fn is None:
+        fn = jax.jit(partial(_advance, eos_id=eos_id, max_len=max_len))
+        _ADVANCE_CACHE[key_t] = fn
+    return fn
+
+
+def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
+                     eos_id: int, max_len: int, cache_len: int,
+                     trash_base: int):
+    """The engine's one-jit scheduler tick for chunk size ``chunk``: decode
+    every decoding slot AND append one prompt chunk per selected prefilling
+    slot — inactive slots are diverted into the cache's trash tail, keeping
+    the call fixed-shape with no masking inside the kernels."""
+    key_t = (cfg, chunk, mode, attn_impl, eos_id, max_len, cache_len,
+             trash_base)
+    fn = _FUSED_TICK_CACHE.get(key_t)
+    if fn is not None:
+        return fn
+
+    def fused(params, caches, cur_tok, pos, done, gen_count, max_new,
+              dec_active, chunk_tok, chunk_off, finishing, last_row, fin_pos):
+        # 1. one decode token for every decoding slot (others diverted to
+        #    the trash row — fixed-shape batch, garbage ignored). The decode
+        #    pass piggybacks on every fused tick even when dec_active is
+        #    all-False (cold start, all slots prefilling): a prefill-only
+        #    variant would save that one forward but double the compiled
+        #    prefill shapes, and diverted slots' frontier (cache_len - 1)
+        #    defeats block skipping only for their own rows.
+        dpos = jnp.where(dec_active, pos, jnp.int32(cache_len - 1))
+        dec_logits, caches = Tr.decode_step(
+            params, {"tokens": cur_tok[:, None]}, caches, dpos, cfg,
+            mode=mode, attn_impl=attn_impl)
+        # 2. one chunk bucket appended at each selected slot's frontier
+        #    (idle slots write into the trash tail); the LM head runs only on
+        #    each slot's last_row hidden state, not all C chunk rows
+        first_logits, caches = Tr.prefill_chunk_step(
+            params, {"tokens": chunk_tok}, caches, chunk_off, cfg,
+            mode=mode, attn_impl=attn_impl, last_row=last_row,
+            prefix_limit=trash_base)
+        next_dec = jnp.argmax(dec_logits, axis=-1).astype(jnp.int32)
+        first_tok = jnp.argmax(first_logits, axis=-1).astype(jnp.int32)
+        # 3. decode advance (the _advance transition, masked to dec_active)
+        inc = dec_active.astype(jnp.int32)
+        new_pos = pos + inc
+        new_count = gen_count + inc
+        new_done = done | (dec_active & _retire(
+            next_dec, new_pos, new_count, max_new,
+            eos_id=eos_id, max_len=max_len))
+        new_tok = jnp.where(dec_active, next_dec, cur_tok)
+        # 4. prefill→decode handoff: finishing slots start decoding from
+        #    the chunk's last real row (their count becomes 1, pos = true_len)
+        new_tok = jnp.where(finishing, first_tok, new_tok)
+        new_pos = jnp.where(finishing, fin_pos, new_pos)
+        new_count = jnp.where(finishing, jnp.int32(1), new_count)
+        fin_done = _retire(first_tok, fin_pos, jnp.int32(1), max_new,
+                           eos_id=eos_id, max_len=max_len)
+        new_done = jnp.where(finishing, fin_done, new_done)
+        packed = jnp.stack([new_tok, new_pos,
+                            new_done.astype(jnp.int32), new_count])
+        return caches, new_tok, new_pos, new_done, new_count, packed
+
+    fn = jax.jit(fused, donate_argnums=(1,))
+    _FUSED_TICK_CACHE[key_t] = fn
+    return fn
