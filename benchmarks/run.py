@@ -17,6 +17,7 @@ def main() -> int:
         ("fig9_inference", "benchmarks.bench_inference"),
         ("decode_fast_path", "benchmarks.bench_decode"),
         ("prefill_fast_path", "benchmarks.bench_prefill"),
+        ("layer_fusion", "benchmarks.bench_layer_fusion"),
         ("tableV_compression", "benchmarks.bench_compression"),
     ]
     failures = 0

@@ -16,6 +16,15 @@ Three execution paths over one weight declaration:
 The packed matmul routes through ``kernels.ternary_matmul`` when
 ``use_kernel=True`` (TPU target; interpret-mode on CPU), else an XLA path with
 identical semantics (used for CPU tests and as the dry-run lowering).
+``use_kernel="tl"`` selects the paper-faithful table-lookup GEMV
+(``kernels.tl_gemv``) instead — group-index weights, online 3^G tables.
+
+**Fused NQD pipeline** (DESIGN.md §norm-quant): with ``fused`` on (the
+default for ``mode="packed"``), ``x`` may be a pre-quantized
+``(x_i8, x_scale)`` pair — the output of the fused norm-quant prologue or
+of the fused SwiGLU epilogue — so hidden states cross HBM in int8 wherever
+a ternary matmul follows; ``residual`` is folded into the dequant epilogue.
+Both are bit-identical to the unfused quantize→matmul→add sequence.
 """
 
 from __future__ import annotations
@@ -25,8 +34,10 @@ from typing import Any
 import jax.numpy as jnp
 
 from . import ternary
-from .packing import pack2, unpack2
+from .packing import encode_groups, pack2, unpack2
 from .params import ParamSpec
+
+TL_GROUP = 3  # trits per table index on the "tl" path (paper: 27-entry tables)
 
 
 def spec(n_in: int, n_out: int, axes: tuple, *, dtype=jnp.float32, scale=None) -> dict:
@@ -69,17 +80,63 @@ def pack_params(w) -> dict:
     return {"wp": wp, "scale": scale}
 
 
+def with_tl_indices(params: dict, *, g: int = TL_GROUP) -> dict:
+    """Precompute the table-lookup group indices for a packed param node.
+
+    Returns the node extended with ``w_idx [⌈N/g⌉, K] int32`` (the paper's
+    Offline_preprocess), so ``apply(use_kernel="tl")`` skips the per-call
+    unpack→encode. The contraction axis is zero-padded to a ``g`` multiple
+    (zero trits contribute nothing to any table sum).
+    """
+    return dict(params, w_idx=_tl_indices(params["wp"], g))
+
+
+def _tl_indices(wp, g: int):
+    w_t = unpack2(wp)
+    pad = (-w_t.shape[0]) % g
+    if pad:
+        w_t = jnp.pad(w_t, ((0, pad), (0, 0)))
+    return encode_groups(w_t, g)
+
+
+def _quantized_input(x, fused: bool):
+    """Accept float x (quantize here) or a pre-quantized (x_i8, scale) pair."""
+    if isinstance(x, tuple):
+        if not fused:
+            raise ValueError("pre-quantized input requires fused=True")
+        return x
+    return ternary.quantize_act(x)
+
+
 def apply(params: dict, x, *, mode: str = "train", use_kernel: bool | str = "auto",
-          out_dtype: Any = None):
+          out_dtype: Any = None, fused: bool | None = None, residual=None):
     """Apply BitLinear. ``x`` is [..., n_in]; returns [..., n_out].
 
     ``use_kernel="auto"`` routes the packed path through the Pallas kernels on
     TPU (decode-shaped calls — a few rows per step — take the small-M
     ``ternary_gemv`` weight-streaming path; prefill tiles take the blocked
     ``ternary_matmul``) and through the bit-identical XLA form elsewhere.
+    ``use_kernel="tl"`` takes the table-lookup GEMV (2-D weights only).
     Stacked weights (MoE experts fed as [E, N/4, K]) always use the XLA form.
+
+    ``fused`` (default: on for ``mode="packed"``, off — and rejected — for
+    train/eval) admits pre-quantized ``(x_i8, x_scale)`` input and a
+    ``residual`` folded into the matmul epilogue.
     """
-    out_dtype = out_dtype or x.dtype
+    if fused is None:
+        fused = mode == "packed"
+    if (residual is not None or isinstance(x, tuple)) and not (
+            fused and mode == "packed"):
+        raise ValueError(
+            "fused epilogue/prologue forms are packed-serving only "
+            f"(mode={mode!r}, fused={fused})")
+    if out_dtype is None:
+        if isinstance(x, tuple) and residual is None:
+            # The pair carries no activation dtype (x[1] is the f32 scale) —
+            # a silent f32 default would break fused/unfused bit-identity.
+            raise ValueError("pre-quantized input requires out_dtype= "
+                             "(or a residual to infer it from)")
+        out_dtype = residual.dtype if residual is not None else x.dtype
     if mode == "train":
         w = params["w"]
         return ternary.fake_quant_matmul(x, w.astype(x.dtype)).astype(out_dtype)
@@ -88,7 +145,10 @@ def apply(params: dict, x, *, mode: str = "train", use_kernel: bool | str = "aut
         x_i8, x_scale = ternary.quantize_act(x)
         return ternary.ternary_matmul_ref(x_i8, x_scale, w_t, w_scale, out_dtype=out_dtype)
     if mode == "packed":
-        x_i8, x_scale = ternary.quantize_act(x)
+        x_i8, x_scale = _quantized_input(x, fused)
+        if use_kernel == "tl":
+            return _apply_tl(params, x_i8, x_scale, out_dtype=out_dtype,
+                             residual=residual)
         if use_kernel == "auto":
             import jax
 
@@ -97,15 +157,18 @@ def apply(params: dict, x, *, mode: str = "train", use_kernel: bool | str = "aut
             from ..kernels.ternary_matmul import ops as tm_ops
 
             # ternary_gemv owns the decode-shape dispatch: small M takes the
-            # sublane weight-streaming path, larger M the tiled matmul.
+            # sublane weight-streaming path, larger M the tiled matmul. The
+            # residual add rides the kernels' dequant epilogue.
             return tm_ops.ternary_gemv(
-                x_i8, x_scale, params["wp"], params["scale"], out_dtype=out_dtype
+                x_i8, x_scale, params["wp"], params["scale"],
+                out_dtype=out_dtype, residual=residual
             )
         # XLA path: unpack (fused by XLA into the matmul producer) + int matmul.
         w_t = unpack2(params["wp"])
-        return ternary.ternary_matmul_ref(
+        out = ternary.ternary_matmul_ref(
             x_i8, x_scale, w_t, params["scale"], out_dtype=out_dtype
         )
+        return out if residual is None else out + residual
     if mode in ("wq", "wq_packed"):
         # weight-only quantization ablation: ternary weights, float activations.
         # (Also the exact-match twin of MLA weight absorption, which cannot
@@ -114,6 +177,63 @@ def apply(params: dict, x, *, mode: str = "train", use_kernel: bool | str = "aut
                             dtype=x.dtype)
         return jnp.matmul(x, w).astype(out_dtype)
     raise ValueError(f"unknown mode {mode!r}")
+
+
+def _apply_tl(params, x_i8, x_scale, *, out_dtype, residual=None):
+    """Table-lookup GEMV path (paper Algorithm 1, ``kernels.tl_gemv``).
+
+    Group indices come from ``params["w_idx"]`` when precomputed (see
+    :func:`with_tl_indices`), else are derived from the packed weights on
+    the fly — selectable end-to-end either way; precompute for speed.
+    """
+    from ..kernels.tl_gemv import ops as tl_ops
+
+    if params["wp"].ndim != 2:
+        raise ValueError("use_kernel='tl' supports 2-D weights only")
+    w_idx = params.get("w_idx")
+    if w_idx is None:
+        w_idx = _tl_indices(params["wp"], TL_GROUP)
+    npad = w_idx.shape[0] * TL_GROUP - x_i8.shape[-1]
+    if npad:
+        pads = [(0, 0)] * (x_i8.ndim - 1) + [(0, npad)]
+        x_i8 = jnp.pad(x_i8, pads)
+    out = tl_ops.tl_gemv(x_i8, x_scale, w_idx, params["scale"], g=TL_GROUP,
+                         out_dtype=out_dtype)
+    return out if residual is None else out + residual
+
+
+def swiglu(gate_params: dict, up_params: dict, xq: tuple, *,
+           use_kernel: bool | str = "auto", act_dtype=jnp.bfloat16) -> tuple:
+    """Fused packed SwiGLU: (x_i8, x_scale) -> (h_i8, h_scale).
+
+    Gate and up matmuls plus the dequant→SiLU→(×up)→requant epilogue run in
+    one kernel (``ternary_swiglu``) so the MLP's hidden activation never
+    materializes in float; the XLA fallback is the bit-identical op
+    sequence. Both sides of the dispatch share the contract: int8 in,
+    int8 + per-token scale out.
+    """
+    x_i8, x_scale = xq
+    if use_kernel == "auto":
+        import jax
+
+        use_kernel = (jax.default_backend() == "tpu"
+                      and gate_params["wp"].ndim == 2)
+    if use_kernel:
+        from ..kernels.ternary_matmul import ops as tm_ops
+
+        return tm_ops.ternary_swiglu(
+            x_i8, x_scale, gate_params["wp"], gate_params["scale"],
+            up_params["wp"], up_params["scale"], act_dtype=act_dtype,
+        )
+    import jax
+
+    g = ternary.ternary_matmul_ref(
+        x_i8, x_scale, unpack2(gate_params["wp"]), gate_params["scale"],
+        out_dtype=act_dtype)
+    u = ternary.ternary_matmul_ref(
+        x_i8, x_scale, unpack2(up_params["wp"]), up_params["scale"],
+        out_dtype=act_dtype)
+    return ternary.quantize_act(jax.nn.silu(g) * u)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,46 @@
+"""Shared wrapper boilerplate for the kernel packages.
+
+Every ``ops.py`` in this tree repeats the same three moves before a
+``pallas_call``: resolve ``interpret=None`` to "interpret everywhere but
+TPU", flatten the caller's leading batch dims into one row axis, and pad
+axes up to block multiples (sliced back off after the call). They live here
+once so the policies stay in lockstep across kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> interpret mode everywhere but real TPU (the shared
+    default of every kernel wrapper)."""
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def flatten_lead(x: jax.Array) -> tuple[jax.Array, tuple, int]:
+    """[..., N] -> ([M, N], lead_shape, M): one row per leading-dim element."""
+    *lead, n = x.shape
+    m = 1
+    for d in lead:
+        m *= d
+    return x.reshape(m, n), tuple(lead), m
+
+
+def pad_to(x: jax.Array, axis: int, target: int) -> jax.Array:
+    """Zero-pad ``axis`` up to ``target`` elements (no-op when already there)."""
+    n = x.shape[axis]
+    if n == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads)

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import _common as C
 from .kernel import decode_attention_kernel
 
 
@@ -26,21 +27,20 @@ def decode_attention(
     slot's frontier, so the in-kernel mask discards them) and the GQA group to
     the 8-row sublane (padded q rows are sliced away).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = C.resolve_interpret(interpret)
     b, h, d = q.shape
     hk, m = k_cache.shape[1], k_cache.shape[2]
     g = h // hk
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
 
-    bkv = min(bkv, _round_up(m, 128))
-    mp = _round_up(m, bkv)
+    bkv = min(bkv, C.round_up(m, 128))
+    mp = C.round_up(m, bkv)
     if mp != m:
         pad = ((0, 0), (0, 0), (0, mp - m), (0, 0))
         k_cache = jnp.pad(k_cache, pad)
         v_cache = jnp.pad(v_cache, pad)
 
-    gp = _round_up(g, 8)  # sublane shape for the grouped-query block
+    gp = C.round_up(g, 8)  # sublane shape for the grouped-query block
     qg = q.reshape(b, hk, g, d)
     if gp != g:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
@@ -74,7 +74,3 @@ def schedule_blocks(pos, max_len: int, *, bkv: int = 128, window: int = 0):
         jmin = np.maximum(pos - window + 1, 0) // bkv
     live = (jmax - jmin + 1).astype(np.int64)
     return int(live.sum()), int(dense * pos.size)
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m

@@ -1,12 +1,18 @@
 """Pallas TPU kernel: fused RMSNorm + absmax int8 quantization (paper C3).
 
-TeLLMe observes that RMSNorm and Absmax quantization are each two-pass
-(reduce, then apply) and fuses the four logical passes into two hardware
-passes. On TPU the analogous cost is HBM round-trips: the naive sequence
-(norm kernel → write → read → quant kernel) moves the activation row through
-HBM twice. Here the row is resident in VMEM once: both reductions (Σx² and
+TeLLMe's normalization-and-quantization unit observes that RMSNorm and
+Absmax quantization are each two-pass (reduce, then apply) and fuses the
+four logical passes into two hardware passes. On TPU the analogous cost is
+HBM round-trips: the naive sequence (norm fusion → write bf16 row → read →
+quant fusion) moves the activation row through HBM twice and writes it once
+in float. Here the row is VMEM-resident once: both reductions (Σx² and
 max|x·γ|) and both applications happen in a single pass, emitting the int8
-row + its per-token scale — i.e. 1 HBM read + ~¼ HBM write of the naive 2+2.
+row + its per-token f32 scale — 1 HBM read + ~¼-size write.
+
+The in-kernel arithmetic deliberately mirrors the unfused composition op
+for op (f32 rsqrt-mul norm, cast back to the input dtype, then
+``ternary.quantize_act`` on the cast row), so the fused path is
+bit-identical to norm-then-quant — the wiring bar in DESIGN.md §norm-quant.
 
 Grid: (M/bm,); block [bm, N] (N up to 16 K fits comfortably: 16384·128·4 B
 = 8 MiB at bm=128, f32 — ops.py drops bm for wider rows).
@@ -20,19 +26,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core import ternary
+
 
 def _kernel(x_ref, g_ref, i8_ref, s_ref, *, eps: float):
-    x = x_ref[...].astype(jnp.float32)  # [bm, N] — single VMEM residency
-    gamma = g_ref[...].astype(jnp.float32)  # [1, N]
-    rms = jnp.sqrt(jnp.mean(x * x, axis=1, keepdims=True) + eps)
-    y = x / rms * gamma
-    s = jnp.maximum(jnp.max(jnp.abs(y), axis=1, keepdims=True), 1e-8) / 127.0
-    i8_ref[...] = jnp.clip(jnp.round(y / s), -127, 127).astype(jnp.int8)
+    x = x_ref[...]  # [bm, N] — single VMEM residency
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=1, keepdims=True) + eps)
+    y = (xf * rms * g_ref[...].astype(jnp.float32)).astype(x.dtype)
+    x_i8, s = ternary.quantize_act(y)
+    i8_ref[...] = x_i8
     s_ref[...] = s
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "eps", "interpret"))
-def rmsnorm_quant_kernel(
+def norm_quant_kernel(
     x: jax.Array,  # [M, N]
     gamma: jax.Array,  # [1, N]
     *,

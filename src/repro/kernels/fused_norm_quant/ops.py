@@ -1,0 +1,32 @@
+"""Jitted wrapper for the fused RMSNorm+quant kernel (the NQD prologue).
+
+``impl`` mirrors the attention ops' dispatch: ``"kernel"`` runs the Pallas
+kernel (interpret mode off-TPU), ``"xla"`` the bit-identical oracle
+composition (the CPU serving path — interpret-mode Pallas is an emulator,
+not a fast path), ``"auto"`` kernel-on-TPU.
+"""
+
+from __future__ import annotations
+
+from .. import _common as C
+from .kernel import norm_quant_kernel
+from .ref import norm_quant as norm_quant_ref
+
+
+def norm_quant(x, gamma, *, eps: float = 1e-5, impl: str = "auto",
+               interpret=None):
+    """x [..., N], gamma [N] -> (int8 [..., N], f32 scale [..., 1])."""
+    if impl == "auto":
+        impl = "kernel" if C.on_tpu() else "xla"
+    if impl == "xla":
+        return norm_quant_ref(x, gamma, eps=eps)
+    interpret = C.resolve_interpret(interpret)
+    x2, lead, m = C.flatten_lead(x)
+    n = x2.shape[1]
+    # Decode-shaped calls (a few slot rows) clamp to a sublane block instead
+    # of norming a full 128-row tile of padding — same policy as ternary_gemv.
+    bm = min(128 if n <= 16384 else 32, C.round_up(m, 8))
+    x2 = C.pad_to(x2, 0, C.round_up(m, bm))
+    i8, s = norm_quant_kernel(x2, gamma.reshape(1, n), bm=bm, eps=eps,
+                              interpret=interpret)
+    return i8[:m].reshape(*lead, n), s[:m].reshape(*lead, 1)

@@ -2,9 +2,9 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from .. import _common as C
 from .kernel import prefill_append_kernel
 
 
@@ -32,8 +32,7 @@ def prefill_append(
     engine's trash-diverted slots): their prefix blocks all go dead instead
     of streaming the whole cache for an output nobody reads.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = C.resolve_interpret(interpret)
     b, h, c, d = q.shape
     hk, m = k_cache.shape[1], k_cache.shape[2]
     g = h // hk

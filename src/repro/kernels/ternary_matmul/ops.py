@@ -1,22 +1,19 @@
-"""Jitted public wrapper for the packed ternary matmul kernel.
+"""Jitted public wrappers for the packed ternary matmul kernels.
 
-Handles shape padding/blocking policy and batch-dim flattening; on non-TPU
-backends runs the kernel in interpret mode (bit-identical semantics).
+Handle shape padding/blocking policy and batch-dim flattening; on non-TPU
+backends the kernels run in interpret mode (bit-identical semantics).
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from .kernel import ternary_gemv_kernel, ternary_matmul_kernel
+from .. import _common as C
+from .kernel import ternary_gemv_kernel, ternary_matmul_kernel, ternary_swiglu_kernel
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def ternary_gemv(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32, interpret=None):
+def ternary_gemv(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32,
+                 residual=None, interpret=None):
     """Decode GEMV: x_i8 [..., N] int8 (few rows) × packed wp [N/4, K] -> [..., K].
 
     Small-M twin of :func:`ternary_matmul`: M is padded to a sublane block
@@ -24,65 +21,98 @@ def ternary_gemv(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32, interpret
     over K only, so the 2-bit weight stream is read exactly once against a
     VMEM-resident activation block. Bit-identical to :func:`ternary_matmul`
     (same plane-major int32 accumulation and fused dequant epilogue).
+    ``residual [..., K]`` is added inside the epilogue (out_dtype arithmetic,
+    bit-identical to a separate ``out + residual``).
     """
-    if interpret is None:
-        interpret = not _on_tpu()
-    *lead, n = x_i8.shape
-    m = 1
-    for d in lead:
-        m *= d
+    interpret = C.resolve_interpret(interpret)
+    x2, lead, m = C.flatten_lead(x_i8)
     if m > 16:  # not a decode shape — use the tiled prefill path
         return ternary_matmul(
-            x_i8, x_scale, wp, w_scale, out_dtype=out_dtype, interpret=interpret
+            x_i8, x_scale, wp, w_scale, out_dtype=out_dtype,
+            residual=residual, interpret=interpret
         )
-    bm = _round_up(max(m, 1), 8)  # 8 or 16: sublane-shaped activation block
-    x2 = x_i8.reshape(m, n)
-    s2 = x_scale.reshape(m, 1)
-    if bm != m:
-        x2 = jnp.pad(x2, ((0, bm - m), (0, 0)))
-        s2 = jnp.pad(s2, ((0, bm - m), (0, 0)))
+    bm = C.round_up(max(m, 1), 8)  # 8 or 16: sublane-shaped activation block
+    s2 = C.pad_to(x_scale.reshape(m, 1), 0, bm)
+    x2 = C.pad_to(x2, 0, bm)
     n4, k = wp.shape
     bk = 512 if k % 512 == 0 else 128
-    kp = _round_up(k, bk)
-    wp2 = jnp.pad(wp, ((0, 0), (0, kp - k))) if kp != k else wp
+    kp = C.round_up(k, bk)
+    wp2 = C.pad_to(wp, 1, kp)
     ws = jnp.asarray(w_scale, jnp.float32).reshape(1, 1)
+    r2 = None
+    if residual is not None:
+        r2 = C.pad_to(C.pad_to(residual.astype(out_dtype).reshape(m, k), 0, bm), 1, kp)
     out = ternary_gemv_kernel(
-        x2, s2, wp2, ws, bm=bm, bk=bk, out_dtype=out_dtype, interpret=interpret
+        x2, s2, wp2, ws, r2, bm=bm, bk=bk, out_dtype=out_dtype, interpret=interpret
     )
     return out[:m, :k].reshape(*lead, k)
 
 
-def ternary_matmul(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32, interpret=None):
+def ternary_matmul(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32,
+                   residual=None, interpret=None):
     """x_i8 [..., N] int8 × packed wp [N/4, K] -> [..., K].
 
     Leading dims are flattened to M; M and K are padded to block multiples.
+    ``residual [..., K]`` is added inside the dequant epilogue.
     """
-    if interpret is None:
-        interpret = not _on_tpu()
-    *lead, n = x_i8.shape
-    m = 1
-    for d in lead:
-        m *= d
-    x2 = x_i8.reshape(m, n)
+    interpret = C.resolve_interpret(interpret)
+    x2, lead, m = C.flatten_lead(x_i8)
+    n = x2.shape[1]
     s2 = x_scale.reshape(m, 1)
     n4, k = wp.shape
 
     bm = 128 if n <= 32768 else 64
-    bm = min(bm, _round_up(m, 8))
-    bk = 128 if k >= 128 else _round_up(k, 128)
-    mp = _round_up(m, bm)
-    kp = _round_up(k, bk)
-    if mp != m:
-        x2 = jnp.pad(x2, ((0, mp - m), (0, 0)))
-        s2 = jnp.pad(s2, ((0, mp - m), (0, 0)))
-    wp2 = jnp.pad(wp, ((0, 0), (0, kp - k))) if kp != k else wp
+    bm = min(bm, C.round_up(m, 8))
+    bk = 128 if k >= 128 else C.round_up(k, 128)
+    mp = C.round_up(m, bm)
+    kp = C.round_up(k, bk)
+    x2 = C.pad_to(x2, 0, mp)
+    s2 = C.pad_to(s2, 0, mp)
+    wp2 = C.pad_to(wp, 1, kp)
     ws = jnp.asarray(w_scale, jnp.float32).reshape(1, 1)
+    r2 = None
+    if residual is not None:
+        r2 = C.pad_to(C.pad_to(residual.astype(out_dtype).reshape(m, k), 0, mp), 1, kp)
 
     out = ternary_matmul_kernel(
-        x2, s2, wp2, ws, bm=bm, bk=bk, out_dtype=out_dtype, interpret=interpret
+        x2, s2, wp2, ws, r2, bm=bm, bk=bk, out_dtype=out_dtype, interpret=interpret
     )
     return out[:m, :k].reshape(*lead, k)
 
 
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
+def _pad_packed_cols(wp, kp: int):
+    """Zero-*trit* column padding for planar pack2 weights (pad byte 0x55)."""
+    k = wp.shape[1]
+    if k == kp:
+        return wp
+    return jnp.pad(wp, ((0, 0), (0, kp - k)), constant_values=0x55)
+
+
+def ternary_swiglu(x_i8, x_scale, wg, wg_scale, wu, wu_scale, *,
+                   act_dtype=jnp.bfloat16, interpret=None):
+    """Fused SwiGLU epilogue: int8 activations in, int8 hidden out.
+
+    x_i8 [..., N] × gate/up packed [N/4, K] -> (h_i8 [..., K], h_scale
+    [..., 1]) with h = silu(x·Wg)·(x·Wu) requantized per token — the MLP's
+    hidden activation never materializes in float outside VMEM. Padded K
+    columns are zero in both weights, so they cannot move the absmax.
+    """
+    interpret = C.resolve_interpret(interpret)
+    x2, lead, m = C.flatten_lead(x_i8)
+    n4, k = wg.shape
+    bm = min(128, C.round_up(m, 8))
+    mp = C.round_up(m, bm)
+    x2 = C.pad_to(x2, 0, mp)
+    s2 = C.pad_to(x_scale.reshape(m, 1), 0, mp)
+    kp = C.round_up(k, 128)
+    # Padded K columns must decode to *zero trits* so they can't move the
+    # per-token absmax: pack2 is biased (byte 0 = four -1 trits), so the pad
+    # byte is 0x55 — four biased-zero trits — not 0.
+    wg2 = _pad_packed_cols(wg, kp)
+    wu2 = _pad_packed_cols(wu, kp)
+    h_i8, h_s = ternary_swiglu_kernel(
+        x2, s2, wg2, jnp.asarray(wg_scale, jnp.float32).reshape(1, 1),
+        wu2, jnp.asarray(wu_scale, jnp.float32).reshape(1, 1),
+        bm=bm, act_dtype=act_dtype, interpret=interpret,
+    )
+    return h_i8[:m, :k].reshape(*lead, k), h_s[:m].reshape(*lead, 1)

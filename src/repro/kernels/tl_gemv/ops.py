@@ -2,26 +2,20 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from .. import _common as C
 from .kernel import tl_gemv_kernel
 
 
 def tl_gemv(x_i8, x_scale, w_idx, w_scale, *, g: int = 3, interpret=None, out_dtype=jnp.float32):
     """x_i8 [..., N] int8 × group-index weights [N/g, K] -> [..., K]."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    *lead, n = x_i8.shape
-    m = 1
-    for d in lead:
-        m *= d
-    x2 = x_i8.reshape(m, n)
+    interpret = C.resolve_interpret(interpret)
+    x2, lead, m = C.flatten_lead(x_i8)
     s2 = x_scale.reshape(m, 1)
     t, k = w_idx.shape
     bk = 128
-    kp = ((k + bk - 1) // bk) * bk
-    w2 = jnp.pad(w_idx, ((0, 0), (0, kp - k))) if kp != k else w_idx
+    w2 = C.pad_to(w_idx, 1, C.round_up(k, bk))
     ws = jnp.asarray(w_scale, jnp.float32).reshape(1, 1)
     out = tl_gemv_kernel(x2, s2, w2, ws, g=g, bk=bk, interpret=interpret)
     return out[:, :k].reshape(*lead, k).astype(out_dtype)

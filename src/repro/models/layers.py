@@ -32,6 +32,19 @@ def rmsnorm(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
     return (xf * rms * params["gamma"].astype(jnp.float32)).astype(x.dtype)
 
 
+def norm_quant(params: dict, x: jax.Array, *, eps: float = 1e-5,
+               impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Fused NQD prologue: RMSNorm + per-token absmax int8 in one pass.
+
+    Returns ``(x_i8 [..., N], x_scale [..., 1])`` — bit-identical to
+    ``quantize_act(rmsnorm(params, x))`` (kernels/fused_norm_quant), ready
+    for ``bitlinear.apply``'s pre-quantized fused form.
+    """
+    from ..kernels.fused_norm_quant import ops as nq_ops
+
+    return nq_ops.norm_quant(x, params["gamma"], eps=eps, impl=impl)
+
+
 # ---------------------------------------------------------------------------
 # Rotary position embeddings
 # ---------------------------------------------------------------------------
@@ -41,16 +54,40 @@ def rope_freqs(head_dim: int, theta: float) -> jax.Array:
     return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
 
 
-def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
-    """x [..., S, D] (D even), positions [..., S] -> rotated x."""
+def rope_tables(positions: jax.Array, head_dim: int, *,
+                theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """(cos, sin) [..., S, D/2] for ``positions [..., S]``.
+
+    Computed once per forward/decode step and threaded through the layer
+    stack: every layer rotates with the same angles, so recomputing
+    ``rope_freqs`` + trig per layer (per scan iteration!) was pure waste.
+    """
+    freqs = rope_freqs(head_dim, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope_tables(x: jax.Array, rope: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """x [..., S, D] (D even) rotated by precomputed (cos, sin) [..., S, D/2]."""
     d = x.shape[-1]
-    freqs = rope_freqs(d, theta)  # [D/2]
-    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
-    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    cos, sin = rope
     x1 = x[..., : d // 2].astype(jnp.float32)
     x2 = x[..., d // 2 :].astype(jnp.float32)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return out.astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0,
+               rope: tuple[jax.Array, jax.Array] | None = None) -> jax.Array:
+    """x [..., S, D] (D even), positions [..., S] -> rotated x.
+
+    ``rope`` short-circuits the per-call table build with tables from
+    :func:`rope_tables` (same values — the tables are a hoisted common
+    subexpression, not a different rotation).
+    """
+    if rope is None:
+        rope = rope_tables(positions, x.shape[-1], theta=theta)
+    return apply_rope_tables(x, rope)
 
 
 # ---------------------------------------------------------------------------
@@ -103,6 +140,25 @@ def mlp(params: dict, x: jax.Array, *, mode: str = "train") -> jax.Array:
     h = jax.nn.silu(g) * u  # SiLU fused into the gate matmul epilogue on HW
     h = constrain(h, "act_batch", None, "act_mlp")
     return bitlinear.apply(params["down"], h, mode=mode)
+
+
+def mlp_fused(params: dict, xq: tuple, *, out_dtype, residual=None,
+              use_kernel: bool | str = "auto") -> jax.Array:
+    """Packed SwiGLU MLP over the fused NQD pipeline (DESIGN.md §norm-quant).
+
+    ``xq = (x_i8, x_scale)`` from :func:`norm_quant`; the gate/up matmuls,
+    SiLU and the requant run in one fused unit, and the down projection
+    folds ``residual`` into its dequant epilogue — so between the norm-quant
+    prologue and this function's output the hidden state crosses HBM only
+    as int8 + one scale per token. Bit-identical to :func:`mlp` on the
+    packed path (the sharding constraint is the one thing dropped: the
+    int8-resident stack is a single-device serving path).
+    """
+    hq = bitlinear.swiglu(params["gate"], params["up"], xq,
+                          use_kernel=use_kernel, act_dtype=out_dtype)
+    return bitlinear.apply(params["down"], hq, mode="packed", fused=True,
+                           use_kernel=use_kernel, out_dtype=out_dtype,
+                           residual=residual)
 
 
 # ---------------------------------------------------------------------------

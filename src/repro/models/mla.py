@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from ..core import bitlinear
 from ..parallel import constrain
 from .attention import prefill_attention
-from .layers import apply_rope, rmsnorm, rmsnorm_spec
+from .layers import apply_rope_tables, rmsnorm, rmsnorm_spec, rope_tables
 
 
 def mla_spec(cfg) -> dict:
@@ -36,25 +36,28 @@ def mla_spec(cfg) -> dict:
     }
 
 
-def _project_qkv(params, x, cfg, positions, mode):
+def _project_qkv(params, x, cfg, positions, mode, rope=None):
     b, s, _ = x.shape
     h = cfg.n_heads
-    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
-    q = bitlinear.apply(params["q_proj"], x, mode=mode).reshape(b, s, h, nope + rope)
+    nope, rdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if rope is None:  # per-step tables normally arrive from transformer.rope_for
+        rope = rope_tables(positions, rdim, theta=cfg.rope_theta)
+    rope_h = (rope[0][:, None], rope[1][:, None])  # broadcast over heads
+    q = bitlinear.apply(params["q_proj"], x, mode=mode).reshape(b, s, h, nope + rdim)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
-    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions[:, None], theta=cfg.rope_theta)
+    q_rope = apply_rope_tables(q_rope.transpose(0, 2, 1, 3), rope_h)
     kv = bitlinear.apply(params["kv_down"], x, mode=mode)
     c_kv = rmsnorm(params["kv_norm"], kv[..., : cfg.kv_lora_rank], eps=cfg.norm_eps)
     k_rope = kv[..., cfg.kv_lora_rank :]  # [B, S, rope] shared across heads
-    k_rope = apply_rope(k_rope[:, None], positions[:, None], theta=cfg.rope_theta)
+    k_rope = apply_rope_tables(k_rope[:, None], rope_h)
     return q_nope.transpose(0, 2, 1, 3), q_rope, c_kv, k_rope[:, 0]
 
 
-def mla_prefill(params, x, cfg, positions, *, mode="train"):
+def mla_prefill(params, x, cfg, positions, *, mode="train", rope=None):
     """Returns (attn_out [B, S, d], cache dict with latent KV)."""
     b, s, _ = x.shape
     h = cfg.n_heads
-    q_nope, q_rope, c_kv, k_rope = _project_qkv(params, x, cfg, positions, mode)
+    q_nope, q_rope, c_kv, k_rope = _project_qkv(params, x, cfg, positions, mode, rope)
     k_nope = bitlinear.apply(params["k_up"], c_kv, mode=mode)
     k_nope = k_nope.reshape(b, s, h, cfg.qk_nope_head_dim).transpose(0, 2, 1, 3)
     v = bitlinear.apply(params["v_up"], c_kv, mode=mode)
@@ -72,7 +75,7 @@ def mla_prefill(params, x, cfg, positions, *, mode="train"):
     return proj, cache
 
 
-def mla_decode(params, x, cfg, cache, pos, *, mode="packed"):
+def mla_decode(params, x, cfg, cache, pos, *, mode="packed", rope=None):
     """x [B, 1, d] new token; cache {c_kv [B, M, R], k_rope [B, M, rope]}.
 
     Decode runs *weight-absorbed*: instead of decompressing the latent cache
@@ -88,7 +91,7 @@ def mla_decode(params, x, cfg, cache, pos, *, mode="packed"):
     pos = jnp.asarray(pos)
     pos_b = jnp.broadcast_to(pos, (b,))
     positions = pos_b[:, None]
-    q_nope, q_rope, c_new, kr_new = _project_qkv(params, x, cfg, positions, mode)
+    q_nope, q_rope, c_new, kr_new = _project_qkv(params, x, cfg, positions, mode, rope)
     m = cache["c_kv"].shape[1]
     if pos.ndim == 0:
         # synchronized decode: slice-sized in-place update, shards cleanly

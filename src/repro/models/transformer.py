@@ -209,15 +209,27 @@ def pack_tree(params, specs):
 
 
 def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
-                attn_impl="auto", prefix_limit=0):
+                attn_impl="auto", prefix_limit=0, rope=None, xq=None,
+                residual=None):
+    """``xq`` (the fused norm-quant prologue's ``(x_i8, x_scale)``) replaces
+    ``x`` as the projection input on the int8-resident path; ``residual`` is
+    folded into the o-projection's dequant epilogue. ``rope`` carries the
+    step's precomputed (cos, sin) tables (built here when absent)."""
     b, s, _ = x.shape
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     window = cfg.sliding_window if kind.local else 0
-    q = bitlinear.apply(bp["q"], x, mode=mode).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
-    k = bitlinear.apply(bp["k"], x, mode=mode).reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
-    v = bitlinear.apply(bp["v"], x, mode=mode).reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
-    q = L.apply_rope(q, positions[:, None], theta=cfg.rope_theta)
-    k = L.apply_rope(k, positions[:, None], theta=cfg.rope_theta)
+    src = xq if xq is not None else x
+    q = bitlinear.apply(bp["q"], src, mode=mode, out_dtype=x.dtype)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = bitlinear.apply(bp["k"], src, mode=mode, out_dtype=x.dtype)
+    k = k.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    v = bitlinear.apply(bp["v"], src, mode=mode, out_dtype=x.dtype)
+    v = v.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    if rope is None:
+        rope = L.rope_tables(positions, hd, theta=cfg.rope_theta)
+    rope_h = (rope[0][:, None], rope[1][:, None])  # broadcast over heads
+    q = L.apply_rope_tables(q, rope_h)
+    k = L.apply_rope_tables(k, rope_h)
     q = constrain(q, "act_batch", "act_heads", None, None)
     if cache is None:  # prefill / train
         out = attn_ops.prefill_attention(
@@ -243,7 +255,8 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
         new_cache = {"k": k_c, "v": v_c}
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
     out = constrain(out, "act_batch", None, "act_heads")
-    return bitlinear.apply(bp["o"], out, mode=mode), new_cache
+    return bitlinear.apply(bp["o"], out, mode=mode, out_dtype=x.dtype,
+                           residual=residual), new_cache
 
 
 def _apply_ffn(fp, x, cfg, kind, pcfg, *, mode):
@@ -265,9 +278,20 @@ def _apply_ffn(fp, x, cfg, kind, pcfg, *, mode):
 
 
 def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=None,
-                pos=None, attn_impl="auto", prefix_limit=0):
-    """Returns (x, new_cache, aux)."""
+                pos=None, attn_impl="auto", prefix_limit=0, rope=None,
+                fused=None):
+    """Returns (x, new_cache, aux).
+
+    ``rope`` is the step's precomputed table dict from :func:`rope_for`
+    (per-mixer (cos, sin); built lazily when absent). ``fused`` routes
+    attn+dense blocks through the int8-resident NQD pipeline — default on
+    for ``mode="packed"`` (bit-identical to the unfused path), off
+    elsewhere; non-eligible mixers/ffns fall through to the unfused form.
+    """
     aux = jnp.float32(0.0)
+    rope = rope or {}
+    if fused is None:
+        fused = mode == "packed"
     if kind.mixer == "rwkv":
         st = cache or {
             "wkv": jnp.zeros((x.shape[0], cfg.d_model // cfg.rwkv_head_dim,
@@ -292,21 +316,39 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
         x = x + y2
         return x, {"wkv": wkv, "x_time": x_last, "x_chan": x_chan}, aux
 
-    h = L.rmsnorm(bp["ln1"], x, eps=cfg.norm_eps)
     if cache is not None and x.shape[1] > 1 and kind.mixer != "attn":
         raise NotImplementedError(
             f"prefill_chunk (multi-token step against a cache) is only "
             f"implemented for the attn mixer, not {kind.mixer!r}"
         )
+    if fused and mode == "packed" and kind.mixer == "attn" and kind.ffn == "dense":
+        # Int8-resident fast path (DESIGN.md §norm-quant): the norm-quant
+        # prologue feeds the projections pre-quantized, the o/down matmuls
+        # absorb the residual adds, and the SwiGLU hidden never leaves the
+        # matmul pipeline as float. Bit-identical to the unfused branch.
+        hq = L.norm_quant(bp["ln1"], x, eps=cfg.norm_eps)
+        x, new_cache = _apply_attn(bp["attn"], x, cfg, kind, positions, mode=mode,
+                                   cache=cache, pos=pos, attn_impl=attn_impl,
+                                   prefix_limit=prefix_limit,
+                                   rope=rope.get("attn"), xq=hq, residual=x)
+        x = constrain(x, "act_batch", "act_seq", None)
+        h2q = L.norm_quant(bp["ln2"], x, eps=cfg.norm_eps)
+        x = L.mlp_fused(bp["ffn"], h2q, out_dtype=x.dtype, residual=x)
+        x = constrain(x, "act_batch", "act_seq", None)
+        return x, new_cache, aux
+
+    h = L.rmsnorm(bp["ln1"], x, eps=cfg.norm_eps)
     if kind.mixer == "attn":
         y, new_cache = _apply_attn(bp["attn"], h, cfg, kind, positions, mode=mode,
                                    cache=cache, pos=pos, attn_impl=attn_impl,
-                                   prefix_limit=prefix_limit)
+                                   prefix_limit=prefix_limit, rope=rope.get("attn"))
     elif kind.mixer == "mla":
         if cache is None:
-            y, new_cache = mla_mod.mla_prefill(bp["attn"], h, cfg, positions, mode=mode)
+            y, new_cache = mla_mod.mla_prefill(bp["attn"], h, cfg, positions, mode=mode,
+                                               rope=rope.get("mla"))
         else:
-            y, new_cache = mla_mod.mla_decode(bp["attn"], h, cfg, cache, pos, mode=mode)
+            y, new_cache = mla_mod.mla_decode(bp["attn"], h, cfg, cache, pos, mode=mode,
+                                              rope=rope.get("mla"))
     elif kind.mixer == "mamba":
         if cache is None:
             y, new_cache = mamba_mod.mamba_prefill(bp["mamba"], h, cfg, mode=mode)
@@ -328,6 +370,21 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
 # ---------------------------------------------------------------------------
 
 
+def rope_for(cfg, positions):
+    """Per-mixer RoPE tables for one step, computed once and threaded through
+    every layer (satellite of DESIGN.md §norm-quant: the tables are loop-
+    invariant across the scanned layer stack, so per-layer trig was waste)."""
+    prelude, period, _ = block_plan(cfg)
+    mixers = {k.mixer for k in prelude + period}
+    tables = {}
+    if "attn" in mixers:
+        tables["attn"] = L.rope_tables(positions, cfg.head_dim, theta=cfg.rope_theta)
+    if "mla" in mixers:
+        tables["mla"] = L.rope_tables(positions, cfg.qk_rope_head_dim,
+                                      theta=cfg.rope_theta)
+    return tables
+
+
 def embed_inputs(params, batch, cfg):
     """tokens [B,S] or embeddings [B,S,Dfe] -> [B,S,d]."""
     if cfg.frontend != "none" and "embeddings" in batch:
@@ -337,17 +394,20 @@ def embed_inputs(params, batch, cfg):
     return constrain(x, "act_batch", "act_seq", None)
 
 
-def forward(params, batch, cfg, pcfg=None, *, mode="train", collect_cache=False):
+def forward(params, batch, cfg, pcfg=None, *, mode="train", collect_cache=False,
+            fused=None):
     """Full-sequence pass. Returns (logits [B,S,V], aux, caches|None)."""
     prelude, period, n_periods = block_plan(cfg)
     x = embed_inputs(params, batch, cfg)
     b, s = x.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    rope = rope_for(cfg, positions)
 
     caches: dict[str, Any] = {}
     aux_total = jnp.float32(0.0)
     for i, kind in enumerate(prelude):
-        x, c, aux = apply_block(kind, params[f"prelude_{i}"], x, cfg, pcfg, positions, mode=mode)
+        x, c, aux = apply_block(kind, params[f"prelude_{i}"], x, cfg, pcfg, positions,
+                                mode=mode, rope=rope, fused=fused)
         aux_total += aux
         if collect_cache:
             caches[f"prelude_{i}"] = c
@@ -357,7 +417,8 @@ def forward(params, batch, cfg, pcfg=None, *, mode="train", collect_cache=False)
         aux_p = jnp.float32(0.0)
         cs = {}
         for i, kind in enumerate(period):
-            x, c, aux = apply_block(kind, pparams[f"b{i}"], x, cfg, pcfg, positions, mode=mode)
+            x, c, aux = apply_block(kind, pparams[f"b{i}"], x, cfg, pcfg, positions,
+                                    mode=mode, rope=rope, fused=fused)
             aux_p += aux
             cs[f"b{i}"] = c
         return x, (aux_p, cs if collect_cache else None)
@@ -385,25 +446,29 @@ def loss_fn(params, batch, cfg, pcfg=None, *, mode="train", aux_weight=0.01):
     return ce + aux_weight * aux, {"ce": ce, "aux": aux}
 
 
-def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto"):
+def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto",
+                fused=None):
     """One autoregressive step. batch {tokens [B,1] | embeddings [B,1,Dfe]};
     caches from ``forward(collect_cache=True)`` (or abstract cache_specs);
     pos [B] write/attend position. Returns (logits [B, V], new caches).
 
     ``attn_impl`` routes the attention mixers' cache read: ``"kernel"`` is the
     fused Pallas decode-attention path (frontier skipping over the padded
-    cache), ``"xla"`` the dense form, ``"auto"`` kernel-on-TPU."""
+    cache), ``"xla"`` the dense form, ``"auto"`` kernel-on-TPU. ``fused``
+    routes the linear path through the int8-resident NQD pipeline (default:
+    on for ``mode="packed"``; bit-identical either way)."""
     prelude, period, n_periods = block_plan(cfg)
     x = embed_inputs(params, batch, cfg)
     b = x.shape[0]
     pos = jnp.asarray(pos)  # scalar (synchronized) or [B] (per-slot)
     positions = jnp.broadcast_to(pos, (b,))[:, None]
+    rope = rope_for(cfg, positions)
 
     new_caches: dict[str, Any] = {}
     for i, kind in enumerate(prelude):
         x, c, _ = apply_block(kind, params[f"prelude_{i}"], x, cfg, None, positions,
                               mode=mode, cache=caches[f"prelude_{i}"], pos=pos,
-                              attn_impl=attn_impl)
+                              attn_impl=attn_impl, rope=rope, fused=fused)
         new_caches[f"prelude_{i}"] = c
 
     def body(carry, xs):
@@ -413,7 +478,7 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto
         for i, kind in enumerate(period):
             x, c, _ = apply_block(kind, pparams[f"b{i}"], x, cfg, None, positions,
                                   mode=mode, cache=pcaches[f"b{i}"], pos=pos,
-                                  attn_impl=attn_impl)
+                                  attn_impl=attn_impl, rope=rope, fused=fused)
             cs[f"b{i}"] = c
         return x, cs
 
@@ -426,7 +491,8 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto
 
 
 def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
-                       attn_impl="auto", last_row=None, prefix_limit=0):
+                       attn_impl="auto", last_row=None, prefix_limit=0,
+                       fused=None):
     """One chunked-prefill step (``mode="prefill_chunk"``): a C-token chunk per
     slot runs against the batched caches, appending each layer's K/V at the
     slot's ``offset`` and attending to the cache prefix + itself.
@@ -448,12 +514,14 @@ def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
     b, c = x.shape[:2]
     offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
     positions = offset[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    rope = rope_for(cfg, positions)
 
     new_caches: dict[str, Any] = {}
     for i, kind in enumerate(prelude):
         x, cch, _ = apply_block(kind, params[f"prelude_{i}"], x, cfg, None, positions,
                                 mode=mode, cache=caches[f"prelude_{i}"], pos=offset,
-                                attn_impl=attn_impl, prefix_limit=prefix_limit)
+                                attn_impl=attn_impl, prefix_limit=prefix_limit,
+                                rope=rope, fused=fused)
         new_caches[f"prelude_{i}"] = cch
 
     def body(carry, xs):
@@ -463,7 +531,8 @@ def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
         for i, kind in enumerate(period):
             x, cch, _ = apply_block(kind, pparams[f"b{i}"], x, cfg, None, positions,
                                     mode=mode, cache=pcaches[f"b{i}"], pos=offset,
-                                    attn_impl=attn_impl, prefix_limit=prefix_limit)
+                                    attn_impl=attn_impl, prefix_limit=prefix_limit,
+                                    rope=rope, fused=fused)
             cs[f"b{i}"] = cch
         return x, cs
 

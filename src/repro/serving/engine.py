@@ -54,27 +54,31 @@ def _round_up(x: int, m: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def make_prefill_step(cfg, *, mode: str = "packed"):
+def make_prefill_step(cfg, *, mode: str = "packed", fused: bool | None = None):
     """prefill_step(params, batch) -> (last_logits [B, V], caches)."""
 
     def prefill_step(params, batch):
-        logits, _, caches = Tr.forward(params, batch, cfg, None, mode=mode, collect_cache=True)
+        logits, _, caches = Tr.forward(params, batch, cfg, None, mode=mode,
+                                       collect_cache=True, fused=fused)
         return logits[:, -1], caches
 
     return prefill_step
 
 
-def make_serve_step(cfg, *, mode: str = "packed", attn_impl: str = "auto"):
+def make_serve_step(cfg, *, mode: str = "packed", attn_impl: str = "auto",
+                    fused: bool | None = None):
     """serve_step(params, batch, caches, pos) -> (logits [B, V], new caches).
 
     One new token against a KV cache of ``seq_len`` — the decode_* shapes.
     ``attn_impl`` routes cache attention to the fused Pallas decode kernel
-    ("kernel"), the dense XLA form ("xla"), or backend-default ("auto").
+    ("kernel"), the dense XLA form ("xla"), or backend-default ("auto");
+    ``fused`` routes the linear path through the int8-resident NQD pipeline
+    (default: on when ``mode="packed"``).
     """
 
     def serve_step(params, batch, caches, pos):
         return Tr.decode_step(params, batch, caches, pos, cfg, mode=mode,
-                              attn_impl=attn_impl)
+                              attn_impl=attn_impl, fused=fused)
 
     return serve_step
 
@@ -175,7 +179,8 @@ _BUCKETED_PREFILL_CACHE: dict = {}
 
 
 def prefill_bucketed(params, cfg, prompts: jax.Array, *, mode: str = "packed",
-                     lengths: jax.Array | None = None):
+                     lengths: jax.Array | None = None,
+                     fused: bool | None = None):
     """Length-bucketed prefill: pads ``prompts [B, S]`` up to the chunk-size
     grid (attention-masked padding — pad tokens sit past every row's causal
     frontier, and the returned logits are gathered at each row's true last
@@ -196,12 +201,12 @@ def prefill_bucketed(params, cfg, prompts: jax.Array, *, mode: str = "packed",
         bucket = bucket_length(s, sizes)
     else:
         bucket = s  # pad-unsafe families: exact length, cached per length
-    key_t = (cfg, mode, bucket)
+    key_t = (cfg, mode, bucket, fused)
     fn = _BUCKETED_PREFILL_CACHE.get(key_t)
     if fn is None:
         def step(params, batch, lens):
             logits, _, caches = Tr.forward(params, batch, cfg, None, mode=mode,
-                                           collect_cache=True)
+                                           collect_cache=True, fused=fused)
             last = jnp.take_along_axis(
                 logits, (lens - 1)[:, None, None], axis=1
             )[:, 0]
@@ -244,8 +249,8 @@ _DECODE_SCAN_CACHE: dict = {}
 
 
 def _decode_scan(cfg, *, steps: int, mode: str, greedy: bool,
-                 eos_id: int | None, attn_impl: str):
-    key_t = (cfg, steps, mode, greedy, eos_id, attn_impl)
+                 eos_id: int | None, attn_impl: str, fused: bool | None):
+    key_t = (cfg, steps, mode, greedy, eos_id, attn_impl, fused)
     fn = _DECODE_SCAN_CACHE.get(key_t)
     if fn is not None:
         return fn
@@ -254,7 +259,8 @@ def _decode_scan(cfg, *, steps: int, mode: str, greedy: bool,
         def body(carry, _):
             tok, pos, done, caches, k = carry
             logits, caches = Tr.decode_step(params, {"tokens": tok[:, None]}, caches,
-                                            pos, cfg, mode=mode, attn_impl=attn_impl)
+                                            pos, cfg, mode=mode, attn_impl=attn_impl,
+                                            fused=fused)
             k, sub = jax.random.split(k)
             nxt = _sample(logits, sub, temperature, greedy=greedy)
             if eos_id is not None:
@@ -285,6 +291,7 @@ def generate(
     key: jax.Array | None = None,
     eos_id: int | None = None,
     attn_impl: str = "auto",
+    fused: bool | None = None,
 ) -> GenerationResult:
     """Device-resident generation: bucketed prefill, then one ``lax.scan``.
 
@@ -299,7 +306,8 @@ def generate(
     bit-identical to the per-token Python loop this replaces.
     """
     b, s = prompts.shape
-    last_logits, caches = prefill_bucketed(params, cfg, prompts, mode=mode)
+    last_logits, caches = prefill_bucketed(params, cfg, prompts, mode=mode,
+                                           fused=fused)
     caches = fit_caches(caches, cfg, s + steps)
 
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -310,7 +318,7 @@ def generate(
 
     if steps > 1:
         scan = _decode_scan(cfg, steps=steps, mode=mode, greedy=greedy,
-                            eos_id=eos_id, attn_impl=attn_impl)
+                            eos_id=eos_id, attn_impl=attn_impl, fused=fused)
         tokens = scan(params, caches, tok0, pos0, done0, key, jnp.float32(temperature))
     else:
         tokens = tok0[:, None]
@@ -368,8 +376,9 @@ class ServingEngine:
 
     def __init__(self, params, cfg, *, slots: int = 8, max_len: int = 2048,
                  mode: str = "eval", eos_id: int = -1, attn_impl: str = "auto",
-                 prefill: str = "auto"):
+                 prefill: str = "auto", fused: bool | None = None):
         self.params, self.cfg, self.mode = params, cfg, mode
+        self.fused = fused  # int8-resident NQD pipeline (None: on iff packed)
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
@@ -408,7 +417,7 @@ class ServingEngine:
         self._plan: list[_PrefillPlan | None] = [None] * slots
         self._pending_first: set[int] = set()  # legacy path: unrecorded prefill token
         self._fused: dict[int, Any] = {}  # chunk size -> fused tick jit
-        self._serve = _serve_step_cached(cfg, mode, attn_impl)
+        self._serve = _serve_step_cached(cfg, mode, attn_impl, fused)
         self._advance = _advance_cached(eos_id, max_len)
 
     def submit(self, req: Request):
@@ -459,7 +468,7 @@ class ServingEngine:
         # this — its chunks land in the batched cache directly.
         prompt = jnp.asarray(req.prompt)
         logits, caches = prefill_bucketed(self.params, self.cfg, prompt[None],
-                                          mode=self.mode)
+                                          mode=self.mode, fused=self.fused)
         caches = fit_caches(caches, self.cfg, self.cache_len)
 
         # generic per-leaf scatter on the batch axis
@@ -499,7 +508,8 @@ class ServingEngine:
             fn = _fused_tick_step(
                 self.cfg, chunk, mode=self.mode, attn_impl=self.attn_impl,
                 eos_id=self.eos_id, max_len=self.max_len,
-                cache_len=self.cache_len, trash_base=self.trash_base)
+                cache_len=self.cache_len, trash_base=self.trash_base,
+                fused=self.fused)
             self._fused[chunk] = fn
         return fn
 
@@ -651,14 +661,15 @@ _ADVANCE_CACHE: dict = {}
 _FUSED_TICK_CACHE: dict = {}
 
 
-def _serve_step_cached(cfg, mode: str, attn_impl: str):
-    key_t = (cfg, mode, attn_impl)
+def _serve_step_cached(cfg, mode: str, attn_impl: str, fused: bool | None = None):
+    key_t = (cfg, mode, attn_impl, fused)
     fn = _SERVE_STEP_CACHE.get(key_t)
     if fn is None:
         # caches are donated (matching the fused tick) so decode-only ticks
         # update the KV cache in place instead of copying it every step —
         # the engine reassigns self.caches from the result each tick.
-        fn = jax.jit(make_serve_step(cfg, mode=mode, attn_impl=attn_impl),
+        fn = jax.jit(make_serve_step(cfg, mode=mode, attn_impl=attn_impl,
+                                     fused=fused),
                      donate_argnums=(2,))
         _SERVE_STEP_CACHE[key_t] = fn
     return fn
@@ -675,13 +686,13 @@ def _advance_cached(eos_id: int, max_len: int):
 
 def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
                      eos_id: int, max_len: int, cache_len: int,
-                     trash_base: int):
+                     trash_base: int, fused: bool | None = None):
     """The engine's one-jit scheduler tick for chunk size ``chunk``: decode
     every decoding slot AND append one prompt chunk per selected prefilling
     slot — inactive slots are diverted into the cache's trash tail, keeping
     the call fixed-shape with no masking inside the kernels."""
     key_t = (cfg, chunk, mode, attn_impl, eos_id, max_len, cache_len,
-             trash_base)
+             trash_base, fused)
     fn = _FUSED_TICK_CACHE.get(key_t)
     if fn is not None:
         return fn
@@ -698,14 +709,14 @@ def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
         dpos = jnp.where(dec_active, pos, jnp.int32(cache_len - 1))
         dec_logits, caches = Tr.decode_step(
             params, {"tokens": cur_tok[:, None]}, caches, dpos, cfg,
-            mode=mode, attn_impl=attn_impl)
+            mode=mode, attn_impl=attn_impl, fused=fused)
         # 2. one chunk bucket appended at each selected slot's frontier
         #    (idle slots write into the trash tail); the LM head runs only on
         #    each slot's last_row hidden state, not all C chunk rows
         first_logits, caches = Tr.prefill_chunk_step(
             params, {"tokens": chunk_tok}, caches, chunk_off, cfg,
             mode=mode, attn_impl=attn_impl, last_row=last_row,
-            prefix_limit=trash_base)
+            prefix_limit=trash_base, fused=fused)
         next_dec = jnp.argmax(dec_logits, axis=-1).astype(jnp.int32)
         first_tok = jnp.argmax(first_logits, axis=-1).astype(jnp.int32)
         # 3. decode advance (the _advance transition, masked to dec_active)
