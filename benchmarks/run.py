@@ -18,6 +18,7 @@ def main() -> int:
         ("decode_fast_path", "benchmarks.bench_decode"),
         ("prefill_fast_path", "benchmarks.bench_prefill"),
         ("layer_fusion", "benchmarks.bench_layer_fusion"),
+        ("kv_cache", "benchmarks.bench_kv_cache"),
         ("tableV_compression", "benchmarks.bench_compression"),
     ]
     failures = 0

@@ -59,6 +59,11 @@ class ModelConfig:
     # --- quantization (the paper's technique) -----------------------------------
     ternary: bool = True
     act_bits: int = 8
+    # KV-cache residency dtype (attention mixers only). "int8" stores the
+    # cache as int8 with per-(slot, head, row) f32 absmax scales — the
+    # paper's QDQ unit applied to the cache stream, halving attention-phase
+    # HBM bytes. "bf16" (default) keeps every pre-existing path bit-identical.
+    kv_cache_dtype: str = "bf16"  # bf16 | int8
     # --- serving: chunked prefill / continuous batching --------------------------
     # Prompts are split into chunks drawn from this grid (each size must divide
     # every larger one), so the engine compiles exactly len(sizes) prefill

@@ -86,6 +86,25 @@ def quantize_act(x: jax.Array, *, axis: int = -1) -> tuple[jax.Array, jax.Array]
     return x_i8, scale.astype(jnp.float32)
 
 
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row absmax int8 for KV-cache rows (the paper's QDQ unit applied to
+    the cache stream). ``x [..., D]`` → ``(x_i8 [..., D], scale [...])`` with
+    the scale axis squeezed — the cache stores scales as side arrays, one f32
+    per (slot, head, position) row. Shared by the jnp oracles, the XLA serving
+    forms, *and* the Pallas kernels' in-VMEM quant, so all three agree
+    bit-for-bit on what lands in the cache."""
+    x_i8, scale = quantize_act(x, axis=-1)
+    return x_i8, jnp.squeeze(scale, -1)
+
+
+def dequantize_kv(x_i8: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_kv`: ``x_i8 [..., D]`` × ``scale [...]`` →
+    ``[..., D]`` in ``dtype`` (the attention compute dtype). The dequant runs
+    in f32 and casts once at the end — the semantics every quantized attention
+    path (kernel, XLA form, oracle) implements on the VMEM-resident block."""
+    return (x_i8.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
 def quantize_act_ste(x: jax.Array, *, axis: int = -1) -> jax.Array:
     """Fake-quant int8 activations with straight-through gradients (value
     cast back to ``x.dtype`` — see ternarize_ste / §Perf A2)."""

@@ -7,4 +7,7 @@ the decode analogue of the prefill kernel's reverse/causal-skip schedule.
 """
 
 from .ops import decode_attention, schedule_blocks  # noqa: F401
-from .ref import decode_attention_reference  # noqa: F401
+from .ref import (  # noqa: F401
+    decode_attention_quant_reference,
+    decode_attention_reference,
+)

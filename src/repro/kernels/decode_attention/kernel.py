@@ -21,6 +21,14 @@ Slots at heterogeneous positions therefore coexist in one batched call: each
 ``b`` reads its own ``pos[b]`` frontier. GQA uses the same index-map trick as
 the prefill kernel: q is pre-grouped to [B·HK, G, D] so the G query heads that
 share a kv head contract against one streamed k/v block.
+
+**Int8 cache path** (DESIGN.md §kv-cache): with ``quantized=True`` the k/v
+operands are int8 with per-row f32 scales riding alongside as [B·HK, M]
+arrays, blocked by the *same* clamped index map — so a skipped block's scales
+move no HBM traffic either. The block is dequantized in VMEM right before the
+QK matmul (``ternary.dequantize_kv`` semantics: f32 multiply, one cast to the
+query dtype); full-precision K/V never exists in HBM, which is the point —
+the phase is bound on cache bytes, and int8+scale halves them.
 """
 
 from __future__ import annotations
@@ -32,13 +40,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core import ternary
+
 _NEG_INF = -1e30
 
 
 def _kernel(
-    pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-    *, scale: float, bkv: int, window: int, softcap: float, nkv: int, hk: int,
+    pos_ref, q_ref, k_ref, v_ref, *rest,
+    scale: float, bkv: int, window: int, softcap: float, nkv: int, hk: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     bh = pl.program_id(0)
     j = pl.program_id(1)
     p = pos_ref[bh // hk]  # this slot's frontier position
@@ -61,6 +76,11 @@ def _kernel(
         q = q_ref[0]  # [G, D]
         k = k_ref[0]  # [bkv, D]
         v = v_ref[0]
+        if quantized:
+            # in-VMEM dequant right before the QK matmul: the int8 block and
+            # its per-row scales are all that ever crossed HBM.
+            k = ternary.dequantize_kv(k, ks_ref[0], q_ref.dtype)
+            v = ternary.dequantize_kv(v, vs_ref[0], q_ref.dtype)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale  # [G, bkv]
@@ -90,6 +110,71 @@ def _kernel(
         o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
 
 
+def _call(q, k, v, pos, scales, *, bkv, window, softcap, scale, interpret):
+    """Shared pallas_call builder for the dense and int8-cache paths.
+
+    ``scales`` is ``None`` (dense bf16 cache) or ``(k_scale, v_scale)`` — the
+    [B*HK, M] f32 per-row side arrays of an int8 cache."""
+    bhk, g, d = q.shape
+    m = k.shape[1]
+    b = pos.shape[0]
+    hk = bhk // b
+    assert m % bkv == 0, (m, bkv)
+    scale = scale if scale is not None else 1.0 / d**0.5
+    nkv = m // bkv
+    quantized = scales is not None
+
+    kern = functools.partial(
+        _kernel, scale=scale, bkv=bkv, window=window, softcap=softcap,
+        nkv=nkv, hk=hk, quantized=quantized,
+    )
+
+    def live_j(bh, j, pos_ref):
+        # Clamp skipped indices into the live [window-foot, frontier] range: a
+        # repeated block index is not re-fetched by the pipeline, so skipped
+        # blocks — past the frontier or below the window foot — move no HBM
+        # traffic either.
+        p = pos_ref[bh // hk]
+        lo = jnp.maximum(p - window + 1, 0) // bkv if window > 0 else 0
+        return jnp.clip(j, lo, p // bkv)
+
+    def kv_index(bh, j, pos_ref):
+        return (bh, live_j(bh, j, pos_ref), 0)
+
+    def scale_index(bh, j, pos_ref):
+        # the scale side arrays ride the same clamped schedule as their blocks
+        return (bh, live_j(bh, j, pos_ref))
+
+    in_specs = [
+        pl.BlockSpec((1, g, d), lambda bh, j, pos_ref: (bh, 0, 0)),
+        pl.BlockSpec((1, bkv, d), kv_index),
+        pl.BlockSpec((1, bkv, d), kv_index),
+    ]
+    operands = [pos, q, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bkv), scale_index),
+                     pl.BlockSpec((1, bkv), scale_index)]
+        operands += list(scales)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bhk, nkv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, j, pos_ref: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bhk, g, d), q.dtype),
+        interpret=interpret,
+    )(*operands)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bkv", "window", "softcap", "scale", "interpret")
 )
@@ -105,46 +190,28 @@ def decode_attention_kernel(
     scale: float | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    bhk, g, d = q.shape
-    m = k.shape[1]
-    b = pos.shape[0]
-    hk = bhk // b
-    assert m % bkv == 0, (m, bkv)
-    scale = scale if scale is not None else 1.0 / d**0.5
-    nkv = m // bkv
+    return _call(q, k, v, pos, None, bkv=bkv, window=window, softcap=softcap,
+                 scale=scale, interpret=interpret)
 
-    kern = functools.partial(
-        _kernel, scale=scale, bkv=bkv, window=window, softcap=softcap,
-        nkv=nkv, hk=hk,
-    )
 
-    def kv_index(bh, j, pos_ref):
-        # Clamp skipped indices into the live [window-foot, frontier] range: a
-        # repeated block index is not re-fetched by the pipeline, so skipped
-        # blocks — past the frontier or below the window foot — move no HBM
-        # traffic either.
-        p = pos_ref[bh // hk]
-        lo = jnp.maximum(p - window + 1, 0) // bkv if window > 0 else 0
-        return (bh, jnp.clip(j, lo, p // bkv), 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(bhk, nkv),
-        in_specs=[
-            pl.BlockSpec((1, g, d), lambda bh, j, pos_ref: (bh, 0, 0)),
-            pl.BlockSpec((1, bkv, d), kv_index),
-            pl.BlockSpec((1, bkv, d), kv_index),
-        ],
-        out_specs=pl.BlockSpec((1, g, d), lambda bh, j, pos_ref: (bh, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g, d), jnp.float32),
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g,), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kern,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((bhk, g, d), q.dtype),
-        interpret=interpret,
-    )(pos, q, k, v)
+@functools.partial(
+    jax.jit, static_argnames=("bkv", "window", "softcap", "scale", "interpret")
+)
+def decode_attention_kernel_quant(
+    q: jax.Array,        # [B*HK, G, D] grouped queries
+    k: jax.Array,        # [B*HK, M, D] int8 cache
+    v: jax.Array,        # [B*HK, M, D] int8 cache
+    k_scale: jax.Array,  # [B*HK, M] f32 per-row scales
+    v_scale: jax.Array,  # [B*HK, M]
+    pos: jax.Array,      # [B] int32 per-slot frontier
+    *,
+    bkv: int = 128,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Int8-cache twin of :func:`decode_attention_kernel`: blocks are
+    dequantized in VMEM right before the QK matmul."""
+    return _call(q, k, v, pos, (k_scale, v_scale), bkv=bkv, window=window,
+                 softcap=softcap, scale=scale, interpret=interpret)

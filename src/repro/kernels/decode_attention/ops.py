@@ -6,15 +6,17 @@ import jax
 import jax.numpy as jnp
 
 from .. import _common as C
-from .kernel import decode_attention_kernel
+from .kernel import decode_attention_kernel, decode_attention_kernel_quant
 
 
 def decode_attention(
     q: jax.Array,        # [B, H, D] single new token per slot
-    k_cache: jax.Array,  # [B, HK, M, D]
+    k_cache: jax.Array,  # [B, HK, M, D] (bf16/f32, or int8 with scales)
     v_cache: jax.Array,  # [B, HK, M, D]
     pos: jax.Array,      # [B] (or scalar) attend-to-<=pos frontier
     *,
+    k_scale: jax.Array | None = None,  # [B, HK, M] f32 (int8 cache only)
+    v_scale: jax.Array | None = None,
     window: int = 0,
     softcap: float = 0.0,
     scale: float | None = None,
@@ -25,13 +27,17 @@ def decode_attention(
 
     Pads the cache length to a ``bkv`` multiple (padded keys sit past every
     slot's frontier, so the in-kernel mask discards them) and the GQA group to
-    the 8-row sublane (padded q rows are sliced away).
+    the 8-row sublane (padded q rows are sliced away). With ``k_scale`` /
+    ``v_scale`` set the caches are int8 and dequantized per block in VMEM
+    (DESIGN.md §kv-cache); padded scale rows are zero, which dequantizes to
+    zero K/V — masked out like any past-frontier key.
     """
     interpret = C.resolve_interpret(interpret)
     b, h, d = q.shape
     hk, m = k_cache.shape[1], k_cache.shape[2]
     g = h // hk
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    quantized = k_scale is not None
 
     bkv = min(bkv, C.round_up(m, 128))
     mp = C.round_up(m, bkv)
@@ -39,20 +45,36 @@ def decode_attention(
         pad = ((0, 0), (0, 0), (0, mp - m), (0, 0))
         k_cache = jnp.pad(k_cache, pad)
         v_cache = jnp.pad(v_cache, pad)
+        if quantized:
+            spad = ((0, 0), (0, 0), (0, mp - m))
+            k_scale = jnp.pad(k_scale, spad)
+            v_scale = jnp.pad(v_scale, spad)
 
     gp = C.round_up(g, 8)  # sublane shape for the grouped-query block
     qg = q.reshape(b, hk, g, d)
     if gp != g:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
 
-    out = decode_attention_kernel(
-        qg.reshape(b * hk, gp, d),
-        k_cache.reshape(b * hk, mp, d),
-        v_cache.reshape(b * hk, mp, d),
-        pos,
-        bkv=bkv, window=window, softcap=softcap, scale=scale,
-        interpret=interpret,
-    )
+    if quantized:
+        out = decode_attention_kernel_quant(
+            qg.reshape(b * hk, gp, d),
+            k_cache.reshape(b * hk, mp, d),
+            v_cache.reshape(b * hk, mp, d),
+            k_scale.reshape(b * hk, mp).astype(jnp.float32),
+            v_scale.reshape(b * hk, mp).astype(jnp.float32),
+            pos,
+            bkv=bkv, window=window, softcap=softcap, scale=scale,
+            interpret=interpret,
+        )
+    else:
+        out = decode_attention_kernel(
+            qg.reshape(b * hk, gp, d),
+            k_cache.reshape(b * hk, mp, d),
+            v_cache.reshape(b * hk, mp, d),
+            pos,
+            bkv=bkv, window=window, softcap=softcap, scale=scale,
+            interpret=interpret,
+        )
     return out.reshape(b, hk, gp, d)[:, :, :g].reshape(b, h, d)
 
 

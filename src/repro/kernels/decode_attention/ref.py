@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ...core import ternary
+
 _NEG = -1e30
 
 
@@ -35,3 +37,20 @@ def decode_attention_reference(
     p = jnp.exp(s - s.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)
     return jnp.einsum("bhm,bhmd->bhd", p.astype(q.dtype), vq)
+
+
+def decode_attention_quant_reference(
+    q, k_cache, v_cache, k_scale, v_scale, pos, *, window: int = 0,
+    softcap: float = 0.0, scale: float | None = None
+):
+    """Int8-cache oracle: *defines* the quantized path's semantics as the
+    dense oracle applied to the dequantized cache — each int8 row × its f32
+    per-(slot, head, position) scale, cast once to the query dtype (exactly
+    what the Pallas kernel does per VMEM block).
+
+    k/v_cache [B, HK, M, D] int8; k/v_scale [B, HK, M] f32.
+    """
+    kd = ternary.dequantize_kv(k_cache, k_scale, q.dtype)
+    vd = ternary.dequantize_kv(v_cache, v_scale, q.dtype)
+    return decode_attention_reference(q, kd, vd, pos, window=window,
+                                      softcap=softcap, scale=scale)

@@ -25,6 +25,15 @@ GQA uses the same index-map trick as the decode kernel: q is pre-grouped to
 [B·HK, G·C, D] so the G query heads sharing a kv head contract against one
 streamed k/v block; the causal mask depends on the row's intra-chunk index
 ``row % C`` only.
+
+**Int8 cache path** (DESIGN.md §kv-cache): with ``quantized=True`` the cache
+operands are int8 with per-row f32 scale side arrays [B·HK, M], streamed by
+the same clamped index map (skipped prefix blocks move no scale bytes
+either) and appended through their own aliased (1, C) chunk windows. The
+chunk's K/V are absmax-quantized *in VMEM* before anything is stored — the
+QDQ unit fused into the append, so full-precision K/V never reaches HBM —
+and the chunk's self-attention runs on the dequantized quantized rows, so
+the chunk sees exactly the K/V every later reader will.
 """
 
 from __future__ import annotations
@@ -36,15 +45,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core import ternary
+
 _NEG_INF = -1e30
 
 
 def _kernel(
-    off_ref, q_ref, kn_ref, vn_ref, kc_ref, vc_ref,
-    o_ref, ko_ref, vo_ref, acc_ref, m_ref, l_ref,
-    *, scale: float, bkv: int, c: int, window: int, softcap: float,
-    nkv: int, hk: int, prefix_limit: int,
+    off_ref, q_ref, kn_ref, vn_ref, kc_ref, vc_ref, *rest,
+    scale: float, bkv: int, c: int, window: int, softcap: float,
+    nkv: int, hk: int, prefix_limit: int, quantized: bool = False,
 ):
+    if quantized:
+        (ks_ref, vs_ref, o_ref, ko_ref, vo_ref, kso_ref, vso_ref,
+         acc_ref, m_ref, l_ref) = rest
+    else:
+        o_ref, ko_ref, vo_ref, acc_ref, m_ref, l_ref = rest
     bh = pl.program_id(0)
     j = pl.program_id(1)
     off = off_ref[bh // hk]  # this slot's cache frontier (chunk write base)
@@ -92,6 +107,11 @@ def _kernel(
     def _prefix():
         q = q_ref[0]  # [G*C, D]
         k = kc_ref[0]  # [bkv, D]
+        v = vc_ref[0]
+        if quantized:
+            # in-VMEM dequant right before the QK matmul (§kv-cache)
+            k = ternary.dequantize_kv(k, ks_ref[0], q_ref.dtype)
+            v = ternary.dequantize_kv(v, vs_ref[0], q_ref.dtype)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
@@ -100,25 +120,136 @@ def _kernel(
         kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         # prefix keys only: positions >= off belong to the chunk phase
         kpos = jnp.where(kpos < off, kpos, jnp.int32(2**30))
-        _online_update(s, kpos, vc_ref[0])
+        _online_update(s, kpos, v)
 
     # --- chunk phase: causal self-attention + the cache append --------------
     @pl.when(j == nkv)
     def _chunk():
         q = q_ref[0]
         kn = kn_ref[0]  # [C, D]
+        vn = vn_ref[0]
+        if quantized:
+            # the fused QDQ unit: quantize the chunk's rows in VMEM, store
+            # int8 + scale, and attend to the *dequantized* rows — the chunk
+            # sees exactly the K/V every later reader will dequantize.
+            kn_q, ks_n = ternary.quantize_kv(kn)
+            vn_q, vs_n = ternary.quantize_kv(vn)
+            kn = ternary.dequantize_kv(kn_q, ks_n, q_ref.dtype)
+            vn = ternary.dequantize_kv(vn_q, vs_n, q_ref.dtype)
         s = jax.lax.dot_general(
             q, kn, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
         if softcap > 0:
             s = softcap * jnp.tanh(s / softcap)
         kpos = off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        _online_update(s, kpos, vn_ref[0])
+        _online_update(s, kpos, vn)
 
         l = l_ref[...]
         o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
-        ko_ref[0] = kn_ref[0].astype(ko_ref.dtype)
-        vo_ref[0] = vn_ref[0].astype(vo_ref.dtype)
+        if quantized:
+            ko_ref[0] = kn_q
+            vo_ref[0] = vn_q
+            kso_ref[0] = ks_n
+            vso_ref[0] = vs_n
+        else:
+            ko_ref[0] = kn_ref[0].astype(ko_ref.dtype)
+            vo_ref[0] = vn_ref[0].astype(vo_ref.dtype)
+
+
+def _call(q, k_new, v_new, k_cache, v_cache, offset, scales, *,
+          bkv, window, softcap, scale, prefix_limit, interpret):
+    """Shared pallas_call builder for the dense and int8-cache paths.
+
+    ``scales`` is ``None`` (dense) or ``(k_scale, v_scale)`` — [B*HK, M] f32
+    per-row side arrays, aliased to outputs just like the caches."""
+    bhk, gc, d = q.shape
+    c = k_new.shape[1]
+    m = k_cache.shape[1]
+    b = offset.shape[0]
+    hk = bhk // b
+    assert m % bkv == 0, (m, bkv)
+    assert m % c == 0 and gc % c == 0, (m, gc, c)
+    scale = scale if scale is not None else 1.0 / d**0.5
+    nkv = m // bkv
+    quantized = scales is not None
+
+    kern = functools.partial(
+        _kernel, scale=scale, bkv=bkv, c=c, window=window, softcap=softcap,
+        nkv=nkv, hk=hk, prefix_limit=prefix_limit, quantized=quantized,
+    )
+
+    def live_j(bh, j, off_ref):
+        # Clamp skipped prefix indices into the live [window-foot, frontier]
+        # range: a repeated block index is never re-fetched by the pipeline,
+        # so skipped blocks move no HBM traffic. The chunk step (j == nkv)
+        # also lands on the frontier block (fetched but unused).
+        off = off_ref[bh // hk]
+        hi = jnp.maximum(off - 1, 0) // bkv
+        lo = jnp.maximum(off - window, 0) // bkv if window > 0 else 0
+        return jnp.clip(j, lo, hi)
+
+    def kv_index(bh, j, off_ref):
+        return (bh, live_j(bh, j, off_ref), 0)
+
+    def scale_index(bh, j, off_ref):
+        return (bh, live_j(bh, j, off_ref))
+
+    def chunk_out_index(bh, j, off_ref):
+        return (bh, off_ref[bh // hk] // c, 0)
+
+    def scale_out_index(bh, j, off_ref):
+        return (bh, off_ref[bh // hk] // c)
+
+    in_specs = [
+        pl.BlockSpec((1, gc, d), lambda bh, j, off_ref: (bh, 0, 0)),
+        pl.BlockSpec((1, c, d), lambda bh, j, off_ref: (bh, 0, 0)),
+        pl.BlockSpec((1, c, d), lambda bh, j, off_ref: (bh, 0, 0)),
+        pl.BlockSpec((1, bkv, d), kv_index),
+        pl.BlockSpec((1, bkv, d), kv_index),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, gc, d), lambda bh, j, off_ref: (bh, 0, 0)),
+        pl.BlockSpec((1, c, d), chunk_out_index),
+        pl.BlockSpec((1, c, d), chunk_out_index),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bhk, gc, d), q.dtype),
+        jax.ShapeDtypeStruct((bhk, m, d), k_cache.dtype),
+        jax.ShapeDtypeStruct((bhk, m, d), v_cache.dtype),
+    ]
+    operands = [offset, q, k_new, v_new, k_cache, v_cache]
+    # cache operands alias their outputs: the only blocks written back are
+    # the (1, C, D) chunk windows (and, quantized, the (1, C) scale windows)
+    # — the rest of the cache stays resident.
+    aliases = {4: 1, 5: 2}
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bkv), scale_index),
+                     pl.BlockSpec((1, bkv), scale_index)]
+        out_specs += [pl.BlockSpec((1, c), scale_out_index),
+                      pl.BlockSpec((1, c), scale_out_index)]
+        out_shape += [jax.ShapeDtypeStruct((bhk, m), jnp.float32),
+                      jax.ShapeDtypeStruct((bhk, m), jnp.float32)]
+        operands += list(scales)
+        aliases.update({6: 3, 7: 4})
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bhk, nkv + 1),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((gc, d), jnp.float32),
+            pltpu.VMEM((gc,), jnp.float32),
+            pltpu.VMEM((gc,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
 
 
 @functools.partial(
@@ -140,65 +271,35 @@ def prefill_append_kernel(
     prefix_limit: int = 0,  # >0: offsets past it are write-only (no prefix scan)
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    bhk, gc, d = q.shape
-    c = k_new.shape[1]
-    m = k_cache.shape[1]
-    b = offset.shape[0]
-    hk = bhk // b
-    assert m % bkv == 0, (m, bkv)
-    assert m % c == 0 and gc % c == 0, (m, gc, c)
-    scale = scale if scale is not None else 1.0 / d**0.5
-    nkv = m // bkv
+    return _call(q, k_new, v_new, k_cache, v_cache, offset, None,
+                 bkv=bkv, window=window, softcap=softcap, scale=scale,
+                 prefix_limit=prefix_limit, interpret=interpret)
 
-    kern = functools.partial(
-        _kernel, scale=scale, bkv=bkv, c=c, window=window, softcap=softcap,
-        nkv=nkv, hk=hk, prefix_limit=prefix_limit,
-    )
 
-    def kv_index(bh, j, off_ref):
-        # Clamp skipped prefix indices into the live [window-foot, frontier]
-        # range: a repeated block index is never re-fetched by the pipeline,
-        # so skipped blocks move no HBM traffic. The chunk step (j == nkv)
-        # also lands on the frontier block (fetched but unused).
-        off = off_ref[bh // hk]
-        hi = jnp.maximum(off - 1, 0) // bkv
-        lo = jnp.maximum(off - window, 0) // bkv if window > 0 else 0
-        return (bh, jnp.clip(j, lo, hi), 0)
-
-    def chunk_out_index(bh, j, off_ref):
-        return (bh, off_ref[bh // hk] // c, 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(bhk, nkv + 1),
-        in_specs=[
-            pl.BlockSpec((1, gc, d), lambda bh, j, off_ref: (bh, 0, 0)),
-            pl.BlockSpec((1, c, d), lambda bh, j, off_ref: (bh, 0, 0)),
-            pl.BlockSpec((1, c, d), lambda bh, j, off_ref: (bh, 0, 0)),
-            pl.BlockSpec((1, bkv, d), kv_index),
-            pl.BlockSpec((1, bkv, d), kv_index),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, gc, d), lambda bh, j, off_ref: (bh, 0, 0)),
-            pl.BlockSpec((1, c, d), chunk_out_index),
-            pl.BlockSpec((1, c, d), chunk_out_index),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((gc, d), jnp.float32),
-            pltpu.VMEM((gc,), jnp.float32),
-            pltpu.VMEM((gc,), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kern,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((bhk, gc, d), q.dtype),
-            jax.ShapeDtypeStruct((bhk, m, d), k_cache.dtype),
-            jax.ShapeDtypeStruct((bhk, m, d), v_cache.dtype),
-        ],
-        # cache operands alias their outputs: the only blocks written back are
-        # the (1, C, D) chunk windows — the rest of the cache stays resident.
-        input_output_aliases={4: 1, 5: 2},
-        interpret=interpret,
-    )(offset, q, k_new, v_new, k_cache, v_cache)
+@functools.partial(
+    jax.jit, static_argnames=("bkv", "window", "softcap", "scale",
+                              "prefix_limit", "interpret")
+)
+def prefill_append_kernel_quant(
+    q: jax.Array,        # [B*HK, G*C, D] grouped chunk queries
+    k_new: jax.Array,    # [B*HK, C, D] chunk keys (float; quantized in VMEM)
+    v_new: jax.Array,    # [B*HK, C, D]
+    k_cache: jax.Array,  # [B*HK, M, D] int8 cache
+    v_cache: jax.Array,  # [B*HK, M, D] int8 cache
+    k_scale: jax.Array,  # [B*HK, M] f32 per-row scales
+    v_scale: jax.Array,  # [B*HK, M]
+    offset: jax.Array,   # [B] int32 per-slot frontier / write base (≡ 0 mod C)
+    *,
+    bkv: int = 128,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    prefix_limit: int = 0,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Int8-cache twin of :func:`prefill_append_kernel`: prefix blocks are
+    dequantized in VMEM, the chunk's rows are absmax-quantized in VMEM before
+    the aliased append. Returns (out, k_cache', v_cache', k_scale', v_scale')."""
+    return _call(q, k_new, v_new, k_cache, v_cache, offset,
+                 (k_scale, v_scale), bkv=bkv, window=window, softcap=softcap,
+                 scale=scale, prefix_limit=prefix_limit, interpret=interpret)

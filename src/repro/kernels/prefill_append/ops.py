@@ -5,29 +5,35 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .. import _common as C
-from .kernel import prefill_append_kernel
+from .kernel import prefill_append_kernel, prefill_append_kernel_quant
 
 
 def prefill_append(
     q: jax.Array,        # [B, H, C, D] chunk queries (rope'd at offset..offset+C-1)
     k_new: jax.Array,    # [B, HK, C, D] chunk keys
     v_new: jax.Array,    # [B, HK, C, D]
-    k_cache: jax.Array,  # [B, HK, M, D] batched cache
+    k_cache: jax.Array,  # [B, HK, M, D] batched cache (bf16/f32, or int8)
     v_cache: jax.Array,  # [B, HK, M, D]
     offset: jax.Array,   # [B] (or scalar) per-slot write base, ≡ 0 (mod C)
     *,
+    k_scale: jax.Array | None = None,  # [B, HK, M] f32 (int8 cache only)
+    v_scale: jax.Array | None = None,
     window: int = 0,
     softcap: float = 0.0,
     scale: float | None = None,
     bkv: int = 128,
     prefix_limit: int = 0,
     interpret=None,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+):
     """Fused chunk prefill: attend to cache prefix + self, append K/V in place.
 
-    Returns (out [B, H, C, D], k_cache', v_cache'). The cache length M must be
-    a multiple of the chunk size C (the engine pads ``max_len`` accordingly);
-    ``bkv`` is halved until it divides M so unaligned smoke caches still run.
+    Returns (out [B, H, C, D], k_cache', v_cache') — with ``k_scale`` /
+    ``v_scale`` set (int8 cache, DESIGN.md §kv-cache) the tuple grows to
+    (out, k_cache', v_cache', k_scale', v_scale'): the chunk's rows are
+    quantized in VMEM at append time and the scale side arrays updated through
+    their own aliased chunk windows. The cache length M must be a multiple of
+    the chunk size C (the engine pads ``max_len`` accordingly); ``bkv`` is
+    halved until it divides M so unaligned smoke caches still run.
     ``prefix_limit > 0`` marks offsets at/past it as *write-only* (the
     engine's trash-diverted slots): their prefix blocks all go dead instead
     of streaming the whole cache for an output nobody reads.
@@ -43,6 +49,26 @@ def prefill_append(
         bkv //= 2
 
     qg = q.reshape(b, hk, g, c, d).reshape(b * hk, g * c, d)
+    if k_scale is not None:
+        out, k_cache, v_cache, k_scale, v_scale = prefill_append_kernel_quant(
+            qg,
+            k_new.reshape(b * hk, c, d),
+            v_new.reshape(b * hk, c, d),
+            k_cache.reshape(b * hk, m, d),
+            v_cache.reshape(b * hk, m, d),
+            k_scale.reshape(b * hk, m).astype(jnp.float32),
+            v_scale.reshape(b * hk, m).astype(jnp.float32),
+            offset,
+            bkv=bkv, window=window, softcap=softcap, scale=scale,
+            prefix_limit=prefix_limit, interpret=interpret,
+        )
+        return (
+            out.reshape(b, hk, g, c, d).reshape(b, h, c, d),
+            k_cache.reshape(b, hk, m, d),
+            v_cache.reshape(b, hk, m, d),
+            k_scale.reshape(b, hk, m),
+            v_scale.reshape(b, hk, m),
+        )
     out, k_cache, v_cache = prefill_append_kernel(
         qg,
         k_new.reshape(b * hk, c, d),

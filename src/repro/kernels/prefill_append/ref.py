@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...core import ternary
+
 _NEG = -1e30
 
 
@@ -35,23 +37,16 @@ def append_kv_cache_reference(k_cache, v_cache, k_new, v_new, offset):
     return k_cache, v_cache
 
 
-def prefill_append_reference(
-    q, k_new, v_new, k_cache, v_cache, offset, *,
-    window: int = 0, softcap: float = 0.0, scale: float | None = None,
-):
-    """q [B, H, C, D]; k/v_new [B, HK, C, D]; cache [B, HK, M, D]; offset [B].
-
-    Returns (out [B, H, C, D], k_cache', v_cache'). GQA via kv repetition;
-    f32 score/softmax throughout.
-    """
+def _attend_updated_cache(q, kd, vd, offset, *, window, softcap, scale):
+    """Shared oracle attention body: q-chunk vs the (already appended)
+    cache, GQA via kv repetition, f32 score/softmax, causal + window mask.
+    One definition serves the dense and int8-cache oracles."""
     b, h, c, d = q.shape
-    hk, m = k_cache.shape[1], k_cache.shape[2]
+    hk, m = kd.shape[1], kd.shape[2]
     g = h // hk
     scale = scale if scale is not None else 1.0 / d**0.5
-    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
-    k_cache, v_cache = append_kv_cache_reference(k_cache, v_cache, k_new, v_new, offset)
-    kq = jnp.repeat(k_cache, g, axis=1)  # [B, H, M, D]
-    vq = jnp.repeat(v_cache, g, axis=1)
+    kq = jnp.repeat(kd, g, axis=1)  # [B, H, M, D]
+    vq = jnp.repeat(vd, g, axis=1)
     s = jnp.einsum("bhcd,bhmd->bhcm", q, kq, preferred_element_type=jnp.float32)
     s = s.astype(jnp.float32) * scale
     if softcap > 0:
@@ -64,5 +59,61 @@ def prefill_append_reference(
     s = jnp.where(mask[:, None], s, _NEG)
     p = jnp.exp(s - s.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)
-    out = jnp.einsum("bhcm,bhmd->bhcd", p.astype(q.dtype), vq)
+    return jnp.einsum("bhcm,bhmd->bhcd", p.astype(q.dtype), vq)
+
+
+def prefill_append_reference(
+    q, k_new, v_new, k_cache, v_cache, offset, *,
+    window: int = 0, softcap: float = 0.0, scale: float | None = None,
+):
+    """q [B, H, C, D]; k/v_new [B, HK, C, D]; cache [B, HK, M, D]; offset [B].
+
+    Returns (out [B, H, C, D], k_cache', v_cache'). GQA via kv repetition;
+    f32 score/softmax throughout.
+    """
+    b = q.shape[0]
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    k_cache, v_cache = append_kv_cache_reference(k_cache, v_cache, k_new, v_new, offset)
+    out = _attend_updated_cache(q, k_cache, v_cache, offset, window=window,
+                                softcap=softcap, scale=scale)
     return out, k_cache, v_cache
+
+
+def append_kv_cache_quant_reference(k_cache, v_cache, k_scale, v_scale,
+                                    k_new, v_new, offset):
+    """Int8-cache append oracle: quantize the chunk's rows (per-row absmax,
+    ``ternary.quantize_kv``) and write int8 data + f32 scales at
+    ``[offset, offset+C)``, via the same independent ``dynamic_update_slice``
+    loop as the dense oracle."""
+    b = k_cache.shape[0]
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    kq, ks = ternary.quantize_kv(k_new)  # [B, HK, C, D] i8, [B, HK, C] f32
+    vq, vs = ternary.quantize_kv(v_new)
+    for i in range(b):
+        start = (jnp.int32(i), jnp.int32(0), offset[i], jnp.int32(0))
+        k_cache = jax.lax.dynamic_update_slice(k_cache, kq[i: i + 1], start)
+        v_cache = jax.lax.dynamic_update_slice(v_cache, vq[i: i + 1], start)
+        k_scale = jax.lax.dynamic_update_slice(k_scale, ks[i: i + 1], start[:3])
+        v_scale = jax.lax.dynamic_update_slice(v_scale, vs[i: i + 1], start[:3])
+    return k_cache, v_cache, k_scale, v_scale
+
+
+def prefill_append_quant_reference(
+    q, k_new, v_new, k_cache, v_cache, k_scale, v_scale, offset, *,
+    window: int = 0, softcap: float = 0.0, scale: float | None = None,
+):
+    """Int8-cache oracle (DESIGN.md §kv-cache): quantize-append the chunk,
+    then run the dense oracle over the *dequantized* updated cache — so the
+    chunk's self-attention sees its own quantized rows, exactly what every
+    later decode/chunk reader will dequantize.
+
+    Returns (out, k_cache', v_cache', k_scale', v_scale')."""
+    b = q.shape[0]
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    k_cache, v_cache, k_scale, v_scale = append_kv_cache_quant_reference(
+        k_cache, v_cache, k_scale, v_scale, k_new, v_new, offset)
+    kd = ternary.dequantize_kv(k_cache, k_scale, q.dtype)
+    vd = ternary.dequantize_kv(v_cache, v_scale, q.dtype)
+    out = _attend_updated_cache(q, kd, vd, offset, window=window,
+                                softcap=softcap, scale=scale)
+    return out, k_cache, v_cache, k_scale, v_scale

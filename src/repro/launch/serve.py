@@ -16,6 +16,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -40,6 +41,10 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=0,
                     help="cache length (default: prompt+gen rounded up)")
     ap.add_argument("--mode", default="packed", choices=["packed", "eval", "wq"])
+    ap.add_argument("--kv-cache-dtype", default="bf16", choices=["bf16", "int8"],
+                    help="int8 = absmax-quantized KV cache with per-row f32 "
+                         "scales, dequantized inside the attention kernels "
+                         "(DESIGN.md §kv-cache); halves cache HBM bytes")
     ap.add_argument("--prefill", default="auto",
                     choices=["auto", "chunked", "legacy"],
                     help="chunked = fused cache-resident prefill; legacy = "
@@ -48,6 +53,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_cache_dtype)
     specs = Tr.param_specs(cfg)
     params = P.init_params(specs, jax.random.PRNGKey(0))
     if args.ckpt:
@@ -78,6 +84,12 @@ def main(argv=None):
     reqs = [E.Request(rid=i, prompt=p, max_new=args.gen) for i, p in enumerate(prompts)]
     for r in reqs:
         eng.submit(r)
+
+    # measured cache residency vs the bf16 layout of the same geometry
+    got, ref16 = E.cache_savings(eng)
+    print(f"[serve] kv_cache_dtype={cfg.kv_cache_dtype}: cache resident "
+          f"{got/2**20:.2f} MiB (bf16 layout {ref16/2**20:.2f} MiB, "
+          f"{ref16/got:.2f}x)")
 
     t0 = time.time()
     first_tok_at = {}

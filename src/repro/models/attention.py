@@ -29,6 +29,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..core import ternary
 from ..parallel import constrain
 
 _NEG = -1e30
@@ -138,10 +139,12 @@ def prefill_attention(
 
 def decode_attention(
     q: jax.Array,  # [B, H, D] — the single new token (paper C4 decoupled path)
-    k_cache: jax.Array,  # [B, HK, M, D]
+    k_cache: jax.Array,  # [B, HK, M, D] (bf16/f32, or int8 with scales)
     v_cache: jax.Array,  # [B, HK, M, D]
     pos: jax.Array,  # [B] current position (attend to <= pos)
     *,
+    k_scale: jax.Array | None = None,  # [B, HK, M] f32 (int8 cache only)
+    v_scale: jax.Array | None = None,
     window: int = 0,
     softcap: float = 0.0,
     scale: float | None = None,
@@ -156,6 +159,11 @@ def decode_attention(
       * ``"xla"``    — this module's dense XLA form over the full padded
         cache (the interpret/CPU fallback and the dry-run lowering);
       * ``"auto"``   — kernel on TPU, XLA elsewhere.
+
+    With ``k_scale``/``v_scale`` set the caches are int8 (DESIGN.md
+    §kv-cache): the kernel dequantizes per VMEM block; the XLA form
+    dequantizes the whole cache up front — dense compute either way, so the
+    materialization is the documented fallback cost, not the serving path.
     """
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "xla"
@@ -163,8 +171,12 @@ def decode_attention(
         from ..kernels.decode_attention import ops as da_ops
 
         return da_ops.decode_attention(
-            q, k_cache, v_cache, pos, window=window, softcap=softcap, scale=scale
+            q, k_cache, v_cache, pos, k_scale=k_scale, v_scale=v_scale,
+            window=window, softcap=softcap, scale=scale
         )
+    if k_scale is not None:
+        k_cache = ternary.dequantize_kv(k_cache, k_scale, q.dtype)
+        v_cache = ternary.dequantize_kv(v_cache, v_scale, q.dtype)
     b, h, d = q.shape
     hk, m = k_cache.shape[1], k_cache.shape[2]
     g = h // hk
@@ -200,18 +212,24 @@ def prefill_append_attention(
     v_cache: jax.Array,  # [B, HK, M, D]
     offset: jax.Array,   # [B] (or scalar) per-slot cache frontier, ≡ 0 (mod C)
     *,
+    k_scale: jax.Array | None = None,  # [B, HK, M] f32 (int8 cache only)
+    v_scale: jax.Array | None = None,
     window: int = 0,
     softcap: float = 0.0,
     scale: float | None = None,
     impl: str = "auto",
     prefix_limit: int = 0,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+):
     """Chunked prefill against a cache prefix (the ``mode="prefill_chunk"`` path).
 
     A chunk of ``C`` tokens attends to the slot's existing cache prefix
     (positions ``< offset``, frontier-masked) plus itself (causal within the
     chunk), and the chunk's K/V are appended to the cache at
-    ``[offset, offset+C)``. Returns (out [B, H, C, D], k_cache', v_cache').
+    ``[offset, offset+C)``. Returns (out [B, H, C, D], k_cache', v_cache') —
+    with ``k_scale``/``v_scale`` set (int8 cache, DESIGN.md §kv-cache) the
+    chunk's rows are absmax-quantized at append time, its self-attention runs
+    on the dequantized quantized rows, and the tuple grows to
+    (out, k_cache', v_cache', k_scale', v_scale').
 
     ``impl`` selects the execution path:
       * ``"kernel"`` — the fused Pallas kernel (kernels/prefill_append):
@@ -224,7 +242,8 @@ def prefill_append_attention(
     ``prefix_limit > 0`` (serving: the engine's trash-tail base) marks
     offsets at/past it write-only: the kernel skips their whole prefix scan.
     The XLA form ignores it — its compute is dense either way, and diverted
-    rows' outputs are garbage by contract.
+    rows' outputs are garbage by contract (their rows still quantize exactly
+    like live ones, so the trash tail keeps the same int8+scale layout).
     """
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "xla"
@@ -233,6 +252,7 @@ def prefill_append_attention(
 
         return pa_ops.prefill_append(
             q, k_new, v_new, k_cache, v_cache, offset,
+            k_scale=k_scale, v_scale=v_scale,
             window=window, softcap=softcap, scale=scale,
             prefix_limit=prefix_limit,
         )
@@ -241,10 +261,18 @@ def prefill_append_attention(
     g = h // hk
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
-    k_cache, v_cache = append_kv_cache(k_cache, v_cache, k_new, v_new, offset)
+    quantized = k_scale is not None
+    if quantized:
+        k_cache, v_cache, k_scale, v_scale = append_kv_cache_quant(
+            k_cache, v_cache, k_scale, v_scale, k_new, v_new, offset)
+        kd = ternary.dequantize_kv(k_cache, k_scale, q.dtype)
+        vd = ternary.dequantize_kv(v_cache, v_scale, q.dtype)
+    else:
+        k_cache, v_cache = append_kv_cache(k_cache, v_cache, k_new, v_new, offset)
+        kd, vd = k_cache, v_cache
     # grouped GQA form (no kv repetition), dense over the padded cache
     qg = q.reshape(b, hk, g, c, d)
-    s = jnp.einsum("bkgcd,bkpd->bkgcp", qg, k_cache,
+    s = jnp.einsum("bkgcd,bkpd->bkgcp", qg, kd,
                    preferred_element_type=jnp.float32)
     s = s * scale
     if softcap > 0:
@@ -256,7 +284,9 @@ def prefill_append_attention(
         mask &= (qpos[:, :, None] - kpos) < window
     s = jnp.where(mask[:, None, None], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgcp,bkpd->bkgcd", p.astype(v_cache.dtype), v_cache)
+    o = jnp.einsum("bkgcp,bkpd->bkgcd", p.astype(vd.dtype), vd)
+    if quantized:
+        return o.reshape(b, h, c, d), k_cache, v_cache, k_scale, v_scale
     return o.reshape(b, h, c, d), k_cache, v_cache
 
 
@@ -279,6 +309,62 @@ def append_kv_cache(k_cache, v_cache, k_new, v_new, offset):
     gv = jnp.take_along_axis(v_new.astype(v_cache.dtype), idx, axis=2)
     sel = inside[:, None, :, None]
     return jnp.where(sel, gk, k_cache), jnp.where(sel, gv, v_cache)
+
+
+def append_kv_cache_quant(k_cache, v_cache, k_scale, v_scale, k_new, v_new,
+                          offset):
+    """Int8-cache twin of :func:`append_kv_cache`: quantize the chunk's rows
+    (per-row absmax, the paper's QDQ unit fused into the append) and write
+    int8 data + f32 scales at ``[offset, offset+C)`` with the same
+    sharding-safe gather + masked select. k_new [B, HK, C, D] float;
+    k_scale [B, HK, M] f32. Returns (k', v', k_scale', v_scale')."""
+    b, hk, m, d = k_cache.shape
+    c = k_new.shape[2]
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    kq, ks = ternary.quantize_kv(k_new)  # i8 [B,HK,C,D], f32 [B,HK,C]
+    vq, vs = ternary.quantize_kv(v_new)
+    rel = jnp.arange(m)[None, :] - offset[:, None]  # [B, M] intra-chunk index
+    inside = (rel >= 0) & (rel < c)
+    idx = jnp.clip(rel, 0, c - 1)[:, None, :, None]  # [B, 1, M, 1]
+    gk = jnp.take_along_axis(kq, idx, axis=2)
+    gv = jnp.take_along_axis(vq, idx, axis=2)
+    gks = jnp.take_along_axis(ks, idx[..., 0], axis=2)  # [B, HK, M]
+    gvs = jnp.take_along_axis(vs, idx[..., 0], axis=2)
+    sel = inside[:, None, :, None]
+    sel_s = inside[:, None, :]
+    return (jnp.where(sel, gk, k_cache), jnp.where(sel, gv, v_cache),
+            jnp.where(sel_s, gks, k_scale), jnp.where(sel_s, gvs, v_scale))
+
+
+def update_kv_cache_quant(k_cache, v_cache, k_scale, v_scale, k_new, v_new,
+                          pos):
+    """Int8-cache twin of :func:`update_kv_cache`: the new token's K/V row is
+    absmax-quantized at the frontier write (full precision never reaches the
+    cache) and the f32 scale lands in the [B, HK, M] side array at ``pos``.
+    k_new [B, HK, D] float. Same two forms as the dense path: scalar ``pos``
+    uses ``dynamic_update_slice``; per-batch ``pos [B]`` a one-hot masked
+    select (never a dynamic scatter — GSPMD would all-gather the cache)."""
+    kq, ks = ternary.quantize_kv(k_new)  # i8 [B,HK,D], f32 [B,HK]
+    vq, vs = ternary.quantize_kv(v_new)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, kq[:, :, None, :], pos, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, vq[:, :, None, :], pos, axis=2)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(
+            k_scale, ks[:, :, None], pos, axis=2)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(
+            v_scale, vs[:, :, None], pos, axis=2)
+        return k_cache, v_cache, k_scale, v_scale
+    m = k_cache.shape[2]
+    oh = jnp.arange(m)[None, :] == pos[:, None]  # [B, M] bool
+    ohk = oh[:, None, :, None]
+    ohs = oh[:, None, :]
+    return (jnp.where(ohk, kq[:, :, None, :], k_cache),
+            jnp.where(ohk, vq[:, :, None, :], v_cache),
+            jnp.where(ohs, ks[:, :, None], k_scale),
+            jnp.where(ohs, vs[:, :, None], v_scale))
 
 
 def update_kv_cache(k_cache, v_cache, k_new, v_new, pos):

@@ -23,7 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..core import bitlinear
+from ..core import bitlinear, ternary
 from ..core.params import ParamSpec, _map_specs
 from ..parallel import constrain
 from . import attention as attn_ops
@@ -231,28 +231,66 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
     q = L.apply_rope_tables(q, rope_h)
     k = L.apply_rope_tables(k, rope_h)
     q = constrain(q, "act_batch", "act_heads", None, None)
+    # int8-resident cache (DESIGN.md §kv-cache): quantize at every append
+    # site, dequantize inside the attention read — full-precision K/V never
+    # exists in HBM. The cache dict itself carries the layout (scale leaves
+    # present ⇔ int8), so every caller threads it without signature changes.
+    # Train mode is exempt: the hard quant has no straight-through estimator,
+    # so it would block K/V gradients — the knob is a serving-time layout,
+    # and QAT of the cache would need a dedicated STE path.
+    quant = cfg.kv_cache_dtype == "int8" and mode != "train"
     if cache is None:  # prefill / train
+        if quant:
+            # quantize-then-attend: one-shot prefill sees the same
+            # dequantized rows every later reader (and the chunked prefill
+            # path) will, so chunked ≡ one-shot survives on the int8 path.
+            k_i8, ks = ternary.quantize_kv(k)
+            v_i8, vs = ternary.quantize_kv(v)
+            k = ternary.dequantize_kv(k_i8, ks, k.dtype)
+            v = ternary.dequantize_kv(v_i8, vs, v.dtype)
+            new_cache = {"k": k_i8, "k_scale": ks, "v": v_i8, "v_scale": vs}
         out = attn_ops.prefill_attention(
             q, k, v, window=window, softcap=cfg.attn_logit_softcap,
         )
-        new_cache = {"k": k, "v": v}
+        if not quant:
+            new_cache = {"k": k, "v": v}
     elif s > 1:  # mode="prefill_chunk": chunk attends to cache prefix + self
-        out, k_c, v_c = attn_ops.prefill_append_attention(
-            q, k, v, cache["k"], cache["v"], pos,
-            window=window, softcap=cfg.attn_logit_softcap, impl=attn_impl,
-            prefix_limit=prefix_limit,
-        )
-        new_cache = {"k": k_c, "v": v_c}
+        if quant:
+            out, k_c, v_c, ks_c, vs_c = attn_ops.prefill_append_attention(
+                q, k, v, cache["k"], cache["v"], pos,
+                k_scale=cache["k_scale"], v_scale=cache["v_scale"],
+                window=window, softcap=cfg.attn_logit_softcap, impl=attn_impl,
+                prefix_limit=prefix_limit,
+            )
+            new_cache = {"k": k_c, "k_scale": ks_c, "v": v_c, "v_scale": vs_c}
+        else:
+            out, k_c, v_c = attn_ops.prefill_append_attention(
+                q, k, v, cache["k"], cache["v"], pos,
+                window=window, softcap=cfg.attn_logit_softcap, impl=attn_impl,
+                prefix_limit=prefix_limit,
+            )
+            new_cache = {"k": k_c, "v": v_c}
     else:
-        k_c, v_c = attn_ops.update_kv_cache(
-            cache["k"], cache["v"], k[:, :, 0].astype(cache["k"].dtype),
-            v[:, :, 0].astype(cache["v"].dtype), pos
-        )
-        out = attn_ops.decode_attention(
-            q[:, :, 0], k_c, v_c, pos, window=window, softcap=cfg.attn_logit_softcap,
-            impl=attn_impl,
-        )[:, :, None, :].transpose(0, 2, 1, 3)
-        new_cache = {"k": k_c, "v": v_c}
+        if quant:
+            k_c, v_c, ks_c, vs_c = attn_ops.update_kv_cache_quant(
+                cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+                k[:, :, 0], v[:, :, 0], pos
+            )
+            out = attn_ops.decode_attention(
+                q[:, :, 0], k_c, v_c, pos, k_scale=ks_c, v_scale=vs_c,
+                window=window, softcap=cfg.attn_logit_softcap, impl=attn_impl,
+            )[:, :, None, :].transpose(0, 2, 1, 3)
+            new_cache = {"k": k_c, "k_scale": ks_c, "v": v_c, "v_scale": vs_c}
+        else:
+            k_c, v_c = attn_ops.update_kv_cache(
+                cache["k"], cache["v"], k[:, :, 0].astype(cache["k"].dtype),
+                v[:, :, 0].astype(cache["v"].dtype), pos
+            )
+            out = attn_ops.decode_attention(
+                q[:, :, 0], k_c, v_c, pos, window=window,
+                softcap=cfg.attn_logit_softcap, impl=attn_impl,
+            )[:, :, None, :].transpose(0, 2, 1, 3)
+            new_cache = {"k": k_c, "v": v_c}
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
     out = constrain(out, "act_batch", None, "act_heads")
     return bitlinear.apply(bp["o"], out, mode=mode, out_dtype=x.dtype,
@@ -557,6 +595,20 @@ def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
 def _kind_cache_spec(cfg, kind: LayerKind, batch: int, seq: int, dtype):
     hk, hd = cfg.n_kv_heads, cfg.head_dim
     if kind.mixer == "attn":
+        if cfg.kv_cache_dtype == "int8":
+            # int8 data + per-(slot, head, row) f32 absmax scale side arrays
+            # (DESIGN.md §kv-cache). The scale leaves carry act_kv_seq so the
+            # path-based grow/fit machinery resizes them with their caches.
+            return {
+                "k": (jax.ShapeDtypeStruct((batch, hk, seq, hd), jnp.int8),
+                      ("act_batch", "act_kv_heads", "act_kv_seq", None)),
+                "k_scale": (jax.ShapeDtypeStruct((batch, hk, seq), jnp.float32),
+                            ("act_batch", "act_kv_heads", "act_kv_seq")),
+                "v": (jax.ShapeDtypeStruct((batch, hk, seq, hd), jnp.int8),
+                      ("act_batch", "act_kv_heads", "act_kv_seq", None)),
+                "v_scale": (jax.ShapeDtypeStruct((batch, hk, seq), jnp.float32),
+                            ("act_batch", "act_kv_heads", "act_kv_seq")),
+            }
         return {
             "k": (jax.ShapeDtypeStruct((batch, hk, seq, hd), dtype),
                   ("act_batch", "act_kv_heads", "act_kv_seq", None)),
@@ -593,7 +645,16 @@ def _kind_cache_spec(cfg, kind: LayerKind, batch: int, seq: int, dtype):
 
 
 def cache_specs(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
-    """(ShapeDtypeStruct tree, logical-axes tree) for the KV/state caches."""
+    """(ShapeDtypeStruct tree, logical-axes tree) for the KV/state caches.
+
+    ``cfg.kv_cache_dtype == "int8"`` switches attention-mixer caches to the
+    int8 + scale-side-array layout (DESIGN.md §kv-cache); non-attention
+    state (MLA latents, mamba/rwkv recurrent state) is always dense, so the
+    knob is a no-op for archs without an attn mixer.
+    """
+    if cfg.kv_cache_dtype not in ("bf16", "int8"):
+        raise ValueError(f"kv_cache_dtype must be 'bf16' or 'int8', got "
+                         f"{cfg.kv_cache_dtype!r}")
     prelude, period, n_periods = block_plan(cfg)
 
     def split(tree):

@@ -88,20 +88,51 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
 
+def cache_nbytes(caches) -> int:
+    """Total bytes resident in a cache tree (int8 data + scale side arrays
+    included) — what the serving CLIs report as the kv_cache_dtype saving.
+    Accepts concrete arrays *or* the abstract ``cache_specs`` shapes tree, so
+    a reference layout can be costed without allocating it."""
+    import math
+
+    return sum(math.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(caches))
+
+
+def cache_savings(eng: "ServingEngine") -> tuple[int, int]:
+    """(resident_bytes, bf16_layout_bytes) for an engine's caches — the
+    kv_cache_dtype saving the serving CLIs print. The bf16 reference layout
+    comes from abstract ``cache_specs`` at the same geometry, never
+    allocated."""
+    ref = Tr.cache_specs(
+        dataclasses.replace(eng.cfg, kv_cache_dtype="bf16"),
+        eng.slots, eng.cache_len, eng.cfg.dtype)[0]
+    return cache_nbytes(eng.caches), cache_nbytes(ref)
+
+
 def _resize_caches(caches, cfg, max_len: int, *, crop: bool):
     """Pad (and, with ``crop``, slice) caches to ``max_len`` on the seq axis.
 
     Which leaves carry a sequence axis — and which axis it is — is decided by
     *path* against the ``cache_specs`` axes tree (the leaves whose logical
-    axes contain ``act_kv_seq``: attention ``k``/``v``, MLA ``c_kv``/
-    ``k_rope``), not by leaf name, so nested state dicts whose leaves happen
-    to share those names (or caches with no seq axis at all: mamba conv/ssm,
-    rwkv wkv) are never touched.
+    axes contain ``act_kv_seq``: attention ``k``/``v`` and their int8-cache
+    ``k_scale``/``v_scale`` side arrays, MLA ``c_kv``/``k_rope``), not by
+    leaf name, so nested state dicts whose leaves happen to share those names
+    (or caches with no seq axis at all: mamba conv/ssm, rwkv wkv) are never
+    touched. A cache whose layout disagrees with ``cfg.kv_cache_dtype``
+    (scale leaves present/absent where the spec says otherwise) is rejected
+    rather than silently mis-resized.
     """
     _, axes_tree = Tr.cache_specs(cfg, 1, 1)
 
     def rec(c, a):
         if isinstance(c, dict):
+            if set(c) != set(a):
+                raise ValueError(
+                    f"cache layout mismatch: cache has keys {sorted(c)} but "
+                    f"cfg (kv_cache_dtype={cfg.kv_cache_dtype!r}) expects "
+                    f"{sorted(a)} — was this cache built under a different "
+                    f"kv_cache_dtype?")
             return {k: rec(c[k], a[k]) for k in c}
         if "act_kv_seq" not in a:
             return c
