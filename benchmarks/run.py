@@ -19,6 +19,7 @@ def main() -> int:
         ("prefill_fast_path", "benchmarks.bench_prefill"),
         ("layer_fusion", "benchmarks.bench_layer_fusion"),
         ("kv_cache", "benchmarks.bench_kv_cache"),
+        ("speculative_decode", "benchmarks.bench_speculative"),
         ("tableV_compression", "benchmarks.bench_compression"),
     ]
     failures = 0

@@ -43,6 +43,13 @@ def main(argv=None):
                     choices=["bf16", "int8"],
                     help="int8 = absmax-quantized KV cache with per-row "
                          "scales, dequantized inside the attention kernels")
+    ap.add_argument("--speculative", action="store_true",
+                    help="prompt-lookup drafting + chunk-verify: up to γ+1 "
+                         "tokens retire per tick, greedy output bit-identical "
+                         "(DESIGN.md §speculative)")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="draft tokens verified per tick (default: "
+                         "cfg.spec_gamma)")
     args = ap.parse_args(argv)
     cfg = get_config("tellme-0.7b", smoke=True)
     cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_cache_dtype)
@@ -59,7 +66,9 @@ def main(argv=None):
                   max_new=4 + 2 * (i % 3))
         for i in range(len(lens))
     ]
-    eng = E.ServingEngine(params, cfg, slots=3, max_len=512, mode="packed")
+    eng = E.ServingEngine(params, cfg, slots=3, max_len=512, mode="packed",
+                          speculative=args.speculative,
+                          spec_gamma=args.spec_gamma or None)
     got, ref16 = E.cache_savings(eng)
     print(f"kv_cache_dtype={cfg.kv_cache_dtype}: cache resident "
           f"{got/2**20:.2f} MiB (bf16 layout {ref16/2**20:.2f} MiB, "
@@ -78,10 +87,15 @@ def main(argv=None):
     total = sum(len(r.generated) for r in reqs)
     print(f"served {len(reqs)} requests / {total} tokens in {ticks} ticks "
           f"({dt:.1f}s incl. compile, {total/dt:.1f} tok/s, "
-          f"{eng.compiled_prefill_shapes} fused prefill shapes, "
+          f"{eng.compiled_prefill_shapes} compiled tick shapes, "
           f"1 host transfer/tick)")
+    if eng.speculative:
+        print(f"speculative γ={eng.spec_gamma}: "
+              f"acceptance {eng.spec_acceptance_rate:.2f} overall, "
+              f"accepted-tokens/s {total/dt:.1f}")
     for r in reqs:
-        print(f"  req {r.rid}: prompt={len(r.prompt)} -> {r.generated}")
+        spec = f" accept={r.spec_acceptance:.2f}" if r.spec_drafted else ""
+        print(f"  req {r.rid}: prompt={len(r.prompt)} -> {r.generated}{spec}")
 
 
 if __name__ == "__main__":

@@ -71,6 +71,15 @@ class ModelConfig:
     # alongside the decode step, bounding decode stall under concurrent prefill.
     prefill_chunk_sizes: tuple = (64, 128, 256)
     prefill_chunk_budget: int = 512
+    # --- serving: speculative decoding (DESIGN.md §speculative) ------------------
+    # γ tokens drafted per decoding slot and verified in one chunked forward
+    # through the prefill_append path; model-free prompt-lookup ("ngram")
+    # drafting matches the longest n-gram suffix (n ≤ spec_ngram_max) of the
+    # slot's prompt+emitted history against itself and proposes the
+    # continuation. Off by default — ServingEngine(speculative=True) opts in.
+    spec_gamma: int = 4
+    spec_draft: str = "ngram"  # DRAFTERS registry key (serving/speculative.py)
+    spec_ngram_max: int = 3
     # --- numerics ----------------------------------------------------------------
     norm_eps: float = 1e-5
     rope_theta: float = 10000.0

@@ -114,6 +114,38 @@ def quantize_act_ste(x: jax.Array, *, axis: int = -1) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Cache-frontier rollback helpers (speculative decoding)
+# ---------------------------------------------------------------------------
+
+
+def mask_past_frontier(x, frontier, *, seq_axis: int, batch_axis: int = 0):
+    """Zero every element at sequence positions ``>= frontier``.
+
+    The rollback invariant (DESIGN.md §speculative): cache rows at/past a
+    slot's frontier are *dead* — every attention read clamps its key range to
+    the frontier, and the next append lands exactly on them — so rejecting
+    drafted tokens rolls back by rewinding the frontier pointer, O(1), no row
+    surgery. Int8 scale side arrays carry the same ``act_kv_seq`` axis and
+    rewind with it for free.
+
+    This helper canonicalizes that invariant for *state equality checks*
+    (tests, debugging): two caches are equivalent iff they agree after
+    masking dead rows. ``frontier`` is a scalar or per-slot [B] vector
+    broadcast along ``batch_axis``.
+    """
+    n = x.shape[seq_axis]
+    idx_shape = [1] * x.ndim
+    idx_shape[seq_axis] = n
+    idx = jnp.arange(n, dtype=jnp.int32).reshape(idx_shape)
+    frontier = jnp.asarray(frontier, jnp.int32)
+    if frontier.ndim:
+        f_shape = [1] * x.ndim
+        f_shape[batch_axis] = frontier.shape[0]
+        frontier = frontier.reshape(f_shape)
+    return jnp.where(idx < frontier, x, jnp.zeros_like(x))
+
+
+# ---------------------------------------------------------------------------
 # Reference ternary matmul semantics (the oracle every kernel is tested on)
 # ---------------------------------------------------------------------------
 

@@ -50,7 +50,9 @@ def _kernel(x_ref, xs_ref, widx_ref, ws_ref, combos_ref, o_ref, *, g: int):
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    o_ref[...] = acc * xs_ref[...] * ws_ref[0, 0]
+    # dequant epilogue: per-token activation scale × per-output-channel (or
+    # broadcast per-tensor) weight scale row for this K block
+    o_ref[...] = acc * xs_ref[...] * ws_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("g", "bk", "interpret"))
@@ -58,7 +60,7 @@ def tl_gemv_kernel(
     x_i8: jax.Array,  # [M, N] int8 (M small; decode GEMV)
     x_scale: jax.Array,  # [M, 1] f32
     w_idx: jax.Array,  # [N/g, K] int32 group indices
-    w_scale: jax.Array,  # [1, 1] f32
+    w_scale: jax.Array,  # [1, K] f32 per-output-channel scale row
     *,
     g: int = 3,
     bk: int = 128,
@@ -66,7 +68,7 @@ def tl_gemv_kernel(
 ) -> jax.Array:
     m, n = x_i8.shape
     t, k = w_idx.shape
-    assert t * g == n and k % bk == 0
+    assert t * g == n and k % bk == 0 and w_scale.shape == (1, k)
     combos = _combo_const(g)
     return pl.pallas_call(
         functools.partial(_kernel, g=g),
@@ -75,7 +77,7 @@ def tl_gemv_kernel(
             pl.BlockSpec((m, n), lambda j: (0, 0)),
             pl.BlockSpec((m, 1), lambda j: (0, 0)),
             pl.BlockSpec((t, bk), lambda j: (0, j)),
-            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, bk), lambda j: (0, j)),
             pl.BlockSpec((g, 3**g), lambda j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((m, bk), lambda j: (0, j)),

@@ -8,14 +8,26 @@ from .. import _common as C
 from .kernel import tl_gemv_kernel
 
 
-def tl_gemv(x_i8, x_scale, w_idx, w_scale, *, g: int = 3, interpret=None, out_dtype=jnp.float32):
-    """x_i8 [..., N] int8 × group-index weights [N/g, K] -> [..., K]."""
+def tl_gemv(x_i8, x_scale, w_idx, w_scale, *, g: int = 3, bk: int = 128,
+            interpret=None, out_dtype=jnp.float32):
+    """x_i8 [..., N] int8 × group-index weights [N/g, K] -> [..., K].
+
+    ``w_scale`` is a scalar (per-tensor absmean) *or* a per-output-channel
+    vector ([K] or [1, K]) — parity with ``ternary_matmul_ref``'s dequant
+    contract, so per-channel-scaled packed layers can take the TL path too.
+    ``bk`` tunes the K-block streamed per grid step (K is padded up to a
+    ``bk`` multiple here and sliced back after the call; pad columns carry a
+    zero scale, so they cost nothing beyond the padded lanes).
+    """
     interpret = C.resolve_interpret(interpret)
     x2, lead, m = C.flatten_lead(x_i8)
     s2 = x_scale.reshape(m, 1)
     t, k = w_idx.shape
-    bk = 128
-    w2 = C.pad_to(w_idx, 1, C.round_up(k, bk))
-    ws = jnp.asarray(w_scale, jnp.float32).reshape(1, 1)
-    out = tl_gemv_kernel(x2, s2, w2, ws, g=g, bk=bk, interpret=interpret)
+    kp = C.round_up(k, bk)
+    w2 = C.pad_to(w_idx, 1, kp)
+    # scalar -> broadcast row; [K] / [1, K] -> per-channel row (zero-padded)
+    ws = jnp.broadcast_to(
+        jnp.asarray(w_scale, jnp.float32).reshape(1, -1), (1, k))
+    ws2 = C.pad_to(ws, 1, kp)
+    out = tl_gemv_kernel(x2, s2, w2, ws2, g=g, bk=bk, interpret=interpret)
     return out[:, :k].reshape(*lead, k).astype(out_dtype)

@@ -49,6 +49,14 @@ def main(argv=None):
                     choices=["auto", "chunked", "legacy"],
                     help="chunked = fused cache-resident prefill; legacy = "
                          "per-request bucketed prefill + scatter")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative decoding (DESIGN.md §speculative): "
+                         "prompt-lookup drafting + chunk-verify through the "
+                         "prefill_append path; greedy output bit-identical "
+                         "to plain decode, up to γ+1 tokens per tick")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="draft tokens verified per tick (default: "
+                         "cfg.spec_gamma)")
     ap.add_argument("--ckpt")
     args = ap.parse_args(argv)
 
@@ -79,7 +87,8 @@ def main(argv=None):
     max_len = args.max_len or max(lens) + args.gen + 1
     eng = E.ServingEngine(
         serve_params, cfg, slots=args.slots or args.batch, max_len=max_len,
-        mode=args.mode, prefill=args.prefill,
+        mode=args.mode, prefill=args.prefill, speculative=args.speculative,
+        spec_gamma=args.spec_gamma or None,
     )
     reqs = [E.Request(rid=i, prompt=p, max_new=args.gen) for i, p in enumerate(prompts)]
     for r in reqs:
@@ -90,6 +99,10 @@ def main(argv=None):
     print(f"[serve] kv_cache_dtype={cfg.kv_cache_dtype}: cache resident "
           f"{got/2**20:.2f} MiB (bf16 layout {ref16/2**20:.2f} MiB, "
           f"{ref16/got:.2f}x)")
+    if args.speculative and not eng.speculative:
+        print(f"[serve] speculative requested but family={cfg.family!r} "
+              f"prefill={eng.prefill!r} stays on plain decode "
+              f"(DESIGN.md §speculative)")
 
     t0 = time.time()
     first_tok_at = {}
@@ -112,7 +125,12 @@ def main(argv=None):
         print(f"[serve] time-to-first-token ms: "
               f"min={ttft[0]*1e3:.1f} max={ttft[-1]*1e3:.1f}")
     print(f"[serve] decode throughput: {total/max(dt, 1e-9):.1f} tok/s "
-          f"({eng.compiled_prefill_shapes} fused prefill shapes compiled)")
+          f"({eng.compiled_prefill_shapes} compiled tick shapes)")
+    if eng.speculative:
+        rates = " ".join(f"r{r.rid}={r.spec_acceptance:.2f}" for r in reqs)
+        print(f"[serve] speculative γ={eng.spec_gamma}: acceptance "
+              f"{eng.spec_acceptance_rate:.2f} overall ({rates}), "
+              f"accepted-tokens/s {total/max(dt, 1e-9):.1f}")
     print(f"[serve] sample generated ids[0,:16]: {reqs[0].generated[:16]}")
     return 0
 

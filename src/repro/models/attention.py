@@ -219,6 +219,7 @@ def prefill_append_attention(
     scale: float | None = None,
     impl: str = "auto",
     prefix_limit: int = 0,
+    aligned: bool = True,
 ):
     """Chunked prefill against a cache prefix (the ``mode="prefill_chunk"`` path).
 
@@ -244,9 +245,21 @@ def prefill_append_attention(
     The XLA form ignores it — its compute is dense either way, and diverted
     rows' outputs are garbage by contract (their rows still quantize exactly
     like live ones, so the trash tail keeps the same int8+scale layout).
+
+    ``aligned`` declares the caller's offset contract: the kernel's aliased
+    cache-append windows require ``offset ≡ 0 (mod C)`` (the engine's chunk
+    schedule guarantees it); speculative verify chunks land at *arbitrary*
+    decode frontiers and pass ``aligned=False``, which pins ``"auto"`` to the
+    XLA form (its masked-select append handles any offset) and rejects an
+    explicit ``"kernel"`` rather than mis-writing the cache.
     """
     if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "xla"
+        impl = "kernel" if aligned and jax.default_backend() == "tpu" else "xla"
+    if impl == "kernel" and not aligned:
+        raise ValueError(
+            "prefill_append_attention: impl='kernel' requires chunk-aligned "
+            "offsets (aligned=True) — the aliased cache windows write at "
+            "offset/C; speculative verify frontiers are arbitrary")
     if impl == "kernel":
         from ..kernels.prefill_append import ops as pa_ops
 

@@ -209,12 +209,14 @@ def pack_tree(params, specs):
 
 
 def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
-                attn_impl="auto", prefix_limit=0, rope=None, xq=None,
-                residual=None):
+                attn_impl="auto", prefix_limit=0, aligned=True, rope=None,
+                xq=None, residual=None):
     """``xq`` (the fused norm-quant prologue's ``(x_i8, x_scale)``) replaces
     ``x`` as the projection input on the int8-resident path; ``residual`` is
     folded into the o-projection's dequant epilogue. ``rope`` carries the
-    step's precomputed (cos, sin) tables (built here when absent)."""
+    step's precomputed (cos, sin) tables (built here when absent).
+    ``aligned`` is the chunk path's offset contract (False for speculative
+    verify — see ``prefill_append_attention``)."""
     b, s, _ = x.shape
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     window = cfg.sliding_window if kind.local else 0
@@ -260,14 +262,14 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
                 q, k, v, cache["k"], cache["v"], pos,
                 k_scale=cache["k_scale"], v_scale=cache["v_scale"],
                 window=window, softcap=cfg.attn_logit_softcap, impl=attn_impl,
-                prefix_limit=prefix_limit,
+                prefix_limit=prefix_limit, aligned=aligned,
             )
             new_cache = {"k": k_c, "k_scale": ks_c, "v": v_c, "v_scale": vs_c}
         else:
             out, k_c, v_c = attn_ops.prefill_append_attention(
                 q, k, v, cache["k"], cache["v"], pos,
                 window=window, softcap=cfg.attn_logit_softcap, impl=attn_impl,
-                prefix_limit=prefix_limit,
+                prefix_limit=prefix_limit, aligned=aligned,
             )
             new_cache = {"k": k_c, "v": v_c}
     else:
@@ -316,8 +318,8 @@ def _apply_ffn(fp, x, cfg, kind, pcfg, *, mode):
 
 
 def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=None,
-                pos=None, attn_impl="auto", prefix_limit=0, rope=None,
-                fused=None):
+                pos=None, attn_impl="auto", prefix_limit=0, aligned=True,
+                rope=None, fused=None):
     """Returns (x, new_cache, aux).
 
     ``rope`` is the step's precomputed table dict from :func:`rope_for`
@@ -367,7 +369,7 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
         hq = L.norm_quant(bp["ln1"], x, eps=cfg.norm_eps)
         x, new_cache = _apply_attn(bp["attn"], x, cfg, kind, positions, mode=mode,
                                    cache=cache, pos=pos, attn_impl=attn_impl,
-                                   prefix_limit=prefix_limit,
+                                   prefix_limit=prefix_limit, aligned=aligned,
                                    rope=rope.get("attn"), xq=hq, residual=x)
         x = constrain(x, "act_batch", "act_seq", None)
         h2q = L.norm_quant(bp["ln2"], x, eps=cfg.norm_eps)
@@ -379,7 +381,8 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
     if kind.mixer == "attn":
         y, new_cache = _apply_attn(bp["attn"], h, cfg, kind, positions, mode=mode,
                                    cache=cache, pos=pos, attn_impl=attn_impl,
-                                   prefix_limit=prefix_limit, rope=rope.get("attn"))
+                                   prefix_limit=prefix_limit, aligned=aligned,
+                                   rope=rope.get("attn"))
     elif kind.mixer == "mla":
         if cache is None:
             y, new_cache = mla_mod.mla_prefill(bp["attn"], h, cfg, positions, mode=mode,
@@ -530,7 +533,7 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto
 
 def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
                        attn_impl="auto", last_row=None, prefix_limit=0,
-                       fused=None):
+                       aligned=True, fused=None):
     """One chunked-prefill step (``mode="prefill_chunk"``): a C-token chunk per
     slot runs against the batched caches, appending each layer's K/V at the
     slot's ``offset`` and attending to the cache prefix + itself.
@@ -559,7 +562,7 @@ def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
         x, cch, _ = apply_block(kind, params[f"prelude_{i}"], x, cfg, None, positions,
                                 mode=mode, cache=caches[f"prelude_{i}"], pos=offset,
                                 attn_impl=attn_impl, prefix_limit=prefix_limit,
-                                rope=rope, fused=fused)
+                                aligned=aligned, rope=rope, fused=fused)
         new_caches[f"prelude_{i}"] = cch
 
     def body(carry, xs):
@@ -570,7 +573,7 @@ def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
             x, cch, _ = apply_block(kind, pparams[f"b{i}"], x, cfg, None, positions,
                                     mode=mode, cache=pcaches[f"b{i}"], pos=offset,
                                     attn_impl=attn_impl, prefix_limit=prefix_limit,
-                                    rope=rope, fused=fused)
+                                    aligned=aligned, rope=rope, fused=fused)
             cs[f"b{i}"] = cch
         return x, cs
 
@@ -585,6 +588,42 @@ def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
     if last_row is not None:
         return logits[:, 0], new_caches
     return logits, new_caches
+
+
+def verify_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
+                      attn_impl="auto", prefix_limit=0, fused=None):
+    """Speculative verify step (DESIGN.md §speculative): run a ``γ+1``-token
+    chunk — ``[current token, γ drafted tokens]`` — at each slot's cache
+    frontier ``offset`` and return logits at *every* chunk row.
+
+    batch {tokens [B, C]}; offset [B] per-slot frontier — **arbitrary**, not
+    ``≡ 0 (mod C)`` like the prefill chunk path (a decode frontier lands
+    wherever the previous acceptance left it). Returns
+    (logits [B, C, V], new caches): row ``j``'s logits are the model's
+    distribution after consuming chunk rows ``0..j`` against the cache prefix
+    — exactly what ``decode_step`` would have produced token-by-token — so
+    acceptance at row ``j`` can compare draft ``j+1`` against the model in
+    one pass. Runs on both KV-cache dtypes (bf16 / int8 + scale side arrays,
+    quantized at the same append sites) and through the fused norm→quant
+    pipeline (``fused``, default on for ``mode="packed"``).
+
+    The chunk's K/V land at ``[offset, offset+C)``; on rejection the engine
+    *rewinds its frontier pointer* instead of cleaning those rows — they are
+    dead to every subsequent read and overwritten by the next tick's chunk
+    (see ``core.ternary.mask_past_frontier`` for the invariant).
+
+    ``attn_impl``: the Pallas ``prefill_append`` kernel stores chunks through
+    aliased cache windows at ``offset/C`` and therefore *requires*
+    chunk-aligned frontiers — verify offsets are not — so this step threads
+    ``aligned=False`` down to ``prefill_append_attention``, which resolves
+    ``"auto"`` to the XLA append form even on TPU and rejects an explicit
+    ``"kernel"`` rather than mis-writing the cache (a frontier-aligned
+    kernel variant is future work, DESIGN.md §speculative).
+    """
+    return prefill_chunk_step(params, batch, caches, offset, cfg, mode=mode,
+                              attn_impl=attn_impl, last_row=None,
+                              prefix_limit=prefix_limit, aligned=False,
+                              fused=fused)
 
 
 # ---------------------------------------------------------------------------

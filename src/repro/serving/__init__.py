@@ -10,3 +10,5 @@ from .engine import (  # noqa: F401
     make_serve_step,
     prefill_bucketed,
 )
+from .engine import live_cache_state  # noqa: F401
+from .speculative import accept_tokens, make_drafter, ngram_draft  # noqa: F401

@@ -30,6 +30,24 @@ to the legacy per-request prefill through ``prefill_bucketed``, which caches
 the compiled step per length key — bucketed to the chunk grid for the dense
 family, exact-length for recurrent-state/MoE families where pad tokens would
 integrate into the state — so repeat lengths never retrace.
+
+**Speculative decoding** (DESIGN.md §speculative): with
+``ServingEngine(speculative=True)`` every decoding slot drafts
+``spec_gamma`` candidate tokens per tick (model-free prompt-lookup over a
+device-resident token history, ``serving/speculative.py``) and verifies them
+in ONE chunked forward through ``Tr.verify_chunk_step`` — the ``γ+1`` chunk
+appends at the slot's frontier exactly like a prefill chunk, logits come
+back at every row, and the longest accepted prefix plus one model
+correction retires per tick (up to ``γ+1`` tokens per weight/cache stream;
+greedy output bit-identical to plain decode). Rejected rows are rolled back
+by *rewinding the frontier pointer*: stale rows past it are never read
+(clamped frontier masks) and the next tick's chunk overwrites them — O(1),
+int8 scale side arrays included. Mixed ticks verify decoding slots AND
+append prompt chunks for prefilling slots under the same
+``prefill_chunk_budget``; the one-``device_get``-per-tick contract holds
+(the packed array grows to ``[γ+4, slots]``). Dense-family chunked engines
+only — recurrent state cannot rewind a pointer and MoE routing couples
+tokens across slots — others silently stay on plain decode.
 """
 
 from __future__ import annotations
@@ -42,7 +60,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import ternary
 from ..models import transformer as Tr
+from . import speculative as Sp
 
 
 def _round_up(x: int, m: int) -> int:
@@ -368,6 +388,15 @@ class Request:
     max_new: int
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # speculative-decoding stats (0 unless served by a speculative engine):
+    # drafts offered / drafts accepted across this request's verify ticks.
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Fraction of drafted tokens accepted (0.0 when never drafted)."""
+        return self.spec_accepted / self.spec_drafted if self.spec_drafted else 0.0
 
 
 @dataclasses.dataclass
@@ -407,7 +436,8 @@ class ServingEngine:
 
     def __init__(self, params, cfg, *, slots: int = 8, max_len: int = 2048,
                  mode: str = "eval", eos_id: int = -1, attn_impl: str = "auto",
-                 prefill: str = "auto", fused: bool | None = None):
+                 prefill: str = "auto", fused: bool | None = None,
+                 speculative: bool = False, spec_gamma: int | None = None):
         self.params, self.cfg, self.mode = params, cfg, mode
         self.fused = fused  # int8-resident NQD pipeline (None: on iff packed)
         self.slots = slots
@@ -450,6 +480,24 @@ class ServingEngine:
         self._fused: dict[int, Any] = {}  # chunk size -> fused tick jit
         self._serve = _serve_step_cached(cfg, mode, attn_impl, fused)
         self._advance = _advance_cached(eos_id, max_len)
+        # Speculative decode (DESIGN.md §speculative): chunked dense-family
+        # engines only — recurrent state cannot rewind a frontier pointer and
+        # MoE capacity routing couples tokens across slots, so those families
+        # silently stay on plain decode.
+        self.speculative = bool(speculative) and self.prefill == "chunked"
+        self.spec_gamma = int(spec_gamma if spec_gamma is not None
+                              else cfg.spec_gamma)
+        if self.speculative and not (1 <= self.spec_gamma < cmax):
+            raise ValueError(
+                f"spec_gamma={self.spec_gamma} must be in [1, {cmax}): the "
+                f"γ+1 verify chunk must fit the chunk_max trash tail")
+        # Device-resident token history per slot (prompt + emissions) — the
+        # prompt-lookup drafter's corpus; positions <= pos are live.
+        self.hist = (jnp.zeros((slots, self.cache_len), jnp.int32)
+                     if self.speculative else None)
+        self._spec: dict[int | None, Any] = {}  # chunk (or None) -> spec tick jit
+        self.spec_drafted_total = 0
+        self.spec_accepted_total = 0
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -467,8 +515,16 @@ class ServingEngine:
 
     @property
     def compiled_prefill_shapes(self) -> int:
-        """Fused prefill shapes compiled so far (≤ len(cfg.prefill_chunk_sizes))."""
-        return len(self._fused)
+        """Tick shapes compiled so far: plain fused-prefill jits (≤
+        len(cfg.prefill_chunk_sizes)) plus, on a speculative engine, spec
+        tick jits (≤ len(sizes) mixed + 1 verify-only)."""
+        return len(self._fused) + len(self._spec)
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Aggregate drafted-token acceptance across all verify ticks."""
+        return (self.spec_accepted_total / self.spec_drafted_total
+                if self.spec_drafted_total else 0.0)
 
     # -- admission ----------------------------------------------------------
 
@@ -490,6 +546,9 @@ class ServingEngine:
                                         off=0, true_len=prompt.shape[0])
         self.live[slot] = req
         self.max_new_arr = self.max_new_arr.at[slot].set(req.max_new)
+        if self.speculative:  # seed the drafter's history with the prompt
+            self.hist = self.hist.at[slot, : prompt.shape[0]].set(
+                jnp.asarray(prompt, jnp.int32))
         return True
 
     def _prefill_slot(self, slot: int, req: Request):
@@ -533,26 +592,20 @@ class ServingEngine:
 
     # -- the fused chunked-prefill + decode tick ------------------------------
 
-    def _get_fused(self, chunk: int):
-        fn = self._fused.get(chunk)
-        if fn is None:
-            fn = _fused_tick_step(
-                self.cfg, chunk, mode=self.mode, attn_impl=self.attn_impl,
-                eos_id=self.eos_id, max_len=self.max_len,
-                cache_len=self.cache_len, trash_base=self.trash_base,
-                fused=self.fused)
-            self._fused[chunk] = fn
-        return fn
-
-    def _fused_tick(self, prefilling: list) -> bool:
+    def _plan_chunks(self, prefilling: list, budget: int):
+        """Select this tick's prompt-chunk work: the head slot's chunk size
+        wins, same-size slots fill the token ``budget`` (≥ one chunk, so
+        prefill always progresses), and finishing slots record where their
+        first-token row and handoff position land. One definition shared by
+        the plain fused tick and the speculative tick — the two must stay
+        scheduling-identical for the bit-identity guarantee."""
         slots = self.slots
         head = self._plan[prefilling[0]]
         chunk = head.chunks[head.ci]
-        budget = max(self.cfg.prefill_chunk_budget, chunk)
+        budget = max(budget, chunk)
         selected = [s for s in prefilling
                     if self._plan[s].chunks[self._plan[s].ci] == chunk]
         selected = selected[: budget // chunk]
-
         chunk_tok = np.zeros((slots, chunk), np.int64)
         chunk_off = np.full((slots,), self.trash_base, np.int32)
         finishing = np.zeros((slots,), bool)
@@ -566,6 +619,23 @@ class ServingEngine:
                 finishing[s] = True
                 last_row[s] = p.true_len - 1 - p.off
                 fin_pos[s] = p.true_len
+        return chunk, selected, chunk_tok, chunk_off, finishing, last_row, fin_pos
+
+    def _get_fused(self, chunk: int):
+        fn = self._fused.get(chunk)
+        if fn is None:
+            fn = _fused_tick_step(
+                self.cfg, chunk, mode=self.mode, attn_impl=self.attn_impl,
+                eos_id=self.eos_id, max_len=self.max_len,
+                cache_len=self.cache_len, trash_base=self.trash_base,
+                fused=self.fused)
+            self._fused[chunk] = fn
+        return fn
+
+    def _fused_tick(self, prefilling: list) -> bool:
+        slots = self.slots
+        (chunk, selected, chunk_tok, chunk_off, finishing, last_row,
+         fin_pos) = self._plan_chunks(prefilling, self.cfg.prefill_chunk_budget)
         dec_active = np.array(
             [self.live[s] is not None and self._plan[s] is None
              for s in range(slots)])
@@ -587,6 +657,8 @@ class ServingEngine:
             if finishing[s]:
                 self._plan[s] = None
                 req.generated.append(int(tok[s]))
+                if self.speculative:  # keep the drafter history current
+                    self.hist = self.hist.at[s, int(fin_pos[s])].set(int(tok[s]))
                 if done_[s]:
                     req.done = True
                     self.live[s] = None
@@ -596,6 +668,83 @@ class ServingEngine:
                 p.ci += 1
             elif dec_active[s]:
                 req.generated.append(int(tok[s]))
+                if done_[s]:
+                    req.done = True
+                    self.live[s] = None
+        return True
+
+    # -- the speculative verify (+ optional prefill-chunk) tick ---------------
+
+    def _get_spec(self, chunk: int | None):
+        fn = self._spec.get(chunk)
+        if fn is None:
+            fn = _spec_tick_step(
+                self.cfg, self.spec_gamma, chunk, mode=self.mode,
+                attn_impl=self.attn_impl, eos_id=self.eos_id,
+                max_len=self.max_len, cache_len=self.cache_len,
+                trash_base=self.trash_base, fused=self.fused)
+            self._spec[chunk] = fn
+        return fn
+
+    def _spec_tick(self, prefilling: list) -> bool:
+        """One speculative tick: draft+verify ``spec_gamma`` tokens for every
+        decoding slot and (when ``prefilling`` is non-empty) append one prompt
+        chunk per selected prefilling slot — the speculative twin of
+        ``_fused_tick``/``_decode_tick``, still one host transfer."""
+        slots, gamma = self.slots, self.spec_gamma
+        dec_active = np.array(
+            [self.live[s] is not None and self._plan[s] is None
+             for s in range(slots)])
+        if prefilling:
+            # verify tokens ride the same chunk-token budget as prefill work:
+            # every decoding slot spends γ+1 chunk rows this tick, the rest
+            # (at least one chunk, so prefill always progresses) go to prompts
+            (chunk, selected, chunk_tok, chunk_off, finishing, last_row,
+             fin_pos) = self._plan_chunks(
+                prefilling, self.cfg.prefill_chunk_budget
+                - int(dec_active.sum()) * (gamma + 1))
+        else:
+            chunk = None
+            selected = []
+            chunk_tok = np.zeros((slots, 1), np.int64)
+            chunk_off = np.full((slots,), self.trash_base, np.int32)
+            finishing = np.zeros((slots,), bool)
+            last_row = np.zeros((slots,), np.int32)
+            fin_pos = np.zeros((slots,), np.int32)
+
+        fused = self._get_spec(chunk)
+        (self.caches, self.hist, self.cur_tok, self.pos, self.done,
+         self.gen_count, packed) = fused(
+            self.params, self.caches, self.hist, self.cur_tok, self.pos,
+            self.done, self.gen_count, self.max_new_arr,
+            jnp.asarray(dec_active), jnp.asarray(chunk_tok),
+            jnp.asarray(chunk_off), jnp.asarray(finishing),
+            jnp.asarray(last_row), jnp.asarray(fin_pos))
+        state = jax.device_get(packed)  # the tick's one transfer
+        toks, n_out = state[: gamma + 1], state[gamma + 1]
+        drafted_, done_ = state[gamma + 2], state[gamma + 3]
+
+        for s in range(slots):
+            req = self.live[s]
+            if req is None:
+                continue
+            if finishing[s]:
+                self._plan[s] = None
+                req.generated.append(int(toks[0, s]))
+                if done_[s]:
+                    req.done = True
+                    self.live[s] = None
+            elif s in selected:  # mid-prefill: advance the plan
+                p = self._plan[s]
+                p.off += chunk
+                p.ci += 1
+            elif dec_active[s]:
+                n, d = int(n_out[s]), int(drafted_[s])
+                req.generated.extend(int(toks[j, s]) for j in range(n))
+                req.spec_drafted += d
+                req.spec_accepted += min(n - 1, d)
+                self.spec_drafted_total += d
+                self.spec_accepted_total += min(n - 1, d)
                 if done_[s]:
                     req.done = True
                     self.live[s] = None
@@ -640,6 +789,16 @@ class ServingEngine:
         if all(r is None for r in self.live):
             return False
         prefilling = [s for s in range(self.slots) if self._plan[s] is not None]
+        if self.speculative:
+            decoding = any(self.live[s] is not None and self._plan[s] is None
+                           for s in range(self.slots))
+            if prefilling and not decoding:
+                # pure-prefill tick: nothing to verify — the plain fused tick
+                # does the chunk work without paying a discarded γ+1-row
+                # verify forward (it keeps the drafter history current via
+                # its finishing-slot hook below)
+                return self._fused_tick(prefilling)
+            return self._spec_tick(prefilling)
         if prefilling:
             return self._fused_tick(prefilling)
         return self._decode_tick()
@@ -684,12 +843,56 @@ def _retire(next_tok, new_pos, new_count, max_new, *, eos_id: int, max_len: int)
             | (new_pos >= max_len - 1))
 
 
+def _prefill_handoff(first_logits, finishing, fin_pos, new_tok, new_pos,
+                     new_count, new_done, max_new, *, eos_id: int,
+                     max_len: int):
+    """Prefill→decode handoff, one definition for the plain fused tick and
+    the speculative tick: finishing slots start decoding from their chunk's
+    last real row (count 1, pos = true prompt length), with the first token
+    pushed through the same retirement predicate as every decode emission.
+    Returns (first_tok, new_tok, new_pos, new_count, new_done)."""
+    first_tok = jnp.argmax(first_logits, axis=-1).astype(jnp.int32)
+    new_tok = jnp.where(finishing, first_tok, new_tok)
+    new_pos = jnp.where(finishing, fin_pos, new_pos)
+    new_count = jnp.where(finishing, jnp.int32(1), new_count)
+    fin_done = _retire(first_tok, fin_pos, jnp.int32(1), max_new,
+                       eos_id=eos_id, max_len=max_len)
+    new_done = jnp.where(finishing, fin_done, new_done)
+    return first_tok, new_tok, new_pos, new_count, new_done
+
+
+def live_cache_state(caches, cfg, frontier):
+    """Canonical *live* view of a cache tree for state-equality checks: every
+    ``act_kv_seq`` row at/past the per-slot ``frontier`` is zeroed (int8 scale
+    side arrays included — their axes tree carries the same tag).
+
+    This encodes the rollback invariant (DESIGN.md §speculative): rows past a
+    slot's frontier are dead — never read, next to be overwritten — so two
+    engine states are equivalent iff they agree under this mask. Used by the
+    rollback property tests; axis selection is path-based like
+    ``_resize_caches``.
+    """
+    _, axes_tree = Tr.cache_specs(cfg, 1, 1)
+
+    def rec(c, a):
+        if isinstance(c, dict):
+            return {k: rec(c[k], a[k]) for k in c}
+        if "act_kv_seq" not in a:
+            return c
+        return ternary.mask_past_frontier(
+            c, frontier, seq_axis=a.index("act_kv_seq"),
+            batch_axis=a.index("act_batch"))
+
+    return rec(caches, axes_tree)
+
+
 # Module-level compiled-step caches (configs are frozen dataclasses, hence
 # hashable): repeat ServingEngine instances with the same geometry — tests,
 # benchmarks, restarted servers — reuse compiled ticks instead of retracing.
 _SERVE_STEP_CACHE: dict = {}
 _ADVANCE_CACHE: dict = {}
 _FUSED_TICK_CACHE: dict = {}
+_SPEC_TICK_CACHE: dict = {}
 
 
 def _serve_step_cached(cfg, mode: str, attn_impl: str, fused: bool | None = None):
@@ -749,7 +952,6 @@ def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
             mode=mode, attn_impl=attn_impl, last_row=last_row,
             prefix_limit=trash_base, fused=fused)
         next_dec = jnp.argmax(dec_logits, axis=-1).astype(jnp.int32)
-        first_tok = jnp.argmax(first_logits, axis=-1).astype(jnp.int32)
         # 3. decode advance (the _advance transition, masked to dec_active)
         inc = dec_active.astype(jnp.int32)
         new_pos = pos + inc
@@ -758,18 +960,119 @@ def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
             next_dec, new_pos, new_count, max_new,
             eos_id=eos_id, max_len=max_len))
         new_tok = jnp.where(dec_active, next_dec, cur_tok)
-        # 4. prefill→decode handoff: finishing slots start decoding from
-        #    the chunk's last real row (their count becomes 1, pos = true_len)
-        new_tok = jnp.where(finishing, first_tok, new_tok)
-        new_pos = jnp.where(finishing, fin_pos, new_pos)
-        new_count = jnp.where(finishing, jnp.int32(1), new_count)
-        fin_done = _retire(first_tok, fin_pos, jnp.int32(1), max_new,
-                           eos_id=eos_id, max_len=max_len)
-        new_done = jnp.where(finishing, fin_done, new_done)
+        # 4. prefill→decode handoff (shared with the speculative tick)
+        _, new_tok, new_pos, new_count, new_done = _prefill_handoff(
+            first_logits, finishing, fin_pos, new_tok, new_pos, new_count,
+            new_done, max_new, eos_id=eos_id, max_len=max_len)
         packed = jnp.stack([new_tok, new_pos,
                             new_done.astype(jnp.int32), new_count])
         return caches, new_tok, new_pos, new_done, new_count, packed
 
     fn = jax.jit(fused, donate_argnums=(1,))
     _FUSED_TICK_CACHE[key_t] = fn
+    return fn
+
+
+def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
+                    attn_impl: str, eos_id: int, max_len: int, cache_len: int,
+                    trash_base: int, fused: bool | None = None):
+    """The speculative engine's one-jit tick: draft + verify ``gamma`` tokens
+    for every decoding slot, and — when ``chunk`` is a size, the mixed-tick
+    form — append one prompt chunk per selected prefilling slot. Compiled
+    shapes stay bounded: one jit per (chunk|None, γ) pair.
+
+    Per decoding slot the tick emits ``n ∈ [1, γ+1]`` tokens: the longest
+    accepted draft prefix plus one model correction, cut short at the first
+    token that retires the slot (EOS mid-acceptance, budget, cache-full) by
+    walking ``_retire`` per micro-step — so the emitted stream is exactly
+    what ``n`` plain decode ticks would have produced. The frontier advances
+    by ``n`` only: rejected rows at ``pos+n..pos+γ`` are rolled back by the
+    pointer rewind (never read, overwritten by the next tick's chunk).
+    """
+    key_t = (cfg, gamma, chunk, mode, attn_impl, eos_id, max_len, cache_len,
+             trash_base, fused)
+    fn = _SPEC_TICK_CACHE.get(key_t)
+    if fn is not None:
+        return fn
+    drafter = Sp.make_drafter(cfg, gamma=gamma)
+
+    def tick(params, caches, hist, cur_tok, pos, done, gen_count, max_new,
+             dec_active, chunk_tok, chunk_off, finishing, last_row, fin_pos):
+        # 1. draft γ candidates per slot from its device-resident history
+        #    (prompt-lookup n-gram match — no host round-trip, no model pass)
+        drafts = drafter(hist, pos)
+        ver_tok = jnp.concatenate([cur_tok[:, None], drafts], axis=1)
+        ver_off = jnp.where(dec_active, pos, jnp.int32(trash_base))
+        # 2. verify: the γ+1 chunk [cur_tok, drafts] appends at the frontier
+        #    (idle/prefilling slots diverted to the trash tail) and returns
+        #    logits at every row — one weight/cache stream for γ+1 positions
+        ver_logits, caches = Tr.verify_chunk_step(
+            params, {"tokens": ver_tok}, caches, ver_off, cfg, mode=mode,
+            prefix_limit=trash_base, fused=fused)
+        targets, k = Sp.accept_tokens(drafts, ver_logits)
+        # 3. sequential-equivalent emission: micro-step j emits targets[:, j]
+        #    (valid while j <= k), stopping at the first token that retires
+        #    the slot — the same _retire predicate plain decode applies per
+        #    tick, so EOS/budget/cache-full land mid-acceptance identically
+        j = jnp.arange(gamma + 1, dtype=jnp.int32)[None, :]
+        pos_j = pos[:, None] + j + 1
+        cnt_j = gen_count[:, None] + j + 1
+        retire_j = _retire(targets, pos_j, cnt_j, max_new[:, None],
+                           eos_id=eos_id, max_len=max_len)
+        stop_before = jnp.cumsum(
+            jnp.pad(retire_j[:, :-1], ((0, 0), (1, 0))).astype(jnp.int32),
+            axis=1) > 0
+        emit = (j <= k[:, None]) & ~stop_before & dec_active[:, None]
+        n_emit = emit.sum(axis=1).astype(jnp.int32)
+        last_tok = jnp.take_along_axis(
+            targets, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
+        new_tok = jnp.where(dec_active, last_tok, cur_tok)
+        # frontier rewind IS the rollback: rows pos+n_emit..pos+γ go dead
+        new_pos = pos + n_emit
+        new_count = gen_count + n_emit
+        new_done = done | (retire_j & emit).any(axis=1)
+        # 4. append the emissions to the drafter history (token j lands at
+        #    hist[pos+1+j]) — masked select, same form as append_kv_cache
+        hidx = jnp.arange(hist.shape[1], dtype=jnp.int32)[None, :]
+        rel = hidx - (pos[:, None] + 1)
+        relc = jnp.clip(rel, 0, gamma)
+        write = (jnp.take_along_axis(emit, relc, axis=1)
+                 & (rel >= 0) & (rel <= gamma))
+        hist = jnp.where(write, jnp.take_along_axis(targets, relc, axis=1),
+                         hist)
+        if chunk is not None:
+            # 5. mixed tick: one prompt chunk per selected prefilling slot —
+            #    identical to _fused_tick_step's prefill phase (disjoint slot
+            #    sets, so ordering against the verify append is immaterial)
+            first_logits, caches = Tr.prefill_chunk_step(
+                params, {"tokens": chunk_tok}, caches, chunk_off, cfg,
+                mode=mode, attn_impl=attn_impl, last_row=last_row,
+                prefix_limit=trash_base, fused=fused)
+            first_tok, new_tok, new_pos, new_count, new_done = _prefill_handoff(
+                first_logits, finishing, fin_pos, new_tok, new_pos, new_count,
+                new_done, max_new, eos_id=eos_id, max_len=max_len)
+            oh = (hidx == fin_pos[:, None]) & finishing[:, None]
+            hist = jnp.where(oh, first_tok[:, None], hist)
+            emit0 = jnp.where(finishing, first_tok, targets[:, 0])
+            n_out = jnp.where(finishing, jnp.int32(1), n_emit)
+        else:
+            emit0 = targets[:, 0]
+            n_out = n_emit
+        # drafts *chargeable* to acceptance stats: only positions the budget
+        # and cache-full predicates could ever have emitted — a max_new=1
+        # request must not report 0% acceptance for drafts it never got to
+        # use (EOS truncation still counts: that IS a model-vs-draft outcome)
+        window = jnp.minimum(jnp.int32(gamma + 1),
+                             jnp.minimum(max_new - gen_count,
+                                         jnp.int32(max_len - 1) - pos))
+        drafted = jnp.clip(window - 1, 0, gamma) * dec_active.astype(jnp.int32)
+        emit_rows = jnp.concatenate([emit0[:, None], targets[:, 1:]], axis=1)
+        packed = jnp.concatenate([
+            emit_rows.T.astype(jnp.int32),
+            n_out[None], drafted[None], new_done.astype(jnp.int32)[None],
+        ])
+        return caches, hist, new_tok, new_pos, new_done, new_count, packed
+
+    fn = jax.jit(tick, donate_argnums=(1, 2))
+    _SPEC_TICK_CACHE[key_t] = fn
     return fn

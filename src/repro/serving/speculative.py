@@ -1,0 +1,149 @@
+"""Speculative decoding primitives: prompt-lookup drafting + acceptance.
+
+The decode phase is memory-bound — every emitted token streams the whole
+packed weight stack and the KV cache once (DESIGN.md §decode). Speculative
+decoding amortizes that stream: draft ``γ`` candidate tokens cheaply, verify
+them in ONE chunked forward pass through the ``prefill_append`` path
+(``Tr.verify_chunk_step`` returns logits at every chunk row), and emit the
+longest accepted prefix plus one model correction — up to ``γ+1`` tokens per
+weight/cache stream.
+
+Two pieces live here, both pure and engine-agnostic:
+
+* **Drafting** — ``ngram_draft`` is a model-free *prompt-lookup* drafter
+  (PAPERS.md: prompt-lookup / LLMA-style decoding): the longest ``n``-gram
+  suffix (``n ≤ ngram_max``) of the slot's prompt+emitted token history is
+  matched against that same history and the continuation after the most
+  recent match is proposed. Fully vectorized in jnp (shifted-equality
+  comparisons, no host round-trip), so it runs *inside* the engine's fused
+  tick jit. The ``DRAFTERS`` registry keys ``cfg.spec_draft``; a future
+  draft-model implementation registers the same ``(hist, pos) -> drafts``
+  signature and closes over its own parameters.
+
+* **Acceptance** — ``accept_tokens`` turns the verify logits into emissions.
+  Greedy (``temperature <= 0``): a draft is accepted iff it equals the
+  model's argmax at its row, so the emitted stream is exactly the plain
+  greedy stream (the engine's bit-identity guarantee). ``temperature > 0``:
+  standard speculative-sampling residual correction, specialized to a
+  *deterministic* drafter (the proposal is a delta distribution): accept
+  ``d`` with probability ``p(d)``; on rejection resample from the residual
+  ``p`` with ``d`` masked out (the renormalized ``max(p - q, 0)`` for a
+  delta ``q``); after ``γ`` accepts, sample the bonus row from ``p``
+  directly. Either way the output distribution is the target model's.
+
+Rejected rows need no cache surgery: rolling back IS rewinding the per-slot
+frontier pointer (see ``core.ternary.mask_past_frontier`` for the invariant),
+because every attention read clamps to the frontier and the next tick's
+writes land exactly on the stale rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ngram_draft(hist, pos, *, gamma: int, ngram_max: int = 3):
+    """Prompt-lookup drafting: propose ``gamma`` continuation tokens per slot.
+
+    hist [B, L] int32 — the slot's token history; positions ``0..pos`` are
+    valid (``hist[pos]`` is the current token, whose successor is being
+    drafted; later entries are stale and never read). pos [B] int32.
+
+    For ``n = ngram_max..1`` (longest first), the suffix
+    ``hist[pos-n+1..pos]`` is matched at every earlier start ``s`` with
+    ``s + n <= pos`` (so the continuation token exists and the suffix's own
+    occurrence is excluded); the *most recent* match wins and
+    ``hist[s+n .. s+n+gamma)`` is proposed, clamped to existing tokens.
+    With no match at any ``n`` the current token is repeated — a draft is
+    never "absent", merely unlikely to be accepted.
+
+    Everything is shifted-equality compares over [B, L] — O(ngram_max² · L)
+    elementwise work, no gather loops, no host sync — so the drafter runs
+    inside the serving tick's jit.
+    """
+    b, length = hist.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    idx = jnp.arange(length, dtype=jnp.int32)
+    found = jnp.zeros((b,), bool)
+    start = pos  # fallback: continuation source = the current token itself
+    for n in range(ngram_max, 0, -1):
+        eq = jnp.ones((b, length), bool)
+        for i in range(n):
+            suf_i = jnp.take_along_axis(
+                hist, jnp.clip(pos - n + 1 + i, 0, length - 1)[:, None], axis=1)
+            # column s of the shifted view holds hist[s + i]
+            shifted = jnp.pad(hist[:, i:], ((0, 0), (0, i)), constant_values=-1)
+            eq &= shifted == suf_i
+        # s+n <= pos: continuation exists AND the suffix occurrence itself
+        # (s = pos-n+1 → s+n = pos+1) is excluded; pos+1 >= n: suffix exists.
+        valid = (idx[None, :] + n <= pos[:, None]) & (pos[:, None] + 1 >= n)
+        m = eq & valid
+        hit = m.any(axis=1)
+        s_last = jnp.max(jnp.where(m, idx[None, :], -1), axis=1)
+        start = jnp.where(hit & ~found, s_last + n, start)
+        found |= hit
+    j = jnp.arange(gamma, dtype=jnp.int32)
+    gidx = jnp.minimum(start[:, None] + j[None, :], pos[:, None])
+    return jnp.take_along_axis(hist, gidx, axis=1)
+
+
+DRAFTERS = {"ngram": ngram_draft}
+
+
+def make_drafter(cfg, *, gamma: int | None = None):
+    """Resolve ``cfg.spec_draft`` to a ``(hist, pos) -> drafts [B, γ]``
+    closure. The registry leaves room for a draft-model implementation: it
+    would close over its own packed parameters here and keep the same
+    signature (the engine neither knows nor cares how drafts are produced)."""
+    impl = cfg.spec_draft
+    if impl not in DRAFTERS:
+        raise ValueError(f"unknown spec_draft {impl!r}; have {sorted(DRAFTERS)}")
+    fn = DRAFTERS[impl]
+    g = int(gamma if gamma is not None else cfg.spec_gamma)
+    if g < 1:
+        raise ValueError(f"spec_gamma must be >= 1, got {g}")
+    nmax = int(cfg.spec_ngram_max)
+    return lambda hist, pos: fn(hist, pos, gamma=g, ngram_max=nmax)
+
+
+def accept_tokens(drafts, logits, *, temperature: float = 0.0, key=None):
+    """Turn verify logits into per-step emissions.
+
+    drafts [B, γ] — the drafted tokens d_1..d_γ; logits [B, γ+1, V] — row j
+    is the model's distribution after consuming [t0, d_1..d_j] (the output of
+    ``Tr.verify_chunk_step`` over the chunk [t0, d_1..d_γ]).
+
+    Returns ``(targets [B, γ+1], k [B])``: ``targets[:, j]`` is the token the
+    model emits at micro-step ``j`` and ``k`` the number of accepted drafts —
+    rows ``0..k`` are the valid emissions (k accepted drafts + one model
+    correction/bonus; row 0 is always emittable). Greedy: acceptance ⇔
+    draft == argmax, so targets ≡ the plain greedy stream. Stochastic:
+    speculative-sampling residual correction for the deterministic drafter
+    (module docstring) — requires ``key``.
+    """
+    b, g1, v = logits.shape
+    gamma = g1 - 1
+    greedy_targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if temperature <= 0:
+        ok = drafts == greedy_targets[:, :gamma]
+        k = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        return greedy_targets, k
+    if key is None:
+        raise ValueError("temperature > 0 requires a PRNG key")
+    p = jax.nn.softmax(logits[:, :gamma] / temperature, axis=-1)
+    key_u, key_r, key_b = jax.random.split(key, 3)
+    p_draft = jnp.take_along_axis(p, drafts[..., None], axis=-1)[..., 0]
+    ok = jax.random.uniform(key_u, p_draft.shape) < p_draft
+    k = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    # residual for a delta proposal: p with the draft index removed,
+    # renormalized (categorical normalizes implicitly)
+    onehot = jax.nn.one_hot(drafts, v, dtype=bool)
+    res = jax.random.categorical(
+        key_r, jnp.where(onehot, -jnp.inf, jnp.log(p + 1e-30)), axis=-1)
+    bonus = jax.random.categorical(key_b, logits[:, gamma] / temperature, axis=-1)
+    samples = jnp.concatenate([res, bonus[:, None]], axis=1).astype(jnp.int32)
+    j = jnp.arange(gamma + 1, dtype=jnp.int32)[None, :]
+    drafts_row = jnp.pad(drafts, ((0, 0), (0, 1)))  # col γ never selected (k ≤ γ)
+    targets = jnp.where(j < k[:, None], drafts_row, samples)
+    return targets, k

@@ -17,6 +17,14 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    # "slow" splits the hypothesis-heavy property suites into their own CI
+    # job (ci.yml: tier1 runs -m "not slow", tier1-slow runs -m slow); a bare
+    # `pytest` still runs everything — the tier-1 verify command is unchanged.
+    config.addinivalue_line(
+        "markers", "slow: hypothesis-heavy property suites (separate CI job)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

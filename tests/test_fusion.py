@@ -17,6 +17,9 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
+
+# hypothesis-heavy suite: runs in the dedicated `slow` CI job (conftest.py)
+pytestmark = pytest.mark.slow
 from repro.configs import get_config
 from repro.core import bitlinear as BL
 from repro.core import packing as P

@@ -25,6 +25,9 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 from benchmarks.bench_kv_cache import teacher_forced_agreement
+
+# hypothesis-heavy suite: runs in the dedicated `slow` CI job (conftest.py)
+pytestmark = pytest.mark.slow
 from repro.configs import get_config
 from repro.core import params as P
 from repro.core import ternary as T

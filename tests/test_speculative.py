@@ -1,0 +1,486 @@
+"""Speculative decoding: prompt-lookup drafting, verify-as-chunk-append,
+acceptance/residual correction, and the cache-frontier rollback invariant.
+
+The engine-level guarantee under test: greedy speculative serving emits
+*bit-identical token streams* to plain greedy decode (acceptance ⇔ draft ==
+argmax, emissions walk the same per-token retirement predicate). Cache state
+is compared through ``E.live_cache_state`` — rows past the frontier are dead
+by the rollback invariant — with a tight tolerance rather than bitwise:
+chunk-shaped vs single-token attention reassociates the same f32 reductions
+(measured ~1e-6 on the logits; int8 cache *data* rows still match exactly,
+only the f32 absmax scales wiggle).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # property tests skip if absent
+
+from repro.configs import get_config
+from repro.core import params as P
+from repro.core import ternary as Te
+from repro.models import transformer as T
+from repro.serving import engine as E
+from repro.serving import speculative as Sp
+
+
+def _cfg(**kw):
+    cfg = get_config("tellme-0.7b", smoke=True)
+    return dataclasses.replace(cfg, dtype=jnp.float32, **kw)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = P.init_params(T.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_engine(params, cfg, prompts, *, max_new=16, slots=2, max_len=160,
+                eos_id=-1, speculative=False, gamma=4, mode="eval"):
+    reqs = [E.Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    eng = E.ServingEngine(params, cfg, slots=slots, max_len=max_len, mode=mode,
+                          eos_id=eos_id, speculative=speculative,
+                          spec_gamma=gamma)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return reqs, eng
+
+
+# ---------------------------------------------------------------------------
+# Drafting (prompt lookup)
+# ---------------------------------------------------------------------------
+
+
+def _ngram_draft_ref(hist, pos, gamma, nmax):
+    """Plain-python oracle for the vectorized drafter."""
+    out = []
+    for b in range(hist.shape[0]):
+        h, p = list(hist[b]), int(pos[b])
+        start = p  # fallback: repeat the current token
+        for n in range(min(nmax, p + 1), 0, -1):
+            suffix = h[p - n + 1: p + 1]
+            starts = [s for s in range(0, p - n + 1) if h[s: s + n] == suffix]
+            if starts:
+                start = starts[-1] + n
+                break
+        out.append([h[min(start + j, p)] for j in range(gamma)])
+    return np.array(out, np.int32)
+
+
+class TestNgramDraft:
+    def test_continuation_of_most_recent_match(self):
+        #        0  1  2  3  4  5  6  7  8
+        hist = [[5, 6, 7, 1, 5, 6, 9, 5, 6]]
+        # suffix (n=2) = [5, 6]; most recent earlier match at 4 -> continue 9, 5, 6
+        drafts = Sp.ngram_draft(jnp.asarray(hist, jnp.int32), jnp.asarray([8]),
+                                gamma=3, ngram_max=3)
+        np.testing.assert_array_equal(np.array(drafts), [[9, 5, 6]])
+
+    def test_longest_ngram_wins(self):
+        #        0  1  2  3  4  5  6  7  8
+        hist = [[1, 2, 3, 8, 9, 2, 3, 2, 3]]
+        # n=3 suffix [3, 2, 3] has no earlier match; n=2 suffix [2, 3]
+        # matches at 1 and 5 — most recent (5) wins -> continuation 2, 3,
+        # then the window clamps at pos (no token exists past the frontier)
+        drafts = Sp.ngram_draft(jnp.asarray(hist, jnp.int32), jnp.asarray([8]),
+                                gamma=3, ngram_max=3)
+        np.testing.assert_array_equal(np.array(drafts), [[2, 3, 3]])
+
+    def test_fallback_repeats_current_token(self):
+        hist = [[4, 5, 6, 7, 0, 0]]
+        drafts = Sp.ngram_draft(jnp.asarray(hist, jnp.int32), jnp.asarray([3]),
+                                gamma=4, ngram_max=3)
+        np.testing.assert_array_equal(np.array(drafts), [[7, 7, 7, 7]])
+
+    def test_stale_rows_past_pos_never_read(self):
+        # n=2 suffix [1, 2] matches at 0 -> continuation hist[2], hist[3],
+        # clamp; identical whatever garbage sits past pos
+        h1 = [[1, 2, 1, 2, 99, 98, 97]]
+        h2 = [[1, 2, 1, 2, 0, 0, 0]]
+        for h in (h1, h2):
+            d = Sp.ngram_draft(jnp.asarray(h, jnp.int32), jnp.asarray([3]),
+                               gamma=3, ngram_max=3)
+            np.testing.assert_array_equal(np.array(d), [[1, 2, 2]])
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    @pytest.mark.slow
+    def test_matches_python_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        b = int(rng.integers(1, 4))
+        length = int(rng.integers(4, 40))
+        hist = rng.integers(0, 6, size=(b, length)).astype(np.int32)  # small
+        pos = rng.integers(0, length, size=(b,)).astype(np.int32)     # vocab:
+        gamma = int(rng.integers(1, 6))                               # matches
+        nmax = int(rng.integers(1, 5))                                # are common
+        got = np.array(Sp.ngram_draft(jnp.asarray(hist), jnp.asarray(pos),
+                                      gamma=gamma, ngram_max=nmax))
+        want = _ngram_draft_ref(hist, pos, gamma, nmax)
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance
+# ---------------------------------------------------------------------------
+
+
+class TestAcceptTokens:
+    def test_greedy_longest_prefix(self):
+        v = 8
+        # targets (argmax rows) = [3, 5, 1]; drafts [3, 5, 2]: accept 2
+        logits = np.full((1, 3, v), -10.0, np.float32)
+        for j, t in enumerate([3, 5, 1]):
+            logits[0, j, t] = 10.0
+        targets, k = Sp.accept_tokens(jnp.asarray([[3, 5]]), jnp.asarray(logits))
+        np.testing.assert_array_equal(np.array(targets), [[3, 5, 1]])
+        assert int(k[0]) == 2
+        # first draft wrong: accept 0, row 0 is still the correction
+        targets, k = Sp.accept_tokens(jnp.asarray([[4, 5]]), jnp.asarray(logits))
+        assert int(k[0]) == 0
+        assert int(targets[0, 0]) == 3
+
+    def test_greedy_no_hole_in_acceptance(self):
+        # draft 1 wrong, draft 2 "right" -> still only 0 accepted (prefix rule)
+        v = 8
+        logits = np.full((1, 3, v), -10.0, np.float32)
+        for j, t in enumerate([3, 5, 1]):
+            logits[0, j, t] = 10.0
+        _, k = Sp.accept_tokens(jnp.asarray([[0, 5]]), jnp.asarray(logits))
+        assert int(k[0]) == 0
+
+    def test_sampling_never_reemits_rejected_draft(self):
+        # one draft with tiny target mass: on rejection the residual masks it
+        v = 16
+        logits = np.zeros((1, 2, v), np.float32)
+        logits[0, :, 7] = -20.0  # p(draft) ~ 0 -> always rejected
+        drafts = jnp.asarray([[7]])
+        for s in range(20):
+            targets, k = Sp.accept_tokens(
+                drafts, jnp.asarray(logits), temperature=1.0,
+                key=jax.random.PRNGKey(s))
+            assert int(k[0]) == 0
+            assert int(targets[0, 0]) != 7
+
+    def test_sampling_accepts_sure_drafts(self):
+        v = 16
+        logits = np.full((1, 3, v), -30.0, np.float32)
+        for j, t in enumerate([2, 9, 4]):
+            logits[0, j, t] = 30.0  # delta target distribution
+        targets, k = Sp.accept_tokens(
+            jnp.asarray([[2, 9]]), jnp.asarray(logits), temperature=1.0,
+            key=jax.random.PRNGKey(0))
+        assert int(k[0]) == 2
+        np.testing.assert_array_equal(np.array(targets), [[2, 9, 4]])
+
+    def test_sampling_requires_key(self):
+        with pytest.raises(ValueError):
+            Sp.accept_tokens(jnp.zeros((1, 1), jnp.int32),
+                             jnp.zeros((1, 2, 4)), temperature=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Verify-as-chunk-append (transformer level)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kvd", ["bf16", "int8"])
+def test_verify_chunk_rows_match_decode_steps(setup, kvd):
+    """Row j of the verify chunk's logits ≡ the j'th teacher-forced decode
+    step (allclose: chunk-vs-single shapes reassociate f32 reductions), on
+    both KV-cache dtypes; greedy argmaxes agree exactly."""
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, kv_cache_dtype=kvd)
+    B, S, G = 2, 8, 4
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    last, caches = E.make_prefill_step(cfg, mode="eval")(params, {"tokens": prompts})
+    caches = E.grow_caches(caches, cfg, 32)
+    pos = jnp.full((B,), S, jnp.int32)
+    seq = [jnp.argmax(last, -1).astype(jnp.int32)]
+    dec = []
+    c2 = caches
+    for j in range(G + 1):
+        lg, c2 = T.decode_step(params, {"tokens": seq[-1][:, None]}, c2,
+                               pos + j, cfg, mode="eval", attn_impl="xla")
+        dec.append(lg)
+        seq.append(jnp.argmax(lg, -1).astype(jnp.int32))
+    chunk = jnp.stack(seq[: G + 1], axis=1)  # [B, G+1] = [t0, d1..dG]
+    ver, c3 = T.verify_chunk_step(params, {"tokens": chunk}, caches, pos, cfg,
+                                  mode="eval")
+    assert ver.shape == (B, G + 1, cfg.padded_vocab)
+    for j in range(G + 1):
+        np.testing.assert_allclose(np.array(ver[:, j]), np.array(dec[j]),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_array_equal(np.array(jnp.argmax(ver[:, j], -1)),
+                                      np.array(jnp.argmax(dec[j], -1)))
+    # the chunk's K/V landed at the same rows the decode steps wrote
+    live2 = E.live_cache_state(c2, cfg, pos + G + 1)
+    live3 = E.live_cache_state(c3, cfg, pos + G + 1)
+    for a, b in zip(jax.tree.leaves(live2), jax.tree.leaves(live3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_verify_chunk_rejects_kernel_impl(setup):
+    cfg, params = setup
+    caches = E.init_caches(cfg, 1, 32, dtype=cfg.dtype)
+    with pytest.raises(ValueError, match="chunk-aligned"):
+        T.verify_chunk_step(params, {"tokens": jnp.zeros((1, 3), jnp.int32)},
+                            caches, jnp.asarray([5]), cfg, attn_impl="kernel")
+
+
+def test_prefill_append_attention_aligned_contract():
+    from repro.models import attention as A
+
+    q = jnp.zeros((1, 2, 4, 8))
+    kv = jnp.zeros((1, 2, 4, 8))
+    cache = jnp.zeros((1, 2, 16, 8))
+    with pytest.raises(ValueError, match="aligned"):
+        A.prefill_append_attention(q, kv, kv, cache, cache, jnp.asarray([3]),
+                                   impl="kernel", aligned=False)
+    # aligned=False + auto resolves to the XLA form and runs at any offset
+    out = A.prefill_append_attention(q, kv, kv, cache, cache, jnp.asarray([3]),
+                                     impl="auto", aligned=False)
+    assert out[0].shape == (1, 2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Rollback invariant
+# ---------------------------------------------------------------------------
+
+
+def test_stale_rows_past_frontier_are_dead(setup):
+    """The rollback invariant itself, bitwise: scribbling garbage into every
+    cache row past the frontier changes nothing downstream — which is exactly
+    why rejecting drafts only needs a frontier-pointer rewind."""
+    cfg, params = setup
+    B, S = 2, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    last, caches = E.make_prefill_step(cfg, mode="eval")(params, {"tokens": prompts})
+    caches = E.grow_caches(caches, cfg, 32)
+    pos = jnp.full((B,), S, jnp.int32)
+    tok = jnp.argmax(last, -1).astype(jnp.int32)
+
+    _, axes = T.cache_specs(cfg, 1, 1)
+
+    def scribble(c, a):
+        if isinstance(c, dict):
+            return {k: scribble(c[k], a[k]) for k in c}
+        if "act_kv_seq" not in a:
+            return c
+        ax = a.index("act_kv_seq")
+        bx = a.index("act_batch")
+        junk = c + jnp.asarray(1e3, c.dtype) if c.dtype != jnp.int8 else c + 17
+        # keep rows < frontier, poison rows >= frontier
+        return (Te.mask_past_frontier(c, pos, seq_axis=ax, batch_axis=bx)
+                + (junk - Te.mask_past_frontier(junk, pos, seq_axis=ax,
+                                                batch_axis=bx)))
+
+    poisoned = scribble(caches, axes)
+    for step in range(4):
+        la, caches = T.decode_step(params, {"tokens": tok[:, None]}, caches,
+                                   pos + step, cfg, mode="eval", attn_impl="xla")
+        lb, poisoned = T.decode_step(params, {"tokens": tok[:, None]}, poisoned,
+                                     pos + step, cfg, mode="eval", attn_impl="xla")
+        np.testing.assert_array_equal(np.array(la), np.array(lb))
+        tok = jnp.argmax(la, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("kvd", ["bf16", "int8"])
+def test_rollback_state_matches_plain_decode(setup, kvd):
+    """Satellite: after serving to completion, a speculative engine's state —
+    emitted tokens, frontiers, counters, live cache rows, int8 scale leaves —
+    matches a plain engine's. Tokens/frontiers/counters exactly; cache rows
+    (and scales) to reassociation tolerance; int8 *data* rows exactly."""
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, kv_cache_dtype=kvd)
+    prompts = [jax.random.randint(jax.random.PRNGKey(9), (10,), 0, cfg.vocab_size)]
+    (rp,), ep = _run_engine(params, cfg, prompts, max_new=12, slots=1, max_len=64)
+    (rs,), es = _run_engine(params, cfg, prompts, max_new=12, slots=1,
+                            max_len=64, speculative=True)
+    assert rp.generated == rs.generated
+    np.testing.assert_array_equal(np.array(ep.pos), np.array(es.pos))
+    np.testing.assert_array_equal(np.array(ep.gen_count), np.array(es.gen_count))
+    lp = E.live_cache_state(ep.caches, cfg, ep.pos)
+    ls = E.live_cache_state(es.caches, cfg, es.pos)
+    flat_p = jax.tree_util.tree_flatten_with_path(lp)[0]
+    flat_s = jax.tree_util.tree_flatten_with_path(ls)[0]
+    for (path, a), (_, b) in zip(flat_p, flat_s):
+        if a.dtype == jnp.int8:
+            np.testing.assert_array_equal(np.array(a), np.array(b),
+                                          err_msg=jax.tree_util.keystr(path))
+        else:
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-4, atol=1e-5,
+                                       err_msg=jax.tree_util.keystr(path))
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
+@settings(max_examples=8, deadline=None)
+def test_rollback_property(setup, seed, gamma):
+    """Property flavour over seeds and γ (bf16 path): a verify tick with k
+    accepted of γ drafted leaves tokens/frontier/live-state equivalent to the
+    same number of plain decode steps."""
+    cfg, params = setup
+    rng = np.random.default_rng(seed)
+    plen = int(rng.integers(4, 30))
+    prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size, size=(plen,)))]
+    (rp,), ep = _run_engine(params, cfg, prompts, max_new=9, slots=1, max_len=64)
+    (rs,), es = _run_engine(params, cfg, prompts, max_new=9, slots=1,
+                            max_len=64, speculative=True, gamma=gamma)
+    assert rp.generated == rs.generated
+    np.testing.assert_array_equal(np.array(ep.pos), np.array(es.pos))
+    lp = E.live_cache_state(ep.caches, cfg, ep.pos)
+    ls = E.live_cache_state(es.caches, cfg, es.pos)
+    for a, b in zip(jax.tree.leaves(lp), jax.tree.leaves(ls)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level greedy bit-identity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gamma", [2, 4, 8])
+def test_engine_speculative_greedy_bit_identical(setup, gamma):
+    """Chunked serving with ragged prompts (incl. a multi-chunk prompt, so
+    mixed verify+prefill ticks run): speculative γ ∈ {2,4,8} emits exactly
+    the plain engine's greedy streams."""
+    cfg, params = setup
+    lens = [8, 100, 24, 40]
+    prompts = [jax.random.randint(jax.random.PRNGKey(i + 10), (l,), 0,
+                                  cfg.vocab_size) for i, l in enumerate(lens)]
+    plain, _ = _run_engine(params, cfg, prompts)
+    spec, eng = _run_engine(params, cfg, prompts, speculative=True, gamma=gamma)
+    assert eng.speculative
+    for rp, rs in zip(plain, spec):
+        assert rp.generated == rs.generated, (gamma, rp.rid)
+        assert 0 <= rs.spec_accepted <= rs.spec_drafted
+
+
+@pytest.mark.parametrize("kvd", ["bf16", "int8"])
+def test_engine_speculative_bit_identical_kv_dtypes(setup, kvd):
+    """Both KV-cache dtypes, with EOS landing mid-acceptance and an odd
+    generation budget truncating the accepted window."""
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, kv_cache_dtype=kvd)
+    lens = [8, 100, 24]
+    prompts = [jax.random.randint(jax.random.PRNGKey(i + 10), (l,), 0,
+                                  cfg.vocab_size) for i, l in enumerate(lens)]
+    plain, _ = _run_engine(params, cfg, prompts)
+    spec, _ = _run_engine(params, cfg, prompts, speculative=True)
+    for rp, rs in zip(plain, spec):
+        assert rp.generated == rs.generated
+    # EOS chosen from mid-stream of the plain output: retirement must land on
+    # the same token even when the EOS arrives inside an accepted window
+    eos = plain[1].generated[5]
+    p2, _ = _run_engine(params, cfg, prompts, eos_id=eos)
+    s2, _ = _run_engine(params, cfg, prompts, eos_id=eos, speculative=True)
+    for rp, rs in zip(p2, s2):
+        assert rp.generated == rs.generated
+    # odd max_new: the budget cuts an accepted window short
+    p3, _ = _run_engine(params, cfg, prompts, max_new=7)
+    s3, _ = _run_engine(params, cfg, prompts, max_new=7, speculative=True)
+    for rp, rs in zip(p3, s3):
+        assert rp.generated == rs.generated
+
+
+def test_engine_speculative_packed_fused(setup):
+    """The verify path through the packed int8-resident NQD pipeline."""
+    cfg, params_f = setup
+    specs = T.param_specs(cfg)
+    packed = T.pack_tree(params_f, specs)
+    prompts = [jax.random.randint(jax.random.PRNGKey(i + 3), (12,), 0,
+                                  cfg.vocab_size) for i in range(2)]
+    plain, _ = _run_engine(packed, cfg, prompts, mode="packed", max_new=8,
+                           slots=2, max_len=64)
+    spec, _ = _run_engine(packed, cfg, prompts, mode="packed", max_new=8,
+                          slots=2, max_len=64, speculative=True)
+    for rp, rs in zip(plain, spec):
+        assert rp.generated == rs.generated
+
+
+def test_speculative_acceptance_high_on_repetitive_stream(setup):
+    """A prompt that is one phrase tiled: the model's greedy continuation
+    locks into a loop and prompt-lookup drafting should accept well above
+    the random-vocab floor."""
+    cfg, params = setup
+    phrase = jax.random.randint(jax.random.PRNGKey(4), (6,), 0, cfg.vocab_size)
+    prompts = [jnp.tile(phrase, 5)]
+    spec, eng = _run_engine(params, cfg, prompts, max_new=24, slots=1,
+                            max_len=96, speculative=True)
+    assert eng.spec_acceptance_rate > 0.2
+
+
+def test_speculative_falls_back_for_recurrent_family():
+    """rwkv has no frontier pointer to rewind — the engine silently stays on
+    plain decode (DESIGN.md §speculative) and still serves correctly."""
+    cfg = dataclasses.replace(get_config("rwkv6-3b", smoke=True),
+                              dtype=jnp.float32)
+    params = P.init_params(T.param_specs(cfg), jax.random.PRNGKey(0))
+    prompts = [jax.random.randint(jax.random.PRNGKey(1), (8,), 0, cfg.vocab_size)]
+    reqs, eng = _run_engine(params, cfg, prompts, max_new=4, slots=1,
+                            max_len=32, speculative=True)
+    assert not eng.speculative
+    assert len(reqs[0].generated) == 4
+    assert reqs[0].spec_drafted == 0
+
+
+def test_spec_gamma_validation(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="spec_gamma"):
+        E.ServingEngine(params, cfg, slots=1, max_len=32, mode="eval",
+                        speculative=True, spec_gamma=0)
+
+
+def test_one_device_get_per_spec_tick(setup):
+    """The one-host-transfer-per-tick contract survives speculation: the
+    packed array just grows to [γ+4, slots] (emission rows + emit count +
+    chargeable-draft count + done)."""
+    cfg, params = setup
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=160, mode="eval",
+                          speculative=True, spec_gamma=4)
+    for i in range(3):
+        eng.submit(E.Request(rid=i, prompt=jax.random.randint(
+            jax.random.PRNGKey(i), (100,), 0, cfg.vocab_size), max_new=6))
+    calls = []
+    orig = jax.device_get
+    jax.device_get = lambda x: (calls.append(1), orig(x))[1]
+    try:
+        ticks = 0
+        while eng.queue or any(r is not None for r in eng.live):
+            eng.step()
+            ticks += 1
+    finally:
+        jax.device_get = orig
+    assert ticks > 0 and len(calls) == ticks
+
+
+def test_spec_compiled_shapes_bounded(setup):
+    """One spec jit per (chunk|None, γ), plus plain fused-prefill jits for
+    pure-prefill ticks (no decoding slot → nothing to verify): ragged
+    prompts across the whole chunk grid stay bounded at 2·len(sizes)+1."""
+    cfg, params = setup
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=768, mode="eval",
+                          speculative=True, spec_gamma=4)
+    for i, s in enumerate((8, 70, 150, 300, 40, 600)):
+        eng.submit(E.Request(
+            rid=i, prompt=jax.random.randint(jax.random.PRNGKey(s), (s,),
+                                             0, cfg.vocab_size),
+            max_new=4))
+    eng.run()
+    assert all(r is None for r in eng.live)
+    assert set(eng._spec) <= set(cfg.prefill_chunk_sizes) | {None}
+    assert len(eng._spec) <= len(cfg.prefill_chunk_sizes) + 1
+    assert set(eng._fused) <= set(cfg.prefill_chunk_sizes)
