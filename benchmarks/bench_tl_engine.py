@@ -1,0 +1,202 @@
+"""Table-lookup engine vs packed engine: measured dispatch evidence.
+
+The TL engine PR's acceptance bars (DESIGN.md §table-lookup):
+
+1. **Per-shape engine timings** — decode-GEMV (M=1, 8) and prefill-chunk
+   (M=64, 128) matmul shapes, each timed through the *production* dispatch
+   (``bitlinear.apply`` with ``use_kernel`` pinned to ``"packed"`` / ``"tl"``,
+   so each side runs exactly what serving would run on this backend: Pallas
+   kernels on TPU, the bit-identical XLA forms elsewhere). Winners are
+   persisted via ``autotune.record_engine`` — the same table
+   ``use_kernel="auto"`` consults.
+2. **Dispatcher agreement** — after recording, ``resolve_engine(..., "auto")``
+   must return the measured winner at every benchmarked shape.
+3. **Bit-identity** — both engines' outputs compared bitwise at every shape
+   (matmul and fused SwiGLU), plus the end-to-end bar: greedy serving with
+   ``cfg.matmul_engine="tl"`` emits tokens and prefill logits identical to
+   ``"packed"``.
+
+Emits ``BENCH_tl_engine.json`` (CI uploads it) plus ``name,value,notes``
+rows. The engine table is written to a run-local cache file
+(``BENCH_tl_engine_cache.json``) so the artifact pair is self-contained;
+point ``REPRO_AUTOTUNE_CACHE`` at the per-device cache to persist winners
+for production serving instead.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import bitlinear as BL
+from repro.core import params as P
+from repro.kernels import autotune as AT
+from repro.models import transformer as Tr
+from repro.serving import engine as E
+
+BF16 = jnp.bfloat16
+
+# (label, m, n, k): decode GEMV rows + prefill-chunk rows
+SMOKE_SHAPES = [
+    ("decode_m1", 1, 256, 256),
+    ("decode_m8", 8, 256, 256),
+    ("prefill_m64", 64, 256, 256),
+    ("prefill_m128", 128, 256, 256),
+]
+FULL_SHAPES = SMOKE_SHAPES + [
+    ("decode_m1_d512", 1, 512, 512),
+    ("prefill_m128_d512", 128, 512, 512),
+]
+
+
+def _quant_input(m: int, n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    x_i8 = jnp.asarray(rng.integers(-127, 128, (m, n)), jnp.int8)
+    xs = jnp.asarray(rng.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    return x_i8, xs
+
+
+def _bench_shape(label, m, n, k, *, reps, rows, data):
+    w = jax.random.normal(jax.random.PRNGKey(hash(label) % 2**31), (n, k))
+    pp = BL.with_tl_indices(BL.pack_params(w))
+    x_i8, xs = _quant_input(m, n, seed=m + n + k)
+
+    def run_engine(engine):
+        fn = jax.jit(lambda p, a, s: BL.apply(
+            p, (a, s), mode="packed", use_kernel=engine, out_dtype=BF16))
+        out = jax.block_until_ready(fn(pp, x_i8, xs))  # warm/compile
+        us = AT.measure(lambda: fn(pp, x_i8, xs), reps=reps)
+        return us, out
+
+    packed_us, packed_out = run_engine("packed")
+    tl_us, tl_out = run_engine("tl")
+    identical = bool((jnp.asarray(packed_out) == jnp.asarray(tl_out)).all())
+
+    winner = AT.record_engine(m, n, k, {"packed": packed_us, "tl": tl_us})
+    resolved = BL.resolve_engine(pp, m, use_kernel="auto")
+    auto_matches = resolved == winner
+    rows.append(f"tl_engine_{label}_packed_us,{packed_us:.0f},"
+                f"M={m} N={n} K={k}")
+    rows.append(f"tl_engine_{label}_tl_us,{tl_us:.0f},winner={winner} "
+                f"auto->{resolved}")
+    data["shapes"][label] = {
+        "m": m, "n": n, "k": k,
+        "packed_us": round(packed_us, 1), "tl_us": round(tl_us, 1),
+        "winner": winner, "auto_resolves_to": resolved,
+        "auto_matches_winner": auto_matches, "bit_identical": identical,
+    }
+    return auto_matches, identical
+
+
+def _bench_swiglu(*, reps, rows, data):
+    m, n, k = 8, 256, 512
+    wg = jax.random.normal(jax.random.PRNGKey(7), (n, k))
+    wu = jax.random.normal(jax.random.PRNGKey(8), (n, k))
+    gp = BL.with_tl_indices(BL.pack_params(wg))
+    up = BL.with_tl_indices(BL.pack_params(wu))
+    x_i8, xs = _quant_input(m, n, seed=9)
+
+    def run_engine(engine):
+        fn = jax.jit(lambda g, u, a, s: BL.swiglu(g, u, (a, s),
+                                                  use_kernel=engine))
+        out = jax.block_until_ready(fn(gp, up, x_i8, xs))
+        us = AT.measure(lambda: fn(gp, up, x_i8, xs), reps=reps)
+        return us, out
+
+    p_us, (pi8, ps) = run_engine("packed")
+    t_us, (ti8, ts) = run_engine("tl")
+    identical = bool((jnp.asarray(pi8) == jnp.asarray(ti8)).all()
+                     and (jnp.asarray(ps) == jnp.asarray(ts)).all())
+    rows.append(f"tl_engine_swiglu_packed_us,{p_us:.0f},M={m} N={n} ff={k}")
+    rows.append(f"tl_engine_swiglu_tl_us,{t_us:.0f},"
+                f"bit_identical={identical}")
+    data["swiglu"] = {"m": m, "n": n, "k": k,
+                      "packed_us": round(p_us, 1), "tl_us": round(t_us, 1),
+                      "bit_identical": identical}
+    return identical
+
+
+def _bench_serving(*, smoke, rows, data):
+    """End-to-end greedy bar: matmul_engine='tl' ≡ 'packed', plus tokens/s."""
+    cfg = get_config("tellme-0.7b", smoke=True)
+    params = P.init_params(Tr.param_specs(cfg), jax.random.PRNGKey(0))
+    packed = Tr.pack_tree(params, Tr.param_specs(cfg))
+    steps = 8 if smoke else 32
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                 cfg.vocab_size)
+    results, tps = {}, {}
+    for engine in ("packed", "tl"):
+        ecfg = dataclasses.replace(cfg, matmul_engine=engine)
+        res = E.generate(packed, ecfg, prompts, steps=steps, mode="packed",
+                         fused=True)
+        jax.block_until_ready(res.tokens)  # warm
+        t0 = time.perf_counter()
+        res = E.generate(packed, ecfg, prompts, steps=steps, mode="packed",
+                         fused=True)
+        jax.block_until_ready(res.tokens)
+        tps[engine] = prompts.shape[0] * steps / (time.perf_counter() - t0)
+        results[engine] = res
+    identical = bool(
+        (jnp.asarray(results["tl"].tokens)
+         == jnp.asarray(results["packed"].tokens)).all()
+        and (jnp.asarray(results["tl"].prefill_logits)
+             == jnp.asarray(results["packed"].prefill_logits)).all())
+    rows.append(f"tl_engine_serving_bit_identical,{identical},"
+                f"greedy tokens + prefill logits, engine tl vs packed")
+    rows.append(f"tl_engine_decode_tok_s_packed,{tps['packed']:.1f},warm")
+    rows.append(f"tl_engine_decode_tok_s_tl,{tps['tl']:.1f},warm")
+    data["serving"] = {
+        "bit_identical": identical, "steps": steps,
+        "tokens_per_s": {e: round(v, 1) for e, v in tps.items()},
+    }
+    return identical
+
+
+def run(*, smoke: bool = True) -> list[str]:
+    AT.set_cache_path("BENCH_tl_engine_cache.json")
+    rows: list[str] = []
+    data: dict = {"bench": "tl_engine", "smoke": smoke,
+                  "device": AT.device_key(), "shapes": {}}
+    reps = 5 if smoke else 20
+
+    all_auto, all_ident = True, True
+    for label, m, n, k in (SMOKE_SHAPES if smoke else FULL_SHAPES):
+        auto_ok, ident = _bench_shape(label, m, n, k, reps=reps, rows=rows,
+                                      data=data)
+        all_auto &= auto_ok
+        all_ident &= ident
+    all_ident &= _bench_swiglu(reps=reps, rows=rows, data=data)
+    serving_ok = _bench_serving(smoke=smoke, rows=rows, data=data)
+
+    data["auto_matches_winner_all"] = all_auto
+    data["bit_identical_all"] = bool(all_ident and serving_ok)
+    rows.append(f"tl_engine_auto_matches_winner,{all_auto},"
+                f"dispatcher agrees with measurement at every shape")
+    with open("BENCH_tl_engine.json", "w") as f:
+        json.dump(data, f, indent=2)
+    rows.append("tl_engine_json,BENCH_tl_engine.json,trajectory artifact")
+    if not (all_auto and data["bit_identical_all"]):
+        raise SystemExit("tl_engine acceptance failed: "
+                         f"auto={all_auto} identical={data['bit_identical_all']}")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: fewer shapes/reps, short decode scan")
+    args = ap.parse_args(argv)
+    for r in run(smoke=args.smoke):
+        print(r)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,6 +21,7 @@ def main() -> int:
         ("kv_cache", "benchmarks.bench_kv_cache"),
         ("speculative_decode", "benchmarks.bench_speculative"),
         ("tableV_compression", "benchmarks.bench_compression"),
+        ("tl_engine", "benchmarks.bench_tl_engine"),
     ]
     failures = 0
     print("name,value,notes")

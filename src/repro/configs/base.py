@@ -64,6 +64,12 @@ class ModelConfig:
     # paper's QDQ unit applied to the cache stream, halving attention-phase
     # HBM bytes. "bf16" (default) keeps every pre-existing path bit-identical.
     kv_cache_dtype: str = "bf16"  # bf16 | int8
+    # Ternary matmul engine (DESIGN.md §table-lookup). "packed" pins the
+    # 2-bit-planar Pallas kernels; "tl" forces the table-lookup engine
+    # (paper's Algorithm 1: grouped activation tables + index gather);
+    # "auto" resolves per matmul shape from the autotuner's measured
+    # TL-vs-packed timings, falling back to packed when never benchmarked.
+    matmul_engine: str = "auto"  # packed | tl | auto
     # --- serving: chunked prefill / continuous batching --------------------------
     # Prompts are split into chunks drawn from this grid (each size must divide
     # every larger one), so the engine compiles exactly len(sizes) prefill

@@ -34,10 +34,10 @@ from typing import Any
 import jax.numpy as jnp
 
 from . import ternary
-from .packing import encode_groups, pack2, unpack2
+from .packing import pack2, unpack2
 from .params import ParamSpec
-
-TL_GROUP = 3  # trits per table index on the "tl" path (paper: 27-entry tables)
+from .tl_matmul import GROUP as TL_GROUP  # paper: 27-entry tables
+from .tl_matmul import tl_indices as _tl_indices_impl
 
 
 def spec(n_in: int, n_out: int, axes: tuple, *, dtype=jnp.float32, scale=None) -> dict:
@@ -83,45 +83,91 @@ def pack_params(w) -> dict:
 def with_tl_indices(params: dict, *, g: int = TL_GROUP) -> dict:
     """Precompute the table-lookup group indices for a packed param node.
 
-    Returns the node extended with ``w_idx [⌈N/g⌉, K] int32`` (the paper's
-    Offline_preprocess), so ``apply(use_kernel="tl")`` skips the per-call
-    unpack→encode. The contraction axis is zero-padded to a ``g`` multiple
-    (zero trits contribute nothing to any table sum).
+    Returns the node extended with ``w_idx [..., ⌈N/g⌉, K] int32`` (the
+    paper's Offline_preprocess, ``core.tl_matmul.tl_indices`` — the single
+    definition of the group packing and its zero-trit padding), so the TL
+    path skips the per-call unpack→encode. Stacked (scanned-layer) weights
+    get a leading-stacked index tensor, sliced per layer inside the scan.
     """
     return dict(params, w_idx=_tl_indices(params["wp"], g))
 
 
 def _tl_indices(wp, g: int):
-    w_t = unpack2(wp)
-    pad = (-w_t.shape[0]) % g
-    if pad:
-        w_t = jnp.pad(w_t, ((0, pad), (0, 0)))
-    return encode_groups(w_t, g)
+    return _tl_indices_impl(wp, g=g)
+
+
+def with_tl_tree(params, *, g: int = TL_GROUP):
+    """Add ``w_idx`` to every packed BitLinear node in a whole param tree.
+
+    The serving-side Offline_preprocess: run once after ``pack_tree`` so the
+    TL engine (``matmul_engine="tl"`` or a measured ``"auto"`` resolution)
+    never unpacks/encodes weights inside a jitted step. Idempotent; nodes
+    without packed weights pass through untouched.
+    """
+    def rec(node):
+        if isinstance(node, dict):
+            if "wp" in node and "scale" in node:
+                return node if "w_idx" in node else with_tl_indices(node, g=g)
+            return {k: rec(v) for k, v in node.items()}
+        return node
+
+    return rec(params)
 
 
 def _quantized_input(x, fused: bool):
-    """Accept float x (quantize here) or a pre-quantized (x_i8, scale) pair."""
+    """Accept float x (quantize here), a pre-quantized ``(x_i8, scale)``
+    pair, or the tables-carrying triple ``(x_i8, scale, tables)`` from the
+    fused prologue. Returns ``(x_i8, x_scale, tables-or-None)``."""
     if isinstance(x, tuple):
         if not fused:
             raise ValueError("pre-quantized input requires fused=True")
-        return x
-    return ternary.quantize_act(x)
+        return x if len(x) == 3 else (*x, None)
+    return (*ternary.quantize_act(x), None)
+
+
+def resolve_engine(params: dict, m: int, *, use_kernel: bool | str = "auto") -> str:
+    """Static (trace-time) TL-vs-packed choice for one projection call.
+
+    ``"tl"`` forces the table-lookup engine. ``"auto"`` consults the
+    autotuner's measured per-shape engine table (``kernels.autotune``) —
+    but only for nodes whose ``w_idx`` was precomputed (``with_tl_tree``):
+    deriving indices inside a jitted serving step would unpack the weights
+    per call. Everything else (including ``"packed"``, the pinned packed
+    path) resolves to ``"packed"``. The two engines are bit-identical, so
+    this is purely a performance dispatch.
+    """
+    if use_kernel == "tl":
+        return "tl"
+    if use_kernel == "auto" and "w_idx" in params and params["wp"].ndim == 2:
+        from ..kernels import autotune
+
+        n4, k = params["wp"].shape
+        if autotune.choose_engine(m, n4 * 4, k) == "tl":
+            return "tl"
+    return "packed"
 
 
 def apply(params: dict, x, *, mode: str = "train", use_kernel: bool | str = "auto",
           out_dtype: Any = None, fused: bool | None = None, residual=None):
     """Apply BitLinear. ``x`` is [..., n_in]; returns [..., n_out].
 
-    ``use_kernel="auto"`` routes the packed path through the Pallas kernels on
-    TPU (decode-shaped calls — a few rows per step — take the small-M
-    ``ternary_gemv`` weight-streaming path; prefill tiles take the blocked
-    ``ternary_matmul``) and through the bit-identical XLA form elsewhere.
-    ``use_kernel="tl"`` takes the table-lookup GEMV (2-D weights only).
+    ``use_kernel`` selects the matmul engine (all choices bit-identical):
+      * ``"auto"``   — measured dispatch: nodes with precomputed ``w_idx``
+        consult the autotuner's per-shape TL-vs-packed table
+        (``kernels.autotune.choose_engine``); unmeasured shapes and plain
+        nodes fall back to the packed path (Pallas kernels on TPU, the
+        bit-identical XLA form elsewhere);
+      * ``"packed"`` — pin the packed path (the pre-dispatcher ``"auto"``);
+      * ``"tl"``     — force the table-lookup engine (2-D weights only;
+        indices derived on the fly when not precomputed);
+      * ``True``/``False`` — force the packed Pallas kernel / XLA form.
     Stacked weights (MoE experts fed as [E, N/4, K]) always use the XLA form.
 
     ``fused`` (default: on for ``mode="packed"``, off — and rejected — for
-    train/eval) admits pre-quantized ``(x_i8, x_scale)`` input and a
-    ``residual`` folded into the matmul epilogue.
+    train/eval) admits pre-quantized ``(x_i8, x_scale)`` input — or the
+    fused prologue's ``(x_i8, x_scale, tables)`` triple, whose precomputed
+    TL tables the TL engine consumes directly — and a ``residual`` folded
+    into the matmul epilogue.
     """
     if fused is None:
         fused = mode == "packed"
@@ -145,11 +191,15 @@ def apply(params: dict, x, *, mode: str = "train", use_kernel: bool | str = "aut
         x_i8, x_scale = ternary.quantize_act(x)
         return ternary.ternary_matmul_ref(x_i8, x_scale, w_t, w_scale, out_dtype=out_dtype)
     if mode == "packed":
-        x_i8, x_scale = _quantized_input(x, fused)
-        if use_kernel == "tl":
-            return _apply_tl(params, x_i8, x_scale, out_dtype=out_dtype,
-                             residual=residual)
-        if use_kernel == "auto":
+        x_i8, x_scale, tables = _quantized_input(x, fused)
+        if use_kernel in ("auto", "tl", "packed"):
+            rows = 1
+            for d in x_i8.shape[:-1]:
+                rows *= d
+            if resolve_engine(params, rows, use_kernel=use_kernel) == "tl":
+                return _apply_tl(params, x_i8, x_scale, out_dtype=out_dtype,
+                                 residual=residual, tables=tables)
+        if use_kernel in ("auto", "packed"):
             import jax
 
             use_kernel = jax.default_backend() == "tpu" and params["wp"].ndim == 2
@@ -179,12 +229,15 @@ def apply(params: dict, x, *, mode: str = "train", use_kernel: bool | str = "aut
     raise ValueError(f"unknown mode {mode!r}")
 
 
-def _apply_tl(params, x_i8, x_scale, *, out_dtype, residual=None):
-    """Table-lookup GEMV path (paper Algorithm 1, ``kernels.tl_gemv``).
+def _apply_tl(params, x_i8, x_scale, *, out_dtype, residual=None, tables=None):
+    """Table-lookup engine path (paper Algorithm 1, ``kernels.tl_gemv``).
 
     Group indices come from ``params["w_idx"]`` when precomputed (see
-    :func:`with_tl_indices`), else are derived from the packed weights on
-    the fly — selectable end-to-end either way; precompute for speed.
+    :func:`with_tl_indices` / :func:`with_tl_tree`), else are derived from
+    the packed weights on the fly — selectable end-to-end either way;
+    precompute for speed. ``tables`` (the fused prologue's online
+    precompute) skips the in-kernel table build; the ``residual`` rides the
+    TL kernel's dequant epilogue, parity with the packed kernels.
     """
     from ..kernels.tl_gemv import ops as tl_ops
 
@@ -193,27 +246,34 @@ def _apply_tl(params, x_i8, x_scale, *, out_dtype, residual=None):
     w_idx = params.get("w_idx")
     if w_idx is None:
         w_idx = _tl_indices(params["wp"], TL_GROUP)
-    npad = w_idx.shape[0] * TL_GROUP - x_i8.shape[-1]
-    if npad:
-        pads = [(0, 0)] * (x_i8.ndim - 1) + [(0, npad)]
-        x_i8 = jnp.pad(x_i8, pads)
-    out = tl_ops.tl_gemv(x_i8, x_scale, w_idx, params["scale"], g=TL_GROUP,
-                         out_dtype=out_dtype)
-    return out if residual is None else out + residual
+    if tables is not None and tables.shape[-1] != w_idx.shape[0] * 3**TL_GROUP:
+        tables = None  # prologue tables are for a different contraction dim
+    return tl_ops.tl_matmul(x_i8, x_scale, w_idx, params["scale"],
+                            g=TL_GROUP, tables=tables, residual=residual,
+                            out_dtype=out_dtype)
 
 
 def swiglu(gate_params: dict, up_params: dict, xq: tuple, *,
            use_kernel: bool | str = "auto", act_dtype=jnp.bfloat16) -> tuple:
-    """Fused packed SwiGLU: (x_i8, x_scale) -> (h_i8, h_scale).
+    """Fused packed SwiGLU: (x_i8, x_scale[, tables]) -> (h_i8, h_scale).
 
     Gate and up matmuls plus the dequant→SiLU→(×up)→requant epilogue run in
-    one kernel (``ternary_swiglu``) so the MLP's hidden activation never
-    materializes in float; the XLA fallback is the bit-identical op
-    sequence. Both sides of the dispatch share the contract: int8 in,
-    int8 + per-token scale out.
+    one kernel (``ternary_swiglu``, or its TL twin ``tl_swiglu`` when the
+    engine dispatch resolves to table-lookup) so the MLP's hidden activation
+    never materializes in float; the XLA fallback is the bit-identical op
+    sequence. Every side of the dispatch shares the contract: int8 in,
+    int8 + per-token scale out. A tables-carrying triple (the fused
+    prologue's online precompute) feeds the TL kernel's lookup directly.
     """
-    x_i8, x_scale = xq
-    if use_kernel == "auto":
+    x_i8, x_scale, tables = xq if len(xq) == 3 else (*xq, None)
+    if use_kernel in ("auto", "tl", "packed"):
+        rows = 1
+        for d in x_i8.shape[:-1]:
+            rows *= d
+        if resolve_engine(gate_params, rows, use_kernel=use_kernel) == "tl":
+            return _swiglu_tl(gate_params, up_params, x_i8, x_scale,
+                              tables=tables, act_dtype=act_dtype)
+    if use_kernel in ("auto", "packed"):
         import jax
 
         use_kernel = (jax.default_backend() == "tpu"
@@ -234,6 +294,27 @@ def swiglu(gate_params: dict, up_params: dict, xq: tuple, *,
         x_i8, x_scale, unpack2(up_params["wp"]), up_params["scale"],
         out_dtype=act_dtype)
     return ternary.quantize_act(jax.nn.silu(g) * u)
+
+
+def _swiglu_tl(gate_params, up_params, x_i8, x_scale, *, tables, act_dtype):
+    """TL-engine SwiGLU (``tl_swiglu_kernel``): bit-identical to the packed
+    forms, with the gate/up lookups sharing one table set — precomputed by
+    the prologue when available, built in-kernel otherwise."""
+    from ..kernels.tl_gemv import ops as tl_ops
+
+    if gate_params["wp"].ndim != 2:
+        raise ValueError("use_kernel='tl' supports 2-D weights only")
+    wg_idx = gate_params.get("w_idx")
+    if wg_idx is None:
+        wg_idx = _tl_indices(gate_params["wp"], TL_GROUP)
+    wu_idx = up_params.get("w_idx")
+    if wu_idx is None:
+        wu_idx = _tl_indices(up_params["wp"], TL_GROUP)
+    if tables is not None and tables.shape[-1] != wg_idx.shape[0] * 3**TL_GROUP:
+        tables = None
+    return tl_ops.tl_swiglu(
+        x_i8, x_scale, wg_idx, gate_params["scale"], wu_idx,
+        up_params["scale"], g=TL_GROUP, tables=tables, act_dtype=act_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,8 @@ a Pallas kernel can tile K freely and unpack only its own N-block.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -121,6 +123,26 @@ def decode_groups(idx: jax.Array, g: int, *, dtype=jnp.int8) -> jax.Array:
     return stacked.reshape((idx.shape[0] * g,) + idx.shape[1:]).astype(dtype)
 
 
+@functools.lru_cache(maxsize=None)
+def combo_matrix_np(g: int):
+    """Numpy twin of :func:`combo_matrix` (f32), cached.
+
+    Kernels close over this as a host constant: a cached *jnp* array created
+    under a jit trace would leak a tracer, while numpy constants are safe at
+    any trace depth — this is the one definition both the jnp helper and the
+    Pallas kernels share.
+    """
+    import numpy as np
+
+    cols = np.arange(3**g)
+    digits = []
+    rem = cols
+    for _ in range(g):
+        digits.append((rem % 3) - 1)
+        rem = rem // 3
+    return np.stack(digits, axis=0).astype(np.float32)  # [g, 3^g]
+
+
 def combo_matrix(g: int, dtype=jnp.float32) -> jax.Array:
     """COMBOS[g, 3^g]: column ``c`` holds the trit-vector decoded from ``c``.
 
@@ -128,10 +150,4 @@ def combo_matrix(g: int, dtype=jnp.float32) -> jax.Array:
     an activation group a[g] is the matvec ``a @ COMBOS`` — i.e. on TPU the
     table build *is* an MXU matmul (DESIGN.md §2, C1 row).
     """
-    cols = jnp.arange(3**g, dtype=jnp.int32)
-    digits = []
-    rem = cols
-    for _ in range(g):
-        digits.append((rem % 3) - 1)
-        rem = rem // 3
-    return jnp.stack(digits, axis=0).astype(dtype)  # [g, 3^g]
+    return jnp.asarray(combo_matrix_np(g)).astype(dtype)

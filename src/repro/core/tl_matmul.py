@@ -30,7 +30,51 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .packing import combo_matrix, encode_groups
+from .packing import combo_matrix, encode_groups, unpack2
+
+GROUP = 3  # trits per table index (paper: G=3 -> 27-entry tables)
+
+
+def tl_indices(wp: jax.Array, *, g: int = GROUP) -> jax.Array:
+    """Offline_preprocess for a *packed* weight: wp [..., N/4, K] uint8 ->
+    group indices [..., ⌈N/g⌉, K] int32.
+
+    The one definition of the TL weight layout (``kernels/tl_gemv`` and
+    ``core.bitlinear`` both import it): unpack the planar 2-bit format, pad
+    the contraction axis up to a ``g`` multiple with *zero trits* (a zero
+    trit contributes nothing to any table sum, so padded groups are inert),
+    then base-3 encode every ``g`` consecutive trits. Leading stack axes
+    (scanned layers, experts) map straight through.
+    """
+    if wp.ndim > 2:
+        flat = wp.reshape((-1,) + wp.shape[-2:])
+        idx = jax.vmap(lambda p: tl_indices(p, g=g))(flat)
+        return idx.reshape(wp.shape[:-2] + idx.shape[-2:])
+    w_t = unpack2(wp)
+    pad = (-w_t.shape[0]) % g
+    if pad:
+        w_t = jnp.pad(w_t, ((0, pad), (0, 0)))
+    return encode_groups(w_t, g)
+
+
+def build_tables(x_i8: jax.Array, *, t: int, g: int = GROUP) -> jax.Array:
+    """Online precompute oracle: x_i8 [..., N] int8 -> tables [..., T·3^g] f32.
+
+    ``TL_TABLE[m, t, c] = a[m, t·g:(t+1)·g] @ COMBOS[:, c]`` flattened over
+    (t, c) — the layout the TL kernels consume and the fused norm-quant
+    prologue emits. ``t`` must be ⌈N/g⌉ (the row is zero-padded to t·g, the
+    twin of :func:`tl_indices`'s weight-side padding). All values are exact
+    small integers, so the f32 entries are exact and any consumer computing
+    on them in f32 stays bit-identical to integer arithmetic.
+    """
+    n = x_i8.shape[-1]
+    pad = t * g - n
+    if pad:
+        x_i8 = jnp.pad(x_i8, [(0, 0)] * (x_i8.ndim - 1) + [(0, pad)])
+    groups = x_i8.reshape(x_i8.shape[:-1] + (t, g)).astype(jnp.float32)
+    combos = combo_matrix(g, dtype=jnp.float32)
+    tables = jnp.einsum("...tg,gc->...tc", groups, combos)
+    return tables.reshape(x_i8.shape[:-1] + (t * 3**g,))
 
 
 @partial(jax.jit, static_argnames=("g",))

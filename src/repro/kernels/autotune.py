@@ -1,0 +1,346 @@
+"""Benchmark-driven block-size autotuner for the Pallas kernel packages.
+
+Every ops wrapper in this tree hardcodes a blocking heuristic (``bm``/``bk``
+for the matmul family, ``bkv`` for the attention family). Those heuristics
+were picked analytically, not measured; this module replaces them with a
+persisted measurement:
+
+* ``tune(kernel, shape)`` times every candidate block configuration for one
+  kernel at one exact shape and records the winner;
+* the winners live in a per-device JSON cache (one file per
+  ``(backend, device_kind)``, default ``~/.cache/repro/``, overridable with
+  ``REPRO_AUTOTUNE_CACHE``) and are loaded into memory once per process —
+  ops wrappers call :func:`best` at *trace* time, so lookups must be pure
+  host-side dict reads;
+* ``choose_engine(m, n, k)``/``record_engine`` back the measured TL-vs-packed
+  dispatcher: ``bitlinear.apply(use_kernel="auto")`` resolves the engine per
+  (M, N, K) matmul shape from recorded timings instead of a hard-coded
+  heuristic (DESIGN.md §table-lookup). With no recorded entry every consumer
+  falls back to its previous hard-coded default, so an absent cache file is
+  exactly the pre-autotuner behavior.
+
+Cache file format (versioned, one flat object per kernel):
+
+    {"version": 1,
+     "device": "cpu:cpu",
+     "kernels": {
+       "ternary_matmul": {"m128-n4096-k4096": {"knobs": {"bm":128,"bk":256},
+                                                "us": 412.3}},
+       "engine": {"m1-n4096-k4096": {"knobs": {"engine": "tl"},
+                                      "us": 80.1,
+                                      "losers": {"packed": 95.0}}}}}
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+_VERSION = 1
+
+# In-memory store: {kernel: {shape_key: entry}}. Loaded lazily from the cache
+# file; ops wrappers read it at trace time (host-side only, never traced).
+_CACHE: dict[str, dict[str, dict]] | None = None
+_CACHE_PATH: Path | None = None
+
+
+def device_key() -> str:
+    """Stable per-device identity the cache is keyed by (backend + kind)."""
+    import jax
+
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:  # noqa: BLE001 - no devices (e.g. docs build)
+        kind = "unknown"
+    return f"{jax.default_backend()}:{kind}".replace(" ", "_")
+
+
+def cache_path() -> Path:
+    """Resolve the cache file: env override, else per-device file under
+    ``~/.cache/repro``."""
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return Path(env)
+    base = Path(os.environ.get("XDG_CACHE_HOME", Path.home() / ".cache"))
+    return base / "repro" / f"autotune-{device_key()}.json"
+
+
+def set_cache_path(path: str | os.PathLike | None) -> None:
+    """Point the in-process store at ``path`` (None -> default resolution)
+    and reload. Tests and benchmarks use this for hermetic cache files."""
+    global _CACHE, _CACHE_PATH
+    _CACHE = None
+    _CACHE_PATH = Path(path) if path is not None else None
+
+
+def _store() -> dict[str, dict[str, dict]]:
+    global _CACHE
+    if _CACHE is None:
+        path = _CACHE_PATH or cache_path()
+        _CACHE = {}
+        try:
+            raw = json.loads(path.read_text())
+            if raw.get("version") == _VERSION:
+                _CACHE = raw.get("kernels", {})
+        except (OSError, ValueError):
+            pass  # absent/corrupt cache == no tuned entries
+    return _CACHE
+
+
+def _save() -> None:
+    path = _CACHE_PATH or cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"version": _VERSION, "device": device_key(), "kernels": _store()}
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    tmp.replace(path)
+
+
+def shape_key(**dims: int) -> str:
+    """Canonical shape key, e.g. ``shape_key(m=8, n=4096, k=4096)`` ->
+    ``"k4096-m8-n4096"`` (sorted so every caller agrees)."""
+    return "-".join(f"{k}{v}" for k, v in sorted(dims.items()))
+
+
+def lookup(kernel: str, key: str) -> dict | None:
+    """Tuned knobs for (kernel, shape key), or None when never tuned."""
+    entry = _store().get(kernel, {}).get(key)
+    return dict(entry["knobs"]) if entry else None
+
+
+def best(kernel: str, key: str, default: dict) -> dict:
+    """Tuned knobs merged over ``default`` — the ops-wrapper entry point.
+
+    Missing cache/entry returns ``default`` untouched, so the hard-coded
+    heuristics remain the zero-state behavior.
+    """
+    tuned = lookup(kernel, key)
+    return {**default, **tuned} if tuned else dict(default)
+
+
+def record(kernel: str, key: str, knobs: dict, us: float, *,
+           losers: dict | None = None, save: bool = True) -> None:
+    entry: dict[str, Any] = {"knobs": dict(knobs), "us": float(us)}
+    if losers:
+        entry["losers"] = {k: float(v) for k, v in losers.items()}
+    _store().setdefault(kernel, {})[key] = entry
+    if save:
+        _save()
+
+
+# ---------------------------------------------------------------------------
+# TL-vs-packed engine dispatch (measured, not guessed)
+# ---------------------------------------------------------------------------
+
+
+def choose_engine(m: int, n: int, k: int) -> str | None:
+    """Measured engine for an [M, N] x [N, K] ternary matmul: ``"tl"``,
+    ``"packed"``, or None when the shape was never benchmarked (callers fall
+    back to the packed path)."""
+    knobs = lookup("engine", shape_key(m=m, n=n, k=k))
+    return knobs["engine"] if knobs else None
+
+
+def record_engine(m: int, n: int, k: int, timings_us: dict[str, float], *,
+                  save: bool = True) -> str:
+    """Record per-engine timings for one matmul shape; returns the winner."""
+    winner = min(timings_us, key=timings_us.get)
+    losers = {e: t for e, t in timings_us.items() if e != winner}
+    record("engine", shape_key(m=m, n=n, k=k), {"engine": winner},
+           timings_us[winner], losers=losers, save=save)
+    return winner
+
+
+# ---------------------------------------------------------------------------
+# Timing + sweep harness
+# ---------------------------------------------------------------------------
+
+
+def measure(fn: Callable[[], Any], *, reps: int = 3, warmup: int = 1) -> float:
+    """Best-of-``reps`` wall time of ``fn`` in microseconds (device-synced)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return min(times) * 1e6
+
+
+def _divisor_pow2(x: int, cap: int) -> list[int]:
+    """Powers of two <= cap that divide x (>= 1 entries; 128-grid friendly)."""
+    out = [c for c in (64, 128, 256, 512) if c <= cap and x % c == 0]
+    return out or [min(128, cap)]
+
+
+def _candidates(kernel: str, shape: dict) -> list[dict]:
+    """Candidate knob grids per kernel package, filtered to ``shape``."""
+    m = shape.get("m", 1)
+    k = shape.get("k", 128)
+    s = shape.get("s", 128)  # cache length (attention kernels)
+    if kernel == "ternary_matmul":
+        bms = sorted({min(b, _round8(m)) for b in (8, 32, 64, 128)})
+        bks = sorted({b for b in (128, 256, 512) if b <= max(k, 128)})
+        return [{"bm": bm, "bk": bk} for bm in bms for bk in bks]
+    if kernel == "tl_gemv":
+        bms = sorted({min(b, _round8(m)) for b in (8, 32, 64, 128)})
+        bks = sorted({b for b in (128, 256, 512) if b <= max(k, 128)})
+        return [{"bm": bm, "bk": bk} for bm in bms for bk in bks]
+    if kernel == "fused_norm_quant":
+        return [{"bm": bm} for bm in sorted({min(b, _round8(m))
+                                             for b in (8, 32, 64, 128)})]
+    if kernel == "decode_attention":
+        return [{"bkv": bkv} for bkv in (128, 256, 512) if bkv <= max(s, 128)]
+    if kernel == "prefill_append":
+        return [{"bkv": bkv} for bkv in _divisor_pow2(s, max(s, 64))]
+    raise KeyError(f"no sweep defined for kernel {kernel!r}")
+
+
+def _round8(m: int) -> int:
+    return ((max(m, 1) + 7) // 8) * 8
+
+
+def _runner(kernel: str, shape: dict) -> Callable[[dict], Callable[[], Any]]:
+    """Build ``knobs -> thunk`` for one kernel at one shape (random inputs,
+    constructed once and reused across the sweep)."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+
+    if kernel in ("ternary_matmul", "tl_gemv"):
+        from ..core.packing import pack2
+        from ..core.tl_matmul import tl_indices
+        from .ternary_matmul import ops as tm_ops
+        from .tl_gemv import ops as tl_ops
+
+        m, n, k = shape["m"], shape["n"], shape["k"]
+        x = jnp.asarray(rng.integers(-127, 128, (m, n)), jnp.int8)
+        xs = jnp.asarray(rng.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+        w_t = jnp.asarray(rng.integers(-1, 2, (n, k)), jnp.int8)
+        ws = jnp.float32(0.02)
+        if kernel == "ternary_matmul":
+            wp = pack2(w_t)
+
+            def make(knobs):
+                return lambda: tm_ops.ternary_matmul(x, xs, wp, ws, **knobs)
+        else:
+            w_idx = tl_indices(pack2(w_t))
+
+            def make(knobs):
+                return lambda: tl_ops.tl_matmul(x, xs, w_idx, ws, **knobs)
+        return make
+
+    if kernel == "fused_norm_quant":
+        from .fused_norm_quant import ops as nq_ops
+
+        m, n = shape["m"], shape["n"]
+        x = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        gamma = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+
+        def make(knobs):
+            return lambda: nq_ops.norm_quant(x, gamma, impl="kernel", **knobs)
+        return make
+
+    if kernel == "decode_attention":
+        from .decode_attention import ops as da_ops
+
+        b, h, hk, d, s = (shape.get("b", 2), shape.get("h", 4),
+                          shape.get("hk", 2), shape.get("d", 64), shape["s"])
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        kc = jnp.asarray(rng.normal(size=(b, hk, s, d)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(b, hk, s, d)), jnp.float32)
+        pos = jnp.full((b,), s - 1, jnp.int32)
+
+        def make(knobs):
+            return lambda: da_ops.decode_attention(q, kc, vc, pos, **knobs)
+        return make
+
+    if kernel == "prefill_append":
+        from .prefill_append import ops as pa_ops
+
+        b, h, hk, d, s, c = (shape.get("b", 2), shape.get("h", 4),
+                             shape.get("hk", 2), shape.get("d", 64),
+                             shape["s"], shape.get("c", 64))
+        q = jnp.asarray(rng.normal(size=(b, h, c, d)), jnp.float32)
+        kn = jnp.asarray(rng.normal(size=(b, hk, c, d)), jnp.float32)
+        vn = jnp.asarray(rng.normal(size=(b, hk, c, d)), jnp.float32)
+        kc = jnp.asarray(rng.normal(size=(b, hk, s, d)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(b, hk, s, d)), jnp.float32)
+        off = jnp.zeros((b,), jnp.int32)
+
+        def make(knobs):
+            return lambda: pa_ops.prefill_append(q, kn, vn, kc, vc, off, **knobs)
+        return make
+
+    raise KeyError(f"no runner defined for kernel {kernel!r}")
+
+
+def tune(kernel: str, shape: dict, *, reps: int = 3,
+         force: bool = False) -> dict:
+    """Sweep one kernel at one shape; persist and return the winning entry.
+
+    Returns ``{"knobs": ..., "us": ..., "source": "cache"|"sweep"}``; an
+    existing cache entry short-circuits the sweep unless ``force``.
+    """
+    key = shape_key(**shape)
+    if not force:
+        cached = _store().get(kernel, {}).get(key)
+        if cached:
+            return {**cached, "source": "cache"}
+    make = _runner(kernel, shape)
+    results = []
+    for knobs in _candidates(kernel, shape):
+        try:
+            us = measure(make(knobs), reps=reps)
+        except Exception:  # noqa: BLE001 - illegal block config for shape
+            continue
+        results.append((us, knobs))
+    if not results:
+        raise RuntimeError(f"no viable block config for {kernel} @ {key}")
+    results.sort(key=lambda r: r[0])
+    us, knobs = results[0]
+    losers = {json.dumps(kn, sort_keys=True): t for t, kn in results[1:4]}
+    record(kernel, key, knobs, us, losers=losers)
+    return {"knobs": knobs, "us": us, "source": "sweep"}
+
+
+SMOKE_SHAPES: dict[str, list[dict]] = {
+    # tiny per-kernel shape sets for the CI cache smoke (seconds, not minutes)
+    "ternary_matmul": [{"m": 8, "n": 64, "k": 128}],
+    "tl_gemv": [{"m": 8, "n": 64, "k": 128}],
+    "fused_norm_quant": [{"m": 8, "n": 64}],
+    "decode_attention": [{"b": 2, "h": 4, "hk": 2, "d": 16, "s": 128}],
+    "prefill_append": [{"b": 2, "h": 4, "hk": 2, "d": 16, "s": 128, "c": 64}],
+}
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tune the tiny built-in shape set for all 5 kernels")
+    ap.add_argument("--cache", default=None, help="cache file override")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.cache:
+        set_cache_path(args.cache)
+    shapes = SMOKE_SHAPES
+    for kernel, shape_list in shapes.items():
+        for shape in shape_list:
+            r = tune(kernel, shape, reps=args.reps)
+            print(f"{kernel} @ {shape_key(**shape)}: {r['knobs']} "
+                  f"({r['us']:.1f} us, {r['source']})")
+    print(f"cache: {_CACHE_PATH or cache_path()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import _common as C
+from .. import autotune
 from .kernel import decode_attention_kernel, decode_attention_kernel_quant
 
 
@@ -20,7 +21,7 @@ def decode_attention(
     window: int = 0,
     softcap: float = 0.0,
     scale: float | None = None,
-    bkv: int = 128,
+    bkv: int | None = None,
     interpret=None,
 ) -> jax.Array:
     """Fused decode attention; returns [B, H, D].
@@ -39,6 +40,11 @@ def decode_attention(
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     quantized = k_scale is not None
 
+    if bkv is None:
+        bkv = autotune.best(
+            "decode_attention",
+            autotune.shape_key(b=b, h=h, hk=hk, d=d, s=m),
+            {"bkv": 128})["bkv"]
     bkv = min(bkv, C.round_up(m, 128))
     mp = C.round_up(m, bkv)
     if mp != m:

@@ -39,6 +39,37 @@ def _kernel(x_ref, g_ref, i8_ref, s_ref, *, eps: float):
     s_ref[...] = s
 
 
+def _tables_kernel(x_ref, g_ref, combos_ref, i8_ref, s_ref, t_ref, *,
+                   eps: float, tl_g: int):
+    """Norm + quant + TL table precompute in one VMEM pass (TeLLMe v2's
+    "online precomputation" fused into the NQD prologue).
+
+    The norm/quant arithmetic is byte-for-byte ``_kernel``; the extra output
+    is the grouped-activation table block every TL matmul consuming this row
+    reuses. The row is zero-padded to a ``tl_g`` multiple *after* the norm
+    (padding before would corrupt the RMS mean divisor), matching
+    ``core.tl_matmul.build_tables``.
+    """
+    bm, n = x_ref.shape
+    xf = x_ref[...].astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=1, keepdims=True) + eps)
+    y = (xf * rms * g_ref[...].astype(jnp.float32)).astype(x_ref.dtype)
+    x_i8, s = ternary.quantize_act(y)
+    i8_ref[...] = x_i8
+    s_ref[...] = s
+    t = (n + tl_g - 1) // tl_g
+    xi = x_i8
+    if n < t * tl_g:
+        xi = jnp.concatenate(
+            [xi, jnp.zeros((bm, t * tl_g - n), xi.dtype)], axis=1)
+    a_groups = xi.reshape(bm * t, tl_g).astype(jnp.float32)
+    tables = jax.lax.dot_general(
+        a_groups, combos_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    t_ref[...] = tables.reshape(bm, t * 3**tl_g)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "eps", "interpret"))
 def norm_quant_kernel(
     x: jax.Array,  # [M, N]
@@ -68,3 +99,47 @@ def norm_quant_kernel(
         out_shape=out_shape,
         interpret=interpret,
     )(x, gamma)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "eps", "tl_g", "interpret"))
+def norm_quant_tables_kernel(
+    x: jax.Array,  # [M, N]
+    gamma: jax.Array,  # [1, N]
+    *,
+    bm: int = 128,
+    eps: float = 1e-5,
+    tl_g: int = 3,
+    interpret: bool = False,
+):
+    """Fused prologue + online TL table precompute.
+
+    Returns ``(x_i8 [M, N], scale [M, 1], tables [M, T·3^tl_g])`` with
+    T = ⌈N/tl_g⌉ — the first two outputs bit-identical to
+    :func:`norm_quant_kernel`, the third the TL engine's stage-1 product.
+    """
+    from ...core.packing import combo_matrix_np
+
+    m, n = x.shape
+    assert m % bm == 0
+    t = (n + tl_g - 1) // tl_g
+    out_shape = (
+        jax.ShapeDtypeStruct((m, n), jnp.int8),
+        jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        jax.ShapeDtypeStruct((m, t * 3**tl_g), jnp.float32),
+    )
+    return pl.pallas_call(
+        functools.partial(_tables_kernel, eps=eps, tl_g=tl_g),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((tl_g, 3**tl_g), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, t * 3**tl_g), lambda i: (i, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, gamma, combo_matrix_np(tl_g))

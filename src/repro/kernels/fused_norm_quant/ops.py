@@ -4,17 +4,35 @@
 kernel (interpret mode off-TPU), ``"xla"`` the bit-identical oracle
 composition (the CPU serving path — interpret-mode Pallas is an emulator,
 not a fast path), ``"auto"`` kernel-on-TPU.
+
+``tables=True`` extends the pass with the TL engine's online table
+precompute (TeLLMe v2): the quantized row's 3^g-entry group tables come out
+of the same VMEM residency, so TL matmuls consuming this row skip their
+stage-1 build entirely. The (x_i8, scale) outputs are bit-identical with
+and without the tables tap.
 """
 
 from __future__ import annotations
 
 from .. import _common as C
-from .kernel import norm_quant_kernel
+from .. import autotune
+from .kernel import norm_quant_kernel, norm_quant_tables_kernel
 from .ref import norm_quant as norm_quant_ref
+from .ref import norm_quant_tables as norm_quant_tables_ref
+
+
+def _block_m(m: int, n: int, bm: int | None) -> int:
+    if bm is None:
+        default = 128 if n <= 16384 else 32
+        bm = autotune.best("fused_norm_quant", autotune.shape_key(m=m, n=n),
+                           {"bm": default})["bm"]
+    # Decode-shaped calls (a few slot rows) clamp to a sublane block instead
+    # of norming a full 128-row tile of padding — same policy as ternary_gemv.
+    return min(bm, C.round_up(m, 8))
 
 
 def norm_quant(x, gamma, *, eps: float = 1e-5, impl: str = "auto",
-               interpret=None):
+               bm: int | None = None, interpret=None):
     """x [..., N], gamma [N] -> (int8 [..., N], f32 scale [..., 1])."""
     if impl == "auto":
         impl = "kernel" if C.on_tpu() else "xla"
@@ -23,10 +41,28 @@ def norm_quant(x, gamma, *, eps: float = 1e-5, impl: str = "auto",
     interpret = C.resolve_interpret(interpret)
     x2, lead, m = C.flatten_lead(x)
     n = x2.shape[1]
-    # Decode-shaped calls (a few slot rows) clamp to a sublane block instead
-    # of norming a full 128-row tile of padding — same policy as ternary_gemv.
-    bm = min(128 if n <= 16384 else 32, C.round_up(m, 8))
+    bm = _block_m(m, n, bm)
     x2 = C.pad_to(x2, 0, C.round_up(m, bm))
     i8, s = norm_quant_kernel(x2, gamma.reshape(1, n), bm=bm, eps=eps,
                               interpret=interpret)
     return i8[:m].reshape(*lead, n), s[:m].reshape(*lead, 1)
+
+
+def norm_quant_tables(x, gamma, *, eps: float = 1e-5, impl: str = "auto",
+                      tl_g: int = 3, bm: int | None = None, interpret=None):
+    """x [..., N], gamma [N] -> (int8, scale, TL tables [..., T·3^tl_g])."""
+    if impl == "auto":
+        impl = "kernel" if C.on_tpu() else "xla"
+    if impl == "xla":
+        return norm_quant_tables_ref(x, gamma, eps=eps, tl_g=tl_g)
+    interpret = C.resolve_interpret(interpret)
+    x2, lead, m = C.flatten_lead(x)
+    n = x2.shape[1]
+    t = (n + tl_g - 1) // tl_g
+    bm = _block_m(m, n, bm)
+    x2 = C.pad_to(x2, 0, C.round_up(m, bm))
+    i8, s, tab = norm_quant_tables_kernel(x2, gamma.reshape(1, n), bm=bm,
+                                          eps=eps, tl_g=tl_g,
+                                          interpret=interpret)
+    return (i8[:m].reshape(*lead, n), s[:m].reshape(*lead, 1),
+            tab[:m].reshape(*lead, t * 3**tl_g))

@@ -34,6 +34,18 @@ def norm_quant(x, gamma, *, eps: float = 1e-5):
     return ternary.quantize_act(rmsnorm(x, gamma, eps=eps))
 
 
+def norm_quant_tables(x, gamma, *, eps: float = 1e-5, tl_g: int = 3):
+    """Oracle for the prologue + online TL table precompute: exactly
+    :func:`norm_quant` followed by ``core.tl_matmul.build_tables`` on the
+    quantized row — the fused kernel must match all three outputs bitwise.
+    """
+    from ...core.tl_matmul import build_tables
+
+    x_i8, s = norm_quant(x, gamma, eps=eps)
+    t = (x.shape[-1] + tl_g - 1) // tl_g
+    return x_i8, s, build_tables(x_i8, t=t, g=tl_g)
+
+
 def swiglu_requant(g, u):
     """Unfused epilogue oracle: dequantized gate/up outs -> (h_i8, h_scale).
 

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .. import _common as C
+from .. import autotune
 from .kernel import prefill_append_kernel, prefill_append_kernel_quant
 
 
@@ -21,7 +22,7 @@ def prefill_append(
     window: int = 0,
     softcap: float = 0.0,
     scale: float | None = None,
-    bkv: int = 128,
+    bkv: int | None = None,
     prefix_limit: int = 0,
     interpret=None,
 ):
@@ -44,6 +45,11 @@ def prefill_append(
     g = h // hk
     offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
 
+    if bkv is None:
+        bkv = autotune.best(
+            "prefill_append",
+            autotune.shape_key(b=b, c=c, d=d, h=h, hk=hk, s=m),
+            {"bkv": 128})["bkv"]
     bkv = min(bkv, m)
     while m % bkv:
         bkv //= 2

@@ -9,11 +9,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .. import _common as C
+from .. import autotune
 from .kernel import ternary_gemv_kernel, ternary_matmul_kernel, ternary_swiglu_kernel
 
 
 def ternary_gemv(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32,
-                 residual=None, interpret=None):
+                 residual=None, bk: int | None = None, interpret=None):
     """Decode GEMV: x_i8 [..., N] int8 (few rows) × packed wp [N/4, K] -> [..., K].
 
     Small-M twin of :func:`ternary_matmul`: M is padded to a sublane block
@@ -35,7 +36,10 @@ def ternary_gemv(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32,
     s2 = C.pad_to(x_scale.reshape(m, 1), 0, bm)
     x2 = C.pad_to(x2, 0, bm)
     n4, k = wp.shape
-    bk = 512 if k % 512 == 0 else 128
+    if bk is None:
+        bk = autotune.best(
+            "ternary_matmul", autotune.shape_key(m=m, n=n4 * 4, k=k),
+            {"bk": 512 if k % 512 == 0 else 128})["bk"]
     kp = C.round_up(k, bk)
     wp2 = C.pad_to(wp, 1, kp)
     ws = jnp.asarray(w_scale, jnp.float32).reshape(1, 1)
@@ -49,11 +53,14 @@ def ternary_gemv(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32,
 
 
 def ternary_matmul(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32,
-                   residual=None, interpret=None):
+                   residual=None, bm: int | None = None, bk: int | None = None,
+                   interpret=None):
     """x_i8 [..., N] int8 × packed wp [N/4, K] -> [..., K].
 
     Leading dims are flattened to M; M and K are padded to block multiples.
-    ``residual [..., K]`` is added inside the dequant epilogue.
+    ``residual [..., K]`` is added inside the dequant epilogue. ``bm``/``bk``
+    default to the autotuner's persisted winners for this exact shape
+    (``kernels.autotune``), falling back to the fixed heuristic.
     """
     interpret = C.resolve_interpret(interpret)
     x2, lead, m = C.flatten_lead(x_i8)
@@ -61,9 +68,14 @@ def ternary_matmul(x_i8, x_scale, wp, w_scale, *, out_dtype=jnp.float32,
     s2 = x_scale.reshape(m, 1)
     n4, k = wp.shape
 
-    bm = 128 if n <= 32768 else 64
+    if bm is None or bk is None:
+        knobs = autotune.best(
+            "ternary_matmul", autotune.shape_key(m=m, n=n, k=k),
+            {"bm": 128 if n <= 32768 else 64,
+             "bk": 128 if k >= 128 else C.round_up(k, 128)})
+        bm = bm if bm is not None else knobs["bm"]
+        bk = bk if bk is not None else knobs["bk"]
     bm = min(bm, C.round_up(m, 8))
-    bk = 128 if k >= 128 else C.round_up(k, 128)
     mp = C.round_up(m, bm)
     kp = C.round_up(k, bk)
     x2 = C.pad_to(x2, 0, mp)
@@ -89,7 +101,8 @@ def _pad_packed_cols(wp, kp: int):
 
 
 def ternary_swiglu(x_i8, x_scale, wg, wg_scale, wu, wu_scale, *,
-                   act_dtype=jnp.bfloat16, interpret=None):
+                   act_dtype=jnp.bfloat16, bm: int | None = None,
+                   interpret=None):
     """Fused SwiGLU epilogue: int8 activations in, int8 hidden out.
 
     x_i8 [..., N] × gate/up packed [N/4, K] -> (h_i8 [..., K], h_scale
@@ -100,7 +113,11 @@ def ternary_swiglu(x_i8, x_scale, wg, wg_scale, wu, wu_scale, *,
     interpret = C.resolve_interpret(interpret)
     x2, lead, m = C.flatten_lead(x_i8)
     n4, k = wg.shape
-    bm = min(128, C.round_up(m, 8))
+    if bm is None:
+        bm = autotune.best(
+            "ternary_matmul", autotune.shape_key(m=m, n=n4 * 4, k=k),
+            {"bm": 128})["bm"]
+    bm = min(bm, C.round_up(m, 8))
     mp = C.round_up(m, bm)
     x2 = C.pad_to(x2, 0, mp)
     s2 = C.pad_to(x_scale.reshape(m, 1), 0, mp)

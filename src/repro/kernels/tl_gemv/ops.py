@@ -1,14 +1,26 @@
-"""Jitted wrapper for the faithful TL-table GEMV kernel."""
+"""Jitted wrappers for the table-lookup matmul engine (TeLLMe Algorithm 1).
+
+``tl_gemv`` is the original decode wrapper; ``tl_matmul`` / ``tl_swiglu``
+are the end-to-end engine entry points: multi-row M, per-output-channel
+weight scales, fused residual / requant epilogues, and an optional
+``tables`` operand carrying the fused norm-quant prologue's precomputed
+group tables (the paper's online precomputation, hoisted out of the matmul).
+
+Block sizes default to the autotuner's persisted winners for the exact call
+shape (``kernels.autotune``), falling back to the same fixed heuristics the
+packed wrappers use when no measurement is recorded.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from .. import _common as C
-from .kernel import tl_gemv_kernel
+from .. import autotune
+from .kernel import tl_gemv_kernel, tl_matmul_kernel, tl_swiglu_kernel
 
 
-def tl_gemv(x_i8, x_scale, w_idx, w_scale, *, g: int = 3, bk: int = 128,
+def tl_gemv(x_i8, x_scale, w_idx, w_scale, *, g: int = 3, bk: int | None = None,
             interpret=None, out_dtype=jnp.float32):
     """x_i8 [..., N] int8 × group-index weights [N/g, K] -> [..., K].
 
@@ -17,12 +29,16 @@ def tl_gemv(x_i8, x_scale, w_idx, w_scale, *, g: int = 3, bk: int = 128,
     contract, so per-channel-scaled packed layers can take the TL path too.
     ``bk`` tunes the K-block streamed per grid step (K is padded up to a
     ``bk`` multiple here and sliced back after the call; pad columns carry a
-    zero scale, so they cost nothing beyond the padded lanes).
+    zero scale, so they cost nothing beyond the padded lanes). ``bk=None``
+    reads the autotuner's winner for this shape (default 128).
     """
     interpret = C.resolve_interpret(interpret)
     x2, lead, m = C.flatten_lead(x_i8)
     s2 = x_scale.reshape(m, 1)
     t, k = w_idx.shape
+    if bk is None:
+        bk = autotune.best("tl_gemv", autotune.shape_key(m=m, n=t * g, k=k),
+                           {"bk": 128})["bk"]
     kp = C.round_up(k, bk)
     w2 = C.pad_to(w_idx, 1, kp)
     # scalar -> broadcast row; [K] / [1, K] -> per-channel row (zero-padded)
@@ -31,3 +47,124 @@ def tl_gemv(x_i8, x_scale, w_idx, w_scale, *, g: int = 3, bk: int = 128,
     ws2 = C.pad_to(ws, 1, kp)
     out = tl_gemv_kernel(x2, s2, w2, ws2, g=g, bk=bk, interpret=interpret)
     return out[:, :k].reshape(*lead, k).astype(out_dtype)
+
+
+def _zero_group_index(g: int) -> int:
+    """Base-3 index of the all-zero-trit group (biased digits all 1)."""
+    return (3**g - 1) // 2
+
+
+def _pad_idx_cols(w_idx, kp: int, g: int):
+    """Pad K columns with the all-zero-trit group index, so padded output
+    channels stay exactly zero (the TL twin of ``_pad_packed_cols``)."""
+    k = w_idx.shape[1]
+    if k == kp:
+        return w_idx
+    return jnp.pad(w_idx, ((0, 0), (0, kp - k)),
+                   constant_values=_zero_group_index(g))
+
+
+def tl_matmul(x_i8, x_scale, w_idx, w_scale, *, g: int = 3,
+              bm: int | None = None, bk: int | None = None, tables=None,
+              residual=None, out_dtype=jnp.float32, impl: str = "auto",
+              interpret=None):
+    """Prefill-shaped TL matmul: x_i8 [..., N] × w_idx [⌈N/g⌉, K] -> [..., K].
+
+    The TL twin of ``ternary_matmul``: leading dims flatten to M, M/K pad to
+    block multiples, ``residual [..., K]`` rides the dequant epilogue, and
+    ``w_scale`` may be per-tensor or per-channel. ``tables`` (the fused
+    prologue's [..., T·3^g] precompute) replaces the in-kernel table build
+    when given — ``x_i8`` may then be None.
+
+    ``impl`` mirrors the packed dispatch: ``"kernel"`` the Pallas kernel,
+    ``"xla"`` the bit-identical Algorithm-1 oracle (the CPU serving path —
+    interpret-mode Pallas is an emulator, not a fast path), ``"auto"``
+    kernel-on-TPU. Engine switches therefore never change results on any
+    backend: the XLA TL form is exact against the packed XLA form, the TL
+    kernel exact against the packed kernels.
+    """
+    if impl == "auto":
+        impl = "kernel" if C.on_tpu() else "xla"
+    if impl == "xla" and x_i8 is not None:
+        from . import ref
+
+        return ref.tl_matmul(x_i8, x_scale, w_idx, w_scale, g=g,
+                             residual=residual, out_dtype=out_dtype)
+    interpret = C.resolve_interpret(interpret)
+    t, k = w_idx.shape
+    if tables is not None:
+        a2, lead, m = C.flatten_lead(tables)
+        na = t * 3**g
+        assert a2.shape[1] == na, (a2.shape, t, g)
+    else:
+        a2, lead, m = C.flatten_lead(x_i8)
+        if a2.shape[1] < t * g:
+            a2 = C.pad_to(a2, 1, t * g)
+    s2 = x_scale.reshape(m, 1)
+    knobs = autotune.best(
+        "tl_gemv", autotune.shape_key(m=m, n=t * g, k=k), {"bm": 128, "bk": 128})
+    bm = bm if bm is not None else knobs["bm"]
+    bk = bk if bk is not None else knobs["bk"]
+    bm = min(bm, C.round_up(m, 8))
+    mp = C.round_up(m, bm)
+    kp = C.round_up(k, bk)
+    a2 = C.pad_to(a2, 0, mp)
+    s2 = C.pad_to(s2, 0, mp)
+    w2 = _pad_idx_cols(w_idx, kp, g)
+    ws = jnp.broadcast_to(
+        jnp.asarray(w_scale, jnp.float32).reshape(1, -1), (1, k))
+    ws2 = C.pad_to(ws, 1, kp)
+    r2 = None
+    if residual is not None:
+        r2 = C.pad_to(C.pad_to(
+            residual.astype(out_dtype).reshape(m, k), 0, mp), 1, kp)
+    out = tl_matmul_kernel(
+        a2, s2, w2, ws2, r2, g=g, bm=bm, bk=bk,
+        from_tables=tables is not None, out_dtype=out_dtype,
+        interpret=interpret)
+    return out[:m, :k].reshape(*lead, k)
+
+
+def tl_swiglu(x_i8, x_scale, wg_idx, wg_scale, wu_idx, wu_scale, *,
+              g: int = 3, bm: int | None = None, tables=None,
+              act_dtype=jnp.bfloat16, impl: str = "auto", interpret=None):
+    """Fused TL SwiGLU: int8 (or precomputed tables) in, int8 + scale out.
+
+    The TL twin of ``ternary_swiglu``: gate/up lookups plus the dequant →
+    SiLU → (×up) → requant epilogue in one kernel. Padded K columns carry
+    the all-zero-trit group index, so they dequantize to exactly zero and
+    cannot move the per-token absmax. ``impl`` as in :func:`tl_matmul` —
+    ``"auto"`` runs the XLA oracle off-TPU (exact vs the packed XLA swiglu).
+    """
+    if impl == "auto":
+        impl = "kernel" if C.on_tpu() else "xla"
+    if impl == "xla" and x_i8 is not None:
+        from . import ref
+
+        return ref.tl_swiglu(x_i8, x_scale, wg_idx, wg_scale, wu_idx,
+                             wu_scale, g=g, act_dtype=act_dtype)
+    interpret = C.resolve_interpret(interpret)
+    t, k = wg_idx.shape
+    if tables is not None:
+        a2, lead, m = C.flatten_lead(tables)
+        assert a2.shape[1] == t * 3**g, (a2.shape, t, g)
+    else:
+        a2, lead, m = C.flatten_lead(x_i8)
+        if a2.shape[1] < t * g:
+            a2 = C.pad_to(a2, 1, t * g)
+    knobs = autotune.best(
+        "tl_gemv", autotune.shape_key(m=m, n=t * g, k=k), {"bm": 128})
+    bm = bm if bm is not None else knobs.get("bm", 128)
+    bm = min(bm, C.round_up(m, 8))
+    mp = C.round_up(m, bm)
+    a2 = C.pad_to(a2, 0, mp)
+    s2 = C.pad_to(x_scale.reshape(m, 1), 0, mp)
+    kp = C.round_up(k, 128)
+    wg2 = _pad_idx_cols(wg_idx, kp, g)
+    wu2 = _pad_idx_cols(wu_idx, kp, g)
+    h_i8, h_s = tl_swiglu_kernel(
+        a2, s2, wg2, jnp.asarray(wg_scale, jnp.float32).reshape(1, 1),
+        wu2, jnp.asarray(wu_scale, jnp.float32).reshape(1, 1),
+        g=g, bm=bm, from_tables=tables is not None, act_dtype=act_dtype,
+        interpret=interpret)
+    return h_i8[:m, :k].reshape(*lead, k), h_s[:m].reshape(*lead, 1)

@@ -33,15 +33,21 @@ def rmsnorm(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
 
 
 def norm_quant(params: dict, x: jax.Array, *, eps: float = 1e-5,
-               impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+               impl: str = "auto", tables: bool = False) -> tuple:
     """Fused NQD prologue: RMSNorm + per-token absmax int8 in one pass.
 
     Returns ``(x_i8 [..., N], x_scale [..., 1])`` — bit-identical to
     ``quantize_act(rmsnorm(params, x))`` (kernels/fused_norm_quant), ready
-    for ``bitlinear.apply``'s pre-quantized fused form.
+    for ``bitlinear.apply``'s pre-quantized fused form. With ``tables=True``
+    the tuple grows to ``(x_i8, x_scale, tables)``: the TL engine's online
+    table precompute rides the same VMEM pass, and every TL matmul consuming
+    this row skips its stage-1 build (DESIGN.md §table-lookup). The first
+    two outputs are bit-identical either way.
     """
     from ..kernels.fused_norm_quant import ops as nq_ops
 
+    if tables:
+        return nq_ops.norm_quant_tables(x, params["gamma"], eps=eps, impl=impl)
     return nq_ops.norm_quant(x, params["gamma"], eps=eps, impl=impl)
 
 

@@ -210,22 +210,25 @@ def pack_tree(params, specs):
 
 def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
                 attn_impl="auto", prefix_limit=0, aligned=True, rope=None,
-                xq=None, residual=None):
-    """``xq`` (the fused norm-quant prologue's ``(x_i8, x_scale)``) replaces
-    ``x`` as the projection input on the int8-resident path; ``residual`` is
-    folded into the o-projection's dequant epilogue. ``rope`` carries the
-    step's precomputed (cos, sin) tables (built here when absent).
+                xq=None, residual=None, use_kernel="auto"):
+    """``xq`` (the fused norm-quant prologue's ``(x_i8, x_scale[, tables])``)
+    replaces ``x`` as the projection input on the int8-resident path;
+    ``residual`` is folded into the o-projection's dequant epilogue. ``rope``
+    carries the step's precomputed (cos, sin) tables (built here when absent).
     ``aligned`` is the chunk path's offset contract (False for speculative
-    verify — see ``prefill_append_attention``)."""
+    verify — see ``prefill_append_attention``). ``use_kernel`` is the matmul
+    engine selector threaded from ``cfg.matmul_engine`` on the packed path
+    (``bitlinear.apply``'s TL-vs-packed dispatch)."""
     b, s, _ = x.shape
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     window = cfg.sliding_window if kind.local else 0
     src = xq if xq is not None else x
-    q = bitlinear.apply(bp["q"], src, mode=mode, out_dtype=x.dtype)
+    uk = use_kernel if mode == "packed" else "auto"
+    q = bitlinear.apply(bp["q"], src, mode=mode, out_dtype=x.dtype, use_kernel=uk)
     q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
-    k = bitlinear.apply(bp["k"], src, mode=mode, out_dtype=x.dtype)
+    k = bitlinear.apply(bp["k"], src, mode=mode, out_dtype=x.dtype, use_kernel=uk)
     k = k.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
-    v = bitlinear.apply(bp["v"], src, mode=mode, out_dtype=x.dtype)
+    v = bitlinear.apply(bp["v"], src, mode=mode, out_dtype=x.dtype, use_kernel=uk)
     v = v.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
     if rope is None:
         rope = L.rope_tables(positions, hd, theta=cfg.rope_theta)
@@ -296,7 +299,7 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
     out = constrain(out, "act_batch", None, "act_heads")
     return bitlinear.apply(bp["o"], out, mode=mode, out_dtype=x.dtype,
-                           residual=residual), new_cache
+                           residual=residual, use_kernel=uk), new_cache
 
 
 def _apply_ffn(fp, x, cfg, kind, pcfg, *, mode):
@@ -366,14 +369,25 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
         # prologue feeds the projections pre-quantized, the o/down matmuls
         # absorb the residual adds, and the SwiGLU hidden never leaves the
         # matmul pipeline as float. Bit-identical to the unfused branch.
-        hq = L.norm_quant(bp["ln1"], x, eps=cfg.norm_eps)
+        # When the matmul engine resolves to table-lookup for the consuming
+        # projections, the prologue also emits the TL group tables in the
+        # same VMEM pass (the paper's online precomputation, fused).
+        engine = getattr(cfg, "matmul_engine", "auto")
+        rows = x.shape[0] * x.shape[1]
+        t1 = bitlinear.resolve_engine(bp["attn"]["q"], rows,
+                                      use_kernel=engine) == "tl"
+        hq = L.norm_quant(bp["ln1"], x, eps=cfg.norm_eps, tables=t1)
         x, new_cache = _apply_attn(bp["attn"], x, cfg, kind, positions, mode=mode,
                                    cache=cache, pos=pos, attn_impl=attn_impl,
                                    prefix_limit=prefix_limit, aligned=aligned,
-                                   rope=rope.get("attn"), xq=hq, residual=x)
+                                   rope=rope.get("attn"), xq=hq, residual=x,
+                                   use_kernel=engine)
         x = constrain(x, "act_batch", "act_seq", None)
-        h2q = L.norm_quant(bp["ln2"], x, eps=cfg.norm_eps)
-        x = L.mlp_fused(bp["ffn"], h2q, out_dtype=x.dtype, residual=x)
+        t2 = bitlinear.resolve_engine(bp["ffn"]["gate"], rows,
+                                      use_kernel=engine) == "tl"
+        h2q = L.norm_quant(bp["ln2"], x, eps=cfg.norm_eps, tables=t2)
+        x = L.mlp_fused(bp["ffn"], h2q, out_dtype=x.dtype, residual=x,
+                        use_kernel=engine)
         x = constrain(x, "act_batch", "act_seq", None)
         return x, new_cache, aux
 

@@ -69,6 +69,20 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _engine_params(params, cfg, mode: str):
+    """Offline_preprocess hook for the TL matmul engine: with
+    ``cfg.matmul_engine="tl"`` the packed param tree is augmented once with
+    precomputed group indices (``bitlinear.with_tl_tree``) so no jitted step
+    ever unpacks/encodes weights. ``"auto"`` trees the caller prepared with
+    ``with_tl_tree`` pass through idempotently; plain trees are untouched
+    (the measured dispatch then resolves packed — zero behavior change)."""
+    if mode == "packed" and getattr(cfg, "matmul_engine", "auto") == "tl":
+        from ..core import bitlinear
+
+        return bitlinear.with_tl_tree(params)
+    return params
+
+
 # ---------------------------------------------------------------------------
 # Pure step functions (jit / dry-run entry points)
 # ---------------------------------------------------------------------------
@@ -357,6 +371,7 @@ def generate(
     bit-identical to the per-token Python loop this replaces.
     """
     b, s = prompts.shape
+    params = _engine_params(params, cfg, mode)
     last_logits, caches = prefill_bucketed(params, cfg, prompts, mode=mode,
                                            fused=fused)
     caches = fit_caches(caches, cfg, s + steps)
@@ -438,7 +453,8 @@ class ServingEngine:
                  mode: str = "eval", eos_id: int = -1, attn_impl: str = "auto",
                  prefill: str = "auto", fused: bool | None = None,
                  speculative: bool = False, spec_gamma: int | None = None):
-        self.params, self.cfg, self.mode = params, cfg, mode
+        self.params = _engine_params(params, cfg, mode)
+        self.cfg, self.mode = cfg, mode
         self.fused = fused  # int8-resident NQD pipeline (None: on iff packed)
         self.slots = slots
         self.max_len = max_len

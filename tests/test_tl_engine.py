@@ -1,0 +1,348 @@
+"""End-to-end table-lookup matmul engine (DESIGN.md §table-lookup).
+
+Guarantees under test:
+
+* TL ≡ packed — the TL engine (Pallas kernels and XLA Algorithm-1 oracle)
+  is *bit-identical* to the packed engine at every level: plain matmul,
+  per-channel scales, fused residual, SwiGLU requant — including ragged
+  contraction tails (N % g != 0) whose last group is zero-trit padded;
+* online precompute — the fused norm-quant prologue's table tap leaves
+  (x_i8, scale) bit-identical, emits exactly ``build_tables(x_i8)``, and a
+  tables-fed TL matmul equals the int8-fed one bitwise;
+* autotuner — cache persists and reloads to identical dispatch decisions
+  (``best`` knobs and ``choose_engine`` winners);
+* dispatch — ``resolve_engine`` honors forced/pinned/measured selection and
+  falls back to packed for unmeasured shapes and plain (no ``w_idx``) nodes;
+* serving — greedy generation with ``matmul_engine="tl"`` is bit-identical
+  to ``"packed"`` end to end (the ISSUE bar).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+# hypothesis-heavy suite: runs in the dedicated `slow` CI job (conftest.py)
+pytestmark = pytest.mark.slow
+from repro.configs import get_config
+from repro.core import bitlinear as BL
+from repro.core import packing as P
+from repro.core import params as PR
+from repro.core import ternary as T
+from repro.core import tl_matmul as TL
+from repro.kernels import autotune as AT
+from repro.kernels.fused_norm_quant import kernel as nq_kernel
+from repro.kernels.fused_norm_quant import ops as nq_ops
+from repro.kernels.fused_norm_quant import ref as nq_ref
+from repro.kernels.ternary_matmul import ops as tm_ops
+from repro.kernels.tl_gemv import ops as tl_ops
+from repro.kernels.tl_gemv import ref as tl_ref
+from repro.models import transformer as Tr
+from repro.serving import engine as E
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path):
+    """Every test here sees a private, initially-empty autotune cache (a
+    stale per-user cache file must not steer block sizes or dispatch)."""
+    AT.set_cache_path(tmp_path / "autotune.json")
+    yield
+    AT.set_cache_path(None)
+
+
+def _inputs(m, n, k, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-127, 128, (m, n)), jnp.int8)
+    xs = jnp.asarray(rng.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    n4 = ((n + 3) // 4) * 4
+    w_t = jnp.asarray(rng.integers(-1, 2, (n4, k)), jnp.int8)
+    w_t = w_t.at[n:].set(0)  # pad rows beyond N are zero trits (inert)
+    return x, xs, w_t, P.pack2(w_t)
+
+
+SHAPES = [(1, 64, 128), (5, 67, 96), (40, 96, 200), (130, 128, 64)]
+
+
+class TestTlMatmulParity:
+    """TL ≡ packed at every level, including ragged N (not divisible by g)."""
+
+    @pytest.mark.parametrize("m,n,k", SHAPES)
+    def test_kernel_and_oracle_match_packed(self, m, n, k):
+        x, xs, w_t, wp = _inputs(m, n, k, seed=m + n + k)
+        w_idx = TL.tl_indices(wp)
+        ws = jnp.float32(0.02)
+        ref = T.ternary_matmul_ref(x, xs, w_t[:n], ws, out_dtype=jnp.float32)
+        for impl in ("kernel", "xla"):
+            got = tl_ops.tl_matmul(x, xs, w_idx, ws, impl=impl)
+            np.testing.assert_array_equal(np.array(got), np.array(ref),
+                                          err_msg=impl)
+
+    def test_per_channel_w_scale(self):
+        m, n, k = 6, 65, 96
+        x, xs, w_t, wp = _inputs(m, n, k, seed=3)
+        ws = jnp.asarray(np.random.default_rng(4).uniform(0.01, 0.1, (k,)),
+                         jnp.float32)
+        ref = T.ternary_matmul_ref(x, xs, w_t[:n], ws, out_dtype=jnp.float32)
+        for impl in ("kernel", "xla"):
+            got = tl_ops.tl_matmul(x, xs, TL.tl_indices(wp), ws, impl=impl)
+            np.testing.assert_array_equal(np.array(got), np.array(ref),
+                                          err_msg=impl)
+
+    @pytest.mark.parametrize("impl", ["kernel", "xla"])
+    def test_residual_equals_post_add(self, impl):
+        m, n, k = 5, 68, 96
+        x, xs, w_t, wp = _inputs(m, n, k, seed=7)
+        w_idx = TL.tl_indices(wp)
+        ws = jnp.float32(0.02)
+        r = jax.random.normal(jax.random.PRNGKey(8), (m, k), jnp.bfloat16)
+        base = tl_ops.tl_matmul(x, xs, w_idx, ws, out_dtype=jnp.bfloat16,
+                                impl=impl)
+        got = tl_ops.tl_matmul(x, xs, w_idx, ws, out_dtype=jnp.bfloat16,
+                               residual=r, impl=impl)
+        np.testing.assert_array_equal(np.array(got), np.array(base + r))
+
+    def test_swiglu_matches_packed_kernel(self):
+        m, n, k = 7, 68, 96
+        x, xs, wg_t, wgp = _inputs(m, n, k, seed=11)
+        _, _, wu_t, wup = _inputs(m, n, k, seed=12)
+        ws = jnp.float32(0.02)
+        h1, s1 = tm_ops.ternary_swiglu(x, xs, wgp, ws, wup, ws)
+        h2, s2 = tl_ops.tl_swiglu(x, xs, TL.tl_indices(wgp), ws,
+                                  TL.tl_indices(wup), ws, impl="kernel")
+        np.testing.assert_array_equal(np.array(h1), np.array(h2))
+        np.testing.assert_array_equal(np.array(s1), np.array(s2))
+
+    def test_swiglu_xla_matches_packed_xla(self):
+        m, n, k = 7, 68, 96
+        x, xs, wg_t, wgp = _inputs(m, n, k, seed=13)
+        _, _, wu_t, wup = _inputs(m, n, k, seed=14)
+        ws = jnp.float32(0.02)
+        gp = {"wp": wgp, "scale": ws}
+        upp = {"wp": wup, "scale": ws}
+        h1, s1 = BL.swiglu(gp, upp, (x, xs), use_kernel=False)
+        h2, s2 = tl_ops.tl_swiglu(x, xs, TL.tl_indices(wgp), ws,
+                                  TL.tl_indices(wup), ws, impl="xla")
+        np.testing.assert_array_equal(np.array(h1), np.array(h2))
+        np.testing.assert_array_equal(np.array(s1), np.array(s2))
+
+    @given(st.integers(1, 40), st.integers(2, 190), st.integers(8, 200),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_property_tl_equals_packed(self, m, n, k, seed):
+        """Exact across the M×N×K grid: ragged tails (n % 3, n % 4) and the
+        zero-trit group padding both covered by the open-range n."""
+        x, xs, w_t, wp = _inputs(m, n, k, seed=seed)
+        w_idx = TL.tl_indices(wp)
+        ws = jnp.float32(0.05)
+        ref = T.ternary_matmul_ref(x, xs, w_t[:n], ws, out_dtype=jnp.float32)
+        np.testing.assert_array_equal(
+            np.array(tl_ops.tl_matmul(x, xs, w_idx, ws, impl="xla")),
+            np.array(ref))
+        np.testing.assert_array_equal(
+            np.array(tl_ops.tl_matmul(x, xs, w_idx, ws, impl="kernel")),
+            np.array(ref))
+
+    def test_indices_single_definition(self):
+        """bitlinear.with_tl_indices delegates to the one canonical
+        tl_indices (core.tl_matmul) — including stacked weights."""
+        _, _, _, wp = _inputs(2, 64, 32, seed=21)
+        node = {"wp": wp, "scale": jnp.float32(0.1)}
+        got = BL.with_tl_indices(node)["w_idx"]
+        np.testing.assert_array_equal(np.array(got),
+                                      np.array(TL.tl_indices(wp)))
+        stacked = jnp.stack([wp, wp])
+        idx = TL.tl_indices(stacked)
+        assert idx.shape == (2,) + got.shape
+        np.testing.assert_array_equal(np.array(idx[0]), np.array(got))
+
+    def test_with_tl_tree_idempotent(self):
+        _, _, _, wp = _inputs(2, 64, 32, seed=22)
+        tree = {"layer": {"q": {"wp": wp, "scale": jnp.float32(0.1)},
+                          "gamma": jnp.ones((8,))}}
+        once = BL.with_tl_tree(tree)
+        twice = BL.with_tl_tree(once)
+        assert once["layer"]["q"]["w_idx"] is twice["layer"]["q"]["w_idx"]
+        assert "w_idx" not in tree["layer"]["q"]  # input untouched
+
+
+class TestOnlineTablePrecompute:
+    """The prologue's fused table build (the paper's online precomputation)."""
+
+    @pytest.mark.parametrize("n", [64, 65, 67])  # n % 3 = 1, 2, 0 coverage
+    def test_tables_tap_leaves_norm_quant_bit_identical(self, n):
+        x = jax.random.normal(jax.random.PRNGKey(0), (9, n), jnp.bfloat16)
+        gamma = jax.random.normal(jax.random.PRNGKey(1), (n,))
+        for impl in ("xla", "kernel"):
+            i8a, sa = nq_ops.norm_quant(x, gamma, impl=impl)
+            i8b, sb, tab = nq_ops.norm_quant_tables(x, gamma, impl=impl)
+            np.testing.assert_array_equal(np.array(i8a), np.array(i8b))
+            np.testing.assert_array_equal(np.array(sa), np.array(sb))
+            t = (n + 2) // 3
+            np.testing.assert_array_equal(
+                np.array(tab), np.array(TL.build_tables(i8b, t=t)),
+                err_msg=impl)
+
+    def test_ref_is_norm_quant_plus_build_tables(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (3, 4, 70))
+        gamma = jax.random.normal(jax.random.PRNGKey(3), (70,))
+        i8, s, tab = nq_ref.norm_quant_tables(x, gamma)
+        i8r, sr = nq_ref.norm_quant(x, gamma)
+        np.testing.assert_array_equal(np.array(i8), np.array(i8r))
+        np.testing.assert_array_equal(np.array(s), np.array(sr))
+        np.testing.assert_array_equal(
+            np.array(tab), np.array(TL.build_tables(i8r, t=(70 + 2) // 3)))
+
+    def test_tables_fed_matmul_equals_int8_fed(self):
+        m, n, k = 6, 67, 96
+        x, xs, w_t, wp = _inputs(m, n, k, seed=31)
+        w_idx = TL.tl_indices(wp)
+        ws = jnp.float32(0.02)
+        tabs = TL.build_tables(x, t=w_idx.shape[0])
+        a = tl_ops.tl_matmul(x, xs, w_idx, ws, impl="kernel")
+        b = tl_ops.tl_matmul(None, xs, w_idx, ws, tables=tabs, impl="kernel")
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+    def test_tables_fed_swiglu_equals_int8_fed(self):
+        m, n, k = 6, 67, 96
+        x, xs, _, wgp = _inputs(m, n, k, seed=32)
+        _, _, _, wup = _inputs(m, n, k, seed=33)
+        gi, ui = TL.tl_indices(wgp), TL.tl_indices(wup)
+        ws = jnp.float32(0.02)
+        tabs = TL.build_tables(x, t=gi.shape[0])
+        a = tl_ops.tl_swiglu(x, xs, gi, ws, ui, ws, impl="kernel")
+        b = tl_ops.tl_swiglu(None, xs, gi, ws, ui, ws, tables=tabs,
+                             impl="kernel")
+        np.testing.assert_array_equal(np.array(a[0]), np.array(b[0]))
+        np.testing.assert_array_equal(np.array(a[1]), np.array(b[1]))
+
+    @given(st.integers(1, 24), st.integers(2, 130), st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_property_fused_precompute_equals_unfused(self, m, n, seed):
+        k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+        x = (jax.random.normal(k0, (m, n)) * 3).astype(jnp.bfloat16)
+        gamma = jax.random.normal(k1, (n,))
+        i8k, sk, tabk = nq_ops.norm_quant_tables(x, gamma, impl="kernel")
+        i8p, sp = nq_ops.norm_quant(x, gamma, impl="kernel")
+        np.testing.assert_array_equal(np.array(i8k), np.array(i8p))
+        np.testing.assert_array_equal(np.array(sk), np.array(sp))
+        np.testing.assert_array_equal(
+            np.array(tabk), np.array(TL.build_tables(i8k, t=(n + 2) // 3)))
+
+
+class TestAutotuner:
+    def test_shape_key_is_order_invariant(self):
+        assert AT.shape_key(m=8, n=64, k=128) == AT.shape_key(k=128, n=64, m=8)
+        assert AT.shape_key(m=8, n=64, k=128) == "k128-m8-n64"
+
+    def test_best_falls_back_to_default(self):
+        assert AT.best("ternary_matmul", "k1-m1-n1", {"bm": 64}) == {"bm": 64}
+        assert AT.choose_engine(1, 1, 1) is None
+
+    def test_cache_round_trip(self, tmp_path):
+        """persist → reload → identical dispatch (knobs AND engine winners)."""
+        path = tmp_path / "rt.json"
+        AT.set_cache_path(path)
+        AT.record("ternary_matmul", AT.shape_key(m=8, n=64, k=128),
+                  {"bm": 8, "bk": 128}, 12.5)
+        winner = AT.record_engine(8, 64, 128, {"tl": 10.0, "packed": 20.0})
+        assert winner == "tl"
+        before = (AT.best("ternary_matmul", AT.shape_key(m=8, n=64, k=128),
+                          {"bm": 1, "bk": 1}),
+                  AT.choose_engine(8, 64, 128))
+        assert path.exists()
+        AT.set_cache_path(path)  # drop in-memory store, reload from disk
+        after = (AT.best("ternary_matmul", AT.shape_key(m=8, n=64, k=128),
+                         {"bm": 1, "bk": 1}),
+                 AT.choose_engine(8, 64, 128))
+        assert before == after == ({"bm": 8, "bk": 128}, "tl")
+
+    def test_tune_sweeps_then_caches(self, tmp_path):
+        AT.set_cache_path(tmp_path / "tune.json")
+        shape = {"m": 4, "n": 64, "k": 128}
+        r1 = AT.tune("ternary_matmul", shape, reps=1)
+        assert r1["source"] == "sweep" and "bk" in r1["knobs"]
+        r2 = AT.tune("ternary_matmul", shape, reps=1)
+        assert r2["source"] == "cache" and r2["knobs"] == r1["knobs"]
+
+    def test_tuned_knobs_do_not_change_results(self, tmp_path):
+        """Whatever block sizes the tuner picks, outputs are bit-identical —
+        blocking is a pure perf knob."""
+        m, n, k = 9, 64, 256
+        x, xs, w_t, wp = _inputs(m, n, k, seed=41)
+        ws = jnp.float32(0.02)
+        base = tm_ops.ternary_matmul(x, xs, wp, ws)
+        AT.record("ternary_matmul", AT.shape_key(m=m, n=n, k=k),
+                  {"bm": 8, "bk": 256}, 1.0)
+        tuned = tm_ops.ternary_matmul(x, xs, wp, ws)
+        np.testing.assert_array_equal(np.array(base), np.array(tuned))
+
+
+class TestEngineDispatch:
+    def _node(self, n=64, k=32, seed=51, with_idx=True):
+        _, _, _, wp = _inputs(2, n, k, seed=seed)
+        node = {"wp": wp, "scale": jnp.float32(0.1)}
+        return BL.with_tl_indices(node) if with_idx else node
+
+    def test_forced_and_pinned(self):
+        node = self._node()
+        assert BL.resolve_engine(node, 4, use_kernel="tl") == "tl"
+        assert BL.resolve_engine(node, 4, use_kernel="packed") == "packed"
+
+    def test_auto_needs_measurement_and_indices(self):
+        node = self._node()
+        plain = self._node(with_idx=False)
+        n, k = 64, 32
+        # unmeasured -> packed (zero-state behavior is the old path)
+        assert BL.resolve_engine(node, 4, use_kernel="auto") == "packed"
+        AT.record_engine(4, n, k, {"tl": 1.0, "packed": 2.0})
+        assert BL.resolve_engine(node, 4, use_kernel="auto") == "tl"
+        # no precomputed w_idx -> packed even when measured tl-fastest
+        assert BL.resolve_engine(plain, 4, use_kernel="auto") == "packed"
+        # measured packed-fastest -> packed
+        AT.record_engine(4, n, k, {"tl": 3.0, "packed": 2.0})
+        assert BL.resolve_engine(node, 4, use_kernel="auto") == "packed"
+
+    def test_apply_tl_matches_packed_apply(self):
+        node = self._node(n=64, k=48, seed=52)
+        x = jax.random.normal(jax.random.PRNGKey(53), (3, 64), jnp.bfloat16)
+        a = BL.apply(node, x, mode="packed", use_kernel="packed")
+        b = BL.apply(node, x, mode="packed", use_kernel="tl")
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+class TestServingBitIdentity:
+    """matmul_engine='tl' end to end ≡ 'packed' — greedy tokens and logits."""
+
+    def _setup(self):
+        cfg = get_config("tellme-0.7b", smoke=True)
+        specs = Tr.param_specs(cfg)
+        params = PR.init_params(specs, jax.random.PRNGKey(0))
+        return cfg, Tr.pack_tree(params, specs)
+
+    def test_forward_logits_bit_identical(self):
+        cfg, packed = self._setup()
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  cfg.vocab_size)
+        cfg_t = dataclasses.replace(cfg, matmul_engine="tl")
+        lt, _, _ = Tr.forward(BL.with_tl_tree(packed), {"tokens": toks},
+                              cfg_t, None, mode="packed", fused=True)
+        cfg_p = dataclasses.replace(cfg, matmul_engine="packed")
+        lp, _, _ = Tr.forward(packed, {"tokens": toks}, cfg_p, None,
+                              mode="packed", fused=True)
+        np.testing.assert_array_equal(np.array(lt), np.array(lp))
+
+    def test_greedy_generate_bit_identical(self):
+        cfg, packed = self._setup()
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                                  cfg.vocab_size)
+        a = E.generate(packed, dataclasses.replace(cfg, matmul_engine="tl"),
+                       toks, steps=5, mode="packed", fused=True)
+        b = E.generate(packed, dataclasses.replace(cfg, matmul_engine="packed"),
+                       toks, steps=5, mode="packed", fused=True)
+        np.testing.assert_array_equal(np.array(a.tokens), np.array(b.tokens))
+        np.testing.assert_array_equal(np.array(a.prefill_logits),
+                                      np.array(b.prefill_logits))

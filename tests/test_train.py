@@ -80,8 +80,16 @@ class TestGradAccumulation:
         p1, _, m1 = step1(params, opt, batch)
         p4, _, m4 = step4(params, opt, batch)
         np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+        # Gradients accumulate in f32 either way, but microbatching reassociates
+        # the mean (sum of per-microbatch means vs one batch mean), so tiny
+        # gradients can flip sign between the two orders. AdamW's first step
+        # amplifies exactly those: with zero optimizer state the update is
+        # ±lr·(1-ε̃) regardless of gradient magnitude, so a sign flip on a
+        # near-zero gradient moves the param by up to ~2·lr = 2e-3. Tolerance
+        # must cover that first-step amplification, not f32 resolution.
         for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
-            np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-4, atol=2e-5)
+            np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-4,
+                                       atol=2.5e-3)
 
     def test_remat_does_not_change_loss(self):
         cfg = get_config("granite-8b", smoke=True)
