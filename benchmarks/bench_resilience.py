@@ -1,0 +1,186 @@
+"""Resilience layer: guard overhead, no-fault bit-identity, recovery latency.
+
+The resilience PR's acceptance evidence (DESIGN.md §resilience):
+
+1. **Guard overhead** — decode tok/s of a guards-on engine vs guards-off on
+   the same requests (warm; tokens-per-tick / min-of-medians tick time,
+   timing cycles interleaved across the two configs like the speculative
+   bench). The ISSUE bar: < 3% — the guard is a handful of elementwise
+   reductions riding the tick's existing packed transfer, not a second
+   forward or a second device_get.
+2. **No-fault bit-identity** — greedy emissions of the guards-on engine are
+   token-for-token identical to guards-off (the guard observes, never
+   perturbs). The bench *fails* (nonzero exit through run()'s caller) when
+   this breaks — it is an acceptance criterion, not a trend metric.
+3. **Recovery latency** — scheduler ticks from fault injection to the
+   engine serving normally again, per recovery path: NaN quarantine (slot
+   freed + next request admitted), kernel→XLA sticky fallback (tick retried
+   on the dense form), and preemption (victim re-prefilled from prompt +
+   emitted history and finished).
+
+Emits ``BENCH_resilience.json`` (CI uploads it) plus ``name,value,notes``
+rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import params as P
+from repro.models import transformer as Tr
+from repro.serving import engine as E
+from repro.serving import resilience as R
+
+
+def bench_config():
+    """Same mid-size dense config as the speculative bench: big enough that
+    the per-tick weight+cache stream dominates (so the guard's elementwise
+    reductions are measured against a realistic tick), small for CI CPU."""
+    return dataclasses.replace(
+        get_config("tellme-0.7b", smoke=True), dtype=jnp.float32,
+        d_model=512, n_layers=4, d_ff=2048, n_heads=8, n_kv_heads=8,
+        head_dim=64, vocab_size=512)
+
+
+def _prompts(cfg, n: int, length: int = 24):
+    return [jax.random.randint(jax.random.PRNGKey(100 + i), (length,), 0,
+                               cfg.vocab_size) for i in range(n)]
+
+
+def _serve(params, cfg, prompts, *, max_new, slots, max_len, **kw):
+    """Serve to completion; returns (tokens/tick, median tick s, engine,
+    generated streams). Median tick timing for co-tenant robustness — see
+    bench_speculative._serve."""
+    eng = E.ServingEngine(params, cfg, slots=slots, max_len=max_len,
+                          mode="eval", **kw)
+    reqs = [E.Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    ticks = []
+    while eng.queue or any(s is not None for s in eng.live):
+        t0 = time.perf_counter()
+        if not eng.step():
+            break
+        ticks.append(time.perf_counter() - t0)
+    total = sum(len(r.generated) for r in reqs)
+    med = sorted(ticks)[len(ticks) // 2]
+    return total / len(ticks), med, eng, [tuple(r.generated) for r in reqs]
+
+
+def _recovery_ticks(eng, fault_kinds: tuple[str, ...]) -> int | None:
+    """Ticks from the first fault event to the first post-fault tick on
+    which every live slot is healthy again (the event log carries tick
+    stamps; 'serving normally' = no further resilience events)."""
+    marks = [e["tick"] for e in eng.events if e["kind"] in fault_kinds]
+    if not marks:
+        return None
+    last = max(e["tick"] for e in eng.events)
+    return max(1, last - marks[0] + 1)
+
+
+def run(*, smoke: bool = True) -> list[str]:
+    rows: list[str] = []
+    data: dict = {"bench": "resilience", "smoke": smoke}
+    cfg = bench_config()
+    params = P.init_params(Tr.param_specs(cfg), jax.random.PRNGKey(0))
+    n_req, max_new = (4, 48) if smoke else (8, 128)
+    slots, max_len = 4, 1024  # the paper's 1k-row decode regime
+    prompts = _prompts(cfg, n_req)
+
+    def serve_once(**kw):
+        return _serve(params, cfg, prompts, max_new=max_new, slots=slots,
+                      max_len=max_len, **kw)
+
+    # --- guard overhead: pass 1 compiles + collects deterministic streams,
+    # passes 2-3 interleave timing cycles (min-of-medians per config)
+    stats = {}
+    for guards in (False, True):
+        tpt, med, _, gen = serve_once(guards=guards)
+        stats[guards] = {"tpt": tpt, "med": med, "gen": gen}
+    for _ in range(2):
+        for guards in stats:
+            _, med, _, _ = serve_once(guards=guards)
+            stats[guards]["med"] = min(stats[guards]["med"], med)
+
+    off = stats[False]["tpt"] / stats[False]["med"]
+    on = stats[True]["tpt"] / stats[True]["med"]
+    overhead = (off - on) / off
+    rows.append(f"resil_decode_tok_s_guards_off,{off:.1f},baseline engine, "
+                f"warm, {n_req} reqs x {max_new} tokens (CPU, bench config)")
+    rows.append(f"resil_decode_tok_s_guards_on,{on:.1f},numerics guards in "
+                f"the tick (one packed flag row, same single device_get)")
+    rows.append(f"resil_guard_overhead,{overhead * 100:.2f}%,"
+                f"bar: < 3% decode tok/s")
+    identical = stats[False]["gen"] == stats[True]["gen"]
+    rows.append(f"resil_guards_bit_identity,{'PASS' if identical else 'FAIL'},"
+                f"guards-on greedy emissions token-identical to guards-off")
+    data.update(decode_tok_s_guards_off=round(off, 2),
+                decode_tok_s_guards_on=round(on, 2),
+                guard_overhead_pct=round(overhead * 100, 3),
+                guards_bit_identical=identical)
+
+    # --- recovery latency per fault class (deterministic FaultPlans)
+    recov: dict[str, int | None] = {}
+    # NaN quarantine: slot poisoned mid-decode, freed, queue keeps draining
+    plan = R.FaultPlan(faults=(R.Fault(kind="nan", tick=6, slot=0),))
+    _, _, eng, _ = serve_once(fault_plan=plan)
+    recov["quarantine"] = _recovery_ticks(eng, ("quarantine",))
+    q = sum(1 for e in eng.events if e["kind"] == "quarantine")
+    rows.append(f"resil_quarantine_recovery_ticks,{recov['quarantine']},"
+                f"{q} slot(s) quarantined, co-batched slots kept serving")
+    # kernel failure: sticky XLA fallback retries the same tick
+    plan = R.FaultPlan(faults=(R.Fault(kind="tick_exception", tick=6),))
+    _, _, eng, gen = serve_once(fault_plan=plan)
+    recov["xla_fallback"] = _recovery_ticks(eng, ("xla_fallback",))
+    ok = (all(r == b for r, b in zip(gen, stats[False]["gen"]))
+          and eng.xla_fallback)
+    rows.append(f"resil_fallback_recovery_ticks,{recov['xla_fallback']},"
+                f"sticky kernel->XLA retry; streams intact: {ok}")
+    # preemption: a late high-priority arrival evicts + victim resumes
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=max_len, mode="eval")
+    for i in range(2):
+        eng.submit(E.Request(rid=i, prompt=prompts[i], max_new=max_new))
+    for _ in range(8):
+        eng.step()
+    hi = E.Request(rid=9, prompt=prompts[2], max_new=max_new)
+    hi.priority = 5
+    eng.submit(hi)
+    t0 = eng.tick_count
+    eng.run()
+    pre = [e for e in eng.events if e["kind"] == "preempt"]
+    recov["preempt"] = (eng.tick_count - t0) if pre else None
+    rows.append(f"resil_preempt_recovery_ticks,{recov['preempt']},ticks from "
+                f"eviction to full drain ({len(pre)} preemption(s), victim "
+                f"re-prefilled from prompt+history)")
+    data["recovery_ticks"] = recov
+
+    with open("BENCH_resilience.json", "w") as f:
+        json.dump(data, f, indent=2)
+    rows.append("resil_json,BENCH_resilience.json,trajectory artifact")
+    if not identical:
+        raise AssertionError(
+            "guards-on emissions diverged from guards-off — the guard must "
+            "be observation-only")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: fewer/shorter requests")
+    args = ap.parse_args(argv)
+    for r in run(smoke=args.smoke):
+        print(r)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,6 +22,7 @@ def main() -> int:
         ("speculative_decode", "benchmarks.bench_speculative"),
         ("tableV_compression", "benchmarks.bench_compression"),
         ("tl_engine", "benchmarks.bench_tl_engine"),
+        ("serving_resilience", "benchmarks.bench_resilience"),
     ]
     failures = 0
     print("name,value,notes")

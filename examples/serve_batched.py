@@ -22,6 +22,12 @@ inside the same fused chunk/decode writes — and dequantized inside the
 attention kernels, so the cache's HBM footprint (and the bandwidth-bound
 attention stream) roughly halves; the example prints the measured saving.
 
+Every request retires with a structured terminal status (DESIGN.md
+§resilience) — ``OK``, ``CANCELLED``, ``DEADLINE_EXCEEDED``,
+``CACHE_EXHAUSTED``, ``QUARANTINED`` or ``FAILED`` — printed in the
+per-request summary, and the admission queue can be bounded
+(``--queue-cap``) so overload is a rejected submit, not silent growth.
+
 Run:  PYTHONPATH=src python examples/serve_batched.py [--kv-cache-dtype int8]
 """
 
@@ -50,6 +56,13 @@ def main(argv=None):
     ap.add_argument("--spec-gamma", type=int, default=0,
                     help="draft tokens verified per tick (default: "
                          "cfg.spec_gamma)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bound the admission queue; extra submits are "
+                         "rejected with status FAILED/queue_full "
+                         "(0 = unbounded)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request wall-clock TTL; expired requests "
+                         "retire as DEADLINE_EXCEEDED (0 = none)")
     args = ap.parse_args(argv)
     cfg = get_config("tellme-0.7b", smoke=True)
     cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_cache_dtype)
@@ -63,12 +76,14 @@ def main(argv=None):
     reqs = [
         E.Request(rid=i, prompt=jax.random.randint(jax.random.PRNGKey(i),
                                                    (lens[i],), 0, cfg.vocab_size),
-                  max_new=4 + 2 * (i % 3))
+                  max_new=4 + 2 * (i % 3),
+                  deadline_s=args.deadline_s or None)
         for i in range(len(lens))
     ]
     eng = E.ServingEngine(params, cfg, slots=3, max_len=512, mode="packed",
                           speculative=args.speculative,
-                          spec_gamma=args.spec_gamma or None)
+                          spec_gamma=args.spec_gamma or None,
+                          queue_cap=args.queue_cap or None)
     got, ref16 = E.cache_savings(eng)
     print(f"kv_cache_dtype={cfg.kv_cache_dtype}: cache resident "
           f"{got/2**20:.2f} MiB (bf16 layout {ref16/2**20:.2f} MiB, "
@@ -95,7 +110,16 @@ def main(argv=None):
               f"accepted-tokens/s {total/dt:.1f}")
     for r in reqs:
         spec = f" accept={r.spec_acceptance:.2f}" if r.spec_drafted else ""
-        print(f"  req {r.rid}: prompt={len(r.prompt)} -> {r.generated}{spec}")
+        note = f" ({r.status_detail})" if r.status_detail else ""
+        print(f"  req {r.rid}: prompt={len(r.prompt)} "
+              f"[{r.status.name}{note}] -> {r.generated}{spec}")
+    stats = eng.stats()
+    print(f"statuses: {stats['statuses']} | "
+          f"preemptions={stats['preemptions']} "
+          f"quarantined={stats['quarantined']} "
+          f"stragglers={stats['straggler']['straggler_events']} "
+          f"attn_impl={stats['attn_impl']}"
+          f"{' (xla fallback)' if stats['xla_fallback'] else ''}")
 
 
 if __name__ == "__main__":

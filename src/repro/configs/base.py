@@ -86,6 +86,17 @@ class ModelConfig:
     spec_gamma: int = 4
     spec_draft: str = "ngram"  # DRAFTERS registry key (serving/speculative.py)
     spec_ngram_max: int = 3
+    # --- serving: resilience (DESIGN.md §resilience) -----------------------------
+    # Bounded admission queue (0 = unbounded; submit() rejects with FAILED /
+    # "queue_full" past the cap) and a default per-request TTL in seconds
+    # (0 = none; Request.deadline_s overrides). Speculative ticks auto-disable
+    # once >= spec_disable_after tokens have been drafted with an aggregate
+    # acceptance rate below spec_min_acceptance — collapsed acceptance means
+    # each γ+1-row verify forward is pure overhead.
+    admission_queue_cap: int = 0
+    request_ttl_s: float = 0.0
+    spec_min_acceptance: float = 0.05
+    spec_disable_after: int = 64
     # --- numerics ----------------------------------------------------------------
     norm_eps: float = 1e-5
     rope_theta: float = 10000.0

@@ -76,17 +76,50 @@ def set_cache_path(path: str | os.PathLike | None) -> None:
     _CACHE_PATH = Path(path) if path is not None else None
 
 
+def _valid_kernels(raw) -> dict[str, dict[str, dict]] | None:
+    """The ``kernels`` table from a parsed cache payload, or None when the
+    payload is structurally unusable (wrong version, non-dict levels, entries
+    without ``knobs``). Anything short of the documented two-level
+    ``{kernel: {shape_key: {"knobs": {...}}}}`` shape is rejected whole —
+    ``best``/``lookup`` run at trace time and must never hit a surprise."""
+    if not isinstance(raw, dict) or raw.get("version") != _VERSION:
+        return None
+    kernels = raw.get("kernels", {})
+    if not isinstance(kernels, dict):
+        return None
+    for entries in kernels.values():
+        if not isinstance(entries, dict):
+            return None
+        for entry in entries.values():
+            if not isinstance(entry, dict) or not isinstance(
+                    entry.get("knobs"), dict):
+                return None
+    return kernels
+
+
 def _store() -> dict[str, dict[str, dict]]:
     global _CACHE
     if _CACHE is None:
         path = _CACHE_PATH or cache_path()
         _CACHE = {}
         try:
-            raw = json.loads(path.read_text())
-            if raw.get("version") == _VERSION:
-                _CACHE = raw.get("kernels", {})
-        except (OSError, ValueError):
-            pass  # absent/corrupt cache == no tuned entries
+            text = path.read_text()
+        except OSError:
+            return _CACHE  # absent cache == no tuned entries
+        try:
+            kernels = _valid_kernels(json.loads(text))
+        except ValueError:
+            kernels = None  # truncated / non-JSON
+        if kernels is not None:
+            _CACHE = kernels
+        else:
+            # corrupted or version-mismatched cache: drop it and atomically
+            # rewrite a fresh empty payload so the next process doesn't
+            # re-parse the garbage; tuning proceeds from the heuristics.
+            try:
+                _save()
+            except OSError:
+                pass  # read-only cache dir: stay on in-memory defaults
     return _CACHE
 
 

@@ -13,7 +13,11 @@ Designed for the 1000+-node regime where *something is always failing*:
   step slower than ``threshold ×`` the EWMA is logged and counted. On real
   multi-host deployments the hook triggers workload re-balancing /
   hot-spare swap; here it is surfaced through ``StragglerMonitor.report()``
-  (and exercised in tests with synthetic delays).
+  (and exercised in tests with synthetic delays). The monitor is the shared
+  serving/training watchdog: ``ServingEngine.step()`` feeds it scheduler
+  tick times (slow ticks surface as ``straggler`` events in
+  ``ServingEngine.stats()``, DESIGN.md §resilience), the train loop feeds
+  it step times.
 * **Elastic restart** — on resume, the checkpoint re-shards onto the
   current mesh (checkpoint/manager.py), so a 512-chip job can continue on
   256 chips after losing a pod.

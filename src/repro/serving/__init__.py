@@ -11,4 +11,10 @@ from .engine import (  # noqa: F401
     prefill_bucketed,
 )
 from .engine import live_cache_state  # noqa: F401
+from .resilience import (  # noqa: F401
+    Fault,
+    FaultInjected,
+    FaultPlan,
+    Status,
+)
 from .speculative import accept_tokens, make_drafter, ngram_draft  # noqa: F401

@@ -52,7 +52,9 @@ tokens across slots — others silently stay on plain decode.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from functools import partial
 from typing import Any
 
@@ -62,6 +64,8 @@ import numpy as np
 
 from ..core import ternary
 from ..models import transformer as Tr
+from ..runtime import fault_tolerance as FT
+from . import resilience as R
 from . import speculative as Sp
 
 
@@ -403,6 +407,18 @@ class Request:
     max_new: int
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # --- lifecycle (DESIGN.md §resilience) ---------------------------------
+    # Every request ends in exactly one terminal status (resilience.Status);
+    # `done` stays the legacy "terminal" bool for existing callers.
+    status: R.Status = R.Status.PENDING
+    status_detail: str | None = None
+    priority: int = 0  # preemption: higher wins a slot from a lower
+    deadline_s: float | None = None  # TTL from submit (None: cfg.request_ttl_s)
+    submitted_at: float | None = None
+    finished_at: float | None = None
+    cancel_requested: bool = False
+    preemptions: int = 0  # times evicted + requeued for re-prefill
+    _seq: int = 0  # submission order (preemption tie-breaks, FIFO in priority)
     # speculative-decoding stats (0 unless served by a speculative engine):
     # drafts offered / drafts accepted across this request's verify ticks.
     spec_drafted: int = 0
@@ -412,6 +428,10 @@ class Request:
     def spec_acceptance(self) -> float:
         """Fraction of drafted tokens accepted (0.0 when never drafted)."""
         return self.spec_accepted / self.spec_drafted if self.spec_drafted else 0.0
+
+    def expired(self, now: float) -> bool:
+        return (self.deadline_s is not None and self.submitted_at is not None
+                and now - self.submitted_at > self.deadline_s)
 
 
 @dataclasses.dataclass
@@ -445,14 +465,35 @@ class ServingEngine:
     All per-slot decode state (current token, position, done flag, generated
     count, budget) lives on device; ``step()`` issues exactly one host
     transfer per scheduler tick — ``jax.device_get`` of one packed int32
-    array ([4, slots] fused tick, [6, slots] decode-only tick) — regardless
-    of slot count or tokens generated.
+    array ([4, slots] fused tick, [6, slots] decode-only tick, one extra
+    guard-flag row with ``guards`` on) — regardless of slot count or tokens
+    generated.
+
+    **Resilience** (DESIGN.md §resilience): every request ends in exactly one
+    terminal ``resilience.Status``; ``submit`` applies bounded-queue
+    backpressure (``queue_cap`` / ``cfg.admission_queue_cap``), requests
+    carry deadlines/TTL (``cfg.request_ttl_s``) and can be ``cancel()``ed
+    host-side; under cache pressure a strictly-higher-priority waiter
+    preempts the lowest-priority slot (frontier rewind + requeue for
+    re-prefill from prompt + emitted history). ``guards`` (default on) rides
+    in-tick finite/overflow checks on logits and freshly written quant
+    scales in the packed transfer; a flagged slot is quarantined without
+    touching co-batched slots. A raising tick flips a sticky kernel→XLA
+    ``attn_impl`` fallback; collapsed speculative acceptance auto-disables
+    verify ticks; ``step()`` never raises. A ``fault_plan``
+    (``resilience.FaultPlan``) drives deterministic chaos injection for
+    tests/benchmarks — with no plan the tick jits carry no injection
+    operands at all.
     """
 
     def __init__(self, params, cfg, *, slots: int = 8, max_len: int = 2048,
                  mode: str = "eval", eos_id: int = -1, attn_impl: str = "auto",
                  prefill: str = "auto", fused: bool | None = None,
-                 speculative: bool = False, spec_gamma: int | None = None):
+                 speculative: bool = False, spec_gamma: int | None = None,
+                 queue_cap: int | None = None,
+                 fault_plan: R.FaultPlan | None = None, guards: bool = True,
+                 clock=time.monotonic,
+                 straggler: FT.StragglerMonitor | None = None):
         self.params = _engine_params(params, cfg, mode)
         self.cfg, self.mode = cfg, mode
         self.fused = fused  # int8-resident NQD pipeline (None: on iff packed)
@@ -495,7 +536,6 @@ class ServingEngine:
         self._pending_first: set[int] = set()  # legacy path: unrecorded prefill token
         self._fused: dict[int, Any] = {}  # chunk size -> fused tick jit
         self._serve = _serve_step_cached(cfg, mode, attn_impl, fused)
-        self._advance = _advance_cached(eos_id, max_len)
         # Speculative decode (DESIGN.md §speculative): chunked dense-family
         # engines only — recurrent state cannot rewind a frontier pointer and
         # MoE capacity routing couples tokens across slots, so those families
@@ -514,9 +554,157 @@ class ServingEngine:
         self._spec: dict[int | None, Any] = {}  # chunk (or None) -> spec tick jit
         self.spec_drafted_total = 0
         self.spec_accepted_total = 0
+        # -- resilience layer (DESIGN.md §resilience) -------------------------
+        self.queue_cap = (int(cfg.admission_queue_cap) if queue_cap is None
+                          else int(queue_cap))  # 0 = unbounded
+        self.guards = bool(guards)  # numerics quarantine flag row in packed
+        self._clock = clock
+        self.straggler = straggler or FT.StragglerMonitor()
+        self.tick_count = 0
+        self.events: list[dict] = []  # (kind, tick, ...) resilience events
+        self.status_counts: collections.Counter = collections.Counter()
+        self.xla_fallback = False  # sticky kernel→XLA impl fallback tripped
+        self._seq = 0  # submission counter (priority FIFO / preemption ties)
+        self._fault_plan = fault_plan
+        # static flag: with no plan the tick jits compile WITHOUT any
+        # injection operand — production graphs are byte-identical to a
+        # fault-capable engine that never fires (where(False, ...) no-ops)
+        self._debug_faults = fault_plan is not None
+        self._advance = _advance_cached(cfg, eos_id, max_len, self.guards,
+                                        self._debug_faults)
 
-    def submit(self, req: Request):
+    # -- lifecycle ----------------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Enqueue ``req``; returns False (terminal ``FAILED``,
+        ``status_detail="queue_full"``) when the bounded admission queue is
+        full — backpressure instead of silent growth. A rejected request may
+        be resubmitted later: a successful submit resets its lifecycle."""
+        if self.queue_cap and len(self.queue) >= self.queue_cap:
+            req.done = True
+            req.status = R.Status.FAILED
+            req.status_detail = "queue_full"
+            req.finished_at = self._clock()
+            self.status_counts[R.Status.FAILED] += 1
+            self._event("admission_reject", rid=req.rid, detail="queue_full")
+            return False
+        req.done = False
+        req.status = R.Status.QUEUED
+        req.status_detail = None
+        if req.submitted_at is None:
+            req.submitted_at = self._clock()
+        if req.deadline_s is None and self.cfg.request_ttl_s > 0:
+            req.deadline_s = float(self.cfg.request_ttl_s)
+        req._seq = self._seq
+        self._seq += 1
         self.queue.append(req)
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """Host-side cancellation: mark the request (queued or running);
+        the next ``step()`` retires it with status ``CANCELLED``."""
+        for req in self.queue + [r for r in self.live if r is not None]:
+            if req.rid == rid:
+                req.cancel_requested = True
+                return True
+        return False
+
+    def _event(self, kind: str, **detail):
+        self.events.append({"kind": kind, "tick": self.tick_count, **detail})
+
+    def _finish(self, slot: int | None, req: Request, status: R.Status,
+                detail: str | None = None):
+        """The one retirement bookkeeper: stamp the terminal status and (for
+        a slotted request) free the slot. Device-side state needs no
+        cleanup — rows past the next occupant's writes are dead by the
+        rollback invariant, and dec_active/plan masks are host-derived."""
+        req.done = True
+        req.status = status
+        if detail is not None:
+            req.status_detail = detail
+        req.finished_at = self._clock()
+        self.status_counts[status] += 1
+        if slot is not None:
+            self.live[slot] = None
+            self._plan[slot] = None
+            self._pending_first.discard(slot)
+
+    def _terminal_status(self, req: Request) -> R.Status:
+        """Why a device-side retirement (`_retire`) fired: EOS or budget are
+        normal completions (``OK``); otherwise the frontier hit the cache
+        ceiling (``CACHE_EXHAUSTED``) — derivable host-side from the emitted
+        stream, no extra transfer."""
+        if req.generated and req.generated[-1] == self.eos_id:
+            return R.Status.OK
+        if len(req.generated) >= req.max_new:
+            return R.Status.OK
+        return R.Status.CACHE_EXHAUSTED
+
+    def _quarantine(self, slot: int, req: Request, flag: int):
+        """Numerics guard tripped on ``slot``: discard this tick's emissions
+        for the slot, terminate the request, free the slot. Co-batched slots
+        are untouched — their rows never read the poisoned slot's cache."""
+        self._event("quarantine", rid=req.rid, slot=slot, flag=int(flag))
+        self._finish(slot, req, R.Status.QUARANTINED,
+                     detail=f"guard_flag={int(flag)}")
+
+    def _expire_and_cancel(self, now: float):
+        """Deadline/TTL expiry + host cancellation, queue and slots both."""
+        keep = []
+        for req in self.queue:
+            if req.cancel_requested:
+                self._finish(None, req, R.Status.CANCELLED)
+            elif req.expired(now):
+                self._finish(None, req, R.Status.DEADLINE_EXCEEDED)
+            else:
+                keep.append(req)
+        if len(keep) != len(self.queue):
+            self.queue = keep
+        for slot in range(self.slots):
+            req = self.live[slot]
+            if req is None:
+                continue
+            if req.cancel_requested:
+                self._finish(slot, req, R.Status.CANCELLED)
+            elif req.expired(now):
+                self._finish(slot, req, R.Status.DEADLINE_EXCEEDED)
+
+    def _fail_all_live(self, detail: str):
+        """Last-resort containment: a tick failed even on the XLA fallback
+        (or invalidated its donated buffers). Every live request terminates
+        ``FAILED`` (emitted tokens kept) and the device state is
+        re-initialized so the engine keeps serving the queue."""
+        self._event("tick_failure", detail=detail)
+        for slot in range(self.slots):
+            req = self.live[slot]
+            if req is not None:
+                self._finish(slot, req, R.Status.FAILED, detail=detail)
+        self.caches = init_caches(self.cfg, self.slots, self.cache_len,
+                                  dtype=self.cfg.dtype)
+        self.pos = jnp.zeros((self.slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((self.slots,), jnp.int32)
+        self.done = jnp.zeros((self.slots,), bool)
+        self.gen_count = jnp.zeros((self.slots,), jnp.int32)
+        self.max_new_arr = jnp.zeros((self.slots,), jnp.int32)
+        if self.hist is not None:
+            self.hist = jnp.zeros((self.slots, self.cache_len), jnp.int32)
+
+    def stats(self) -> dict:
+        """Engine-level resilience/serving stats for CLIs and tests."""
+        return {
+            "ticks": self.tick_count,
+            "statuses": {s.name: n for s, n in sorted(
+                self.status_counts.items(), key=lambda kv: kv[0].name)},
+            "events": [dict(e) for e in self.events],
+            "straggler": self.straggler.report(),
+            "attn_impl": self.attn_impl,
+            "xla_fallback": self.xla_fallback,
+            "speculative": self.speculative,
+            "spec_acceptance": self.spec_acceptance_rate,
+            "preemptions": sum(1 for e in self.events
+                               if e["kind"] == "preempt"),
+            "quarantined": self.status_counts.get(R.Status.QUARANTINED, 0),
+        }
 
     @property
     def prefilling_slots(self) -> int:
@@ -545,15 +733,33 @@ class ServingEngine:
     # -- admission ----------------------------------------------------------
 
     def _admit(self, slot: int, req: Request) -> bool:
-        """Admit ``req`` into ``slot``; returns False (request rejected, marked
-        done with no output) when the prompt cannot fit the cache — one
-        oversized request must not crash the scheduler and strand the rest."""
+        """Admit ``req`` into ``slot``; returns False (request rejected with a
+        terminal status and no further output) when the prompt cannot fit the
+        cache — one oversized request must not crash the scheduler and strand
+        the rest. A preempted request (``generated`` non-empty) re-prefills
+        from its prompt + emitted history with the remaining budget, so its
+        continuation is exactly what an uncontended run would have decoded."""
         prompt = np.asarray(req.prompt)
+        remaining = req.max_new
+        if req.generated:  # resume after preemption: prompt + emitted history
+            prompt = np.concatenate(
+                [prompt, np.asarray(req.generated, dtype=prompt.dtype)])
+            remaining = req.max_new - len(req.generated)
         if prompt.shape[0] == 0 or prompt.shape[0] >= self.max_len:
-            req.done = True
+            # empty/oversized prompts are admission failures; a *resumed*
+            # request that no longer fits simply ran out of cache mid-flight
+            status = (R.Status.CACHE_EXHAUSTED if req.generated
+                      else R.Status.FAILED)
+            self._finish(None, req, status,
+                         detail=None if req.generated else "bad_prompt")
             return False
+        if prompt.shape[0] >= self.max_len - 1 and req.generated:
+            # one row of headroom is the decode loop's own ceiling predicate
+            self._finish(None, req, R.Status.CACHE_EXHAUSTED)
+            return False
+        req.status = R.Status.RUNNING
         if self.prefill == "legacy":
-            self._prefill_slot(slot, req)
+            self._prefill_slot(slot, req, prompt, remaining)
             return True
         chunks = chunk_schedule(prompt.shape[0], self.chunk_sizes)
         padded = np.zeros((sum(chunks),), np.int64)
@@ -561,18 +767,73 @@ class ServingEngine:
         self._plan[slot] = _PrefillPlan(tokens=padded, chunks=chunks, ci=0,
                                         off=0, true_len=prompt.shape[0])
         self.live[slot] = req
-        self.max_new_arr = self.max_new_arr.at[slot].set(req.max_new)
+        self.max_new_arr = self.max_new_arr.at[slot].set(remaining)
         if self.speculative:  # seed the drafter's history with the prompt
             self.hist = self.hist.at[slot, : prompt.shape[0]].set(
                 jnp.asarray(prompt, jnp.int32))
         return True
 
-    def _prefill_slot(self, slot: int, req: Request):
+    def _pop_queued(self) -> Request:
+        """Highest-priority waiter, FIFO within a priority level."""
+        i = max(range(len(self.queue)),
+                key=lambda j: (self.queue[j].priority, -self.queue[j]._seq))
+        return self.queue.pop(i)
+
+    def _preempt(self, slot: int):
+        """Evict ``slot``'s request and requeue it for re-prefill from
+        prompt + emitted history. The eviction itself is free: the moment the
+        host stops referencing the slot, its cache rows are past every live
+        frontier — dead by the rollback invariant (DESIGN.md §speculative) —
+        and the next occupant's chunk writes overwrite them."""
+        req = self.live[slot]
+        self._event("preempt", rid=req.rid, slot=slot,
+                    priority=req.priority, emitted=len(req.generated))
+        req.preemptions += 1
+        req.status = R.Status.QUEUED
+        self.live[slot] = None
+        self._plan[slot] = None
+        self._pending_first.discard(slot)
+        req._seq = self._seq  # requeued at the back of its priority level
+        self._seq += 1
+        self.queue.append(req)
+
+    def _admission(self):
+        """Fill free slots from the queue (highest priority first), then —
+        under cache pressure (all slots occupied, waiters remain) — let a
+        strictly-higher-priority waiter preempt the lowest-priority slot
+        (tie: most recently submitted). ``<=`` never preempts, so a requeued
+        victim cannot thrash its own replacement."""
+        for slot in range(self.slots):
+            while self.live[slot] is None and self.queue:
+                if self._admit(slot, self._pop_queued()):
+                    break  # rejected requests don't consume the slot
+        rounds = 0
+        while self.queue and rounds < self.slots:
+            waiter = max(self.queue, key=lambda r: (r.priority, -r._seq))
+            live = [s for s in range(self.slots) if self.live[s] is not None]
+            if not live:
+                break
+            victim = min(live, key=lambda s: (self.live[s].priority,
+                                              -self.live[s]._seq))
+            if waiter.priority <= self.live[victim].priority:
+                break
+            rounds += 1
+            self._preempt(victim)
+            self.queue.remove(waiter)
+            while not self._admit(victim, waiter) and self.queue:
+                waiter = self._pop_queued()  # refill the freed slot
+
+    def _prefill_slot(self, slot: int, req: Request,
+                      prompt: np.ndarray | None = None,
+                      remaining: int | None = None):
         # Legacy per-request prefill (non-attn mixer families): bucketed to
         # the chunk-size grid so compiles are per bucket, then the per-request
         # caches are scattered into the slot. The chunked path never runs
-        # this — its chunks land in the batched cache directly.
-        prompt = jnp.asarray(req.prompt)
+        # this — its chunks land in the batched cache directly. ``prompt`` /
+        # ``remaining`` carry a preempted request's resume state (prompt +
+        # emitted history, budget left) — None means a fresh admission.
+        prompt = jnp.asarray(req.prompt if prompt is None else prompt)
+        remaining = req.max_new if remaining is None else remaining
         logits, caches = prefill_bucketed(self.params, self.cfg, prompt[None],
                                           mode=self.mode, fused=self.fused)
         caches = fit_caches(caches, self.cfg, self.cache_len)
@@ -590,19 +851,19 @@ class ServingEngine:
             return dst.at[tuple(idx)].set(src.astype(dst.dtype))
 
         self.caches = rec(self.caches, caches)
-        plen = int(req.prompt.shape[0])
+        plen = int(prompt.shape[0])
         first = jnp.argmax(logits[0]).astype(jnp.int32)
         # the prefill token goes through the same retirement predicate as the
         # chunked path's fin_done (device-side, no sync): max_new=1 requests
         # emit exactly one token and an EOS first token stops the slot.
         done0 = ((first == self.eos_id)
-                 | (req.max_new <= 1)
+                 | (remaining <= 1)
                  | (plen >= self.max_len - 1))
         self.pos = self.pos.at[slot].set(plen)
         self.cur_tok = self.cur_tok.at[slot].set(first)
         self.done = self.done.at[slot].set(done0)
         self.gen_count = self.gen_count.at[slot].set(1)
-        self.max_new_arr = self.max_new_arr.at[slot].set(req.max_new)
+        self.max_new_arr = self.max_new_arr.at[slot].set(remaining)
         self.live[slot] = req
         self._pending_first.add(slot)
 
@@ -644,11 +905,33 @@ class ServingEngine:
                 self.cfg, chunk, mode=self.mode, attn_impl=self.attn_impl,
                 eos_id=self.eos_id, max_len=self.max_len,
                 cache_len=self.cache_len, trash_base=self.trash_base,
-                fused=self.fused)
+                fused=self.fused, guards=self.guards,
+                debug_faults=self._debug_faults)
             self._fused[chunk] = fn
         return fn
 
+    def _maybe_raise_tick_fault(self):
+        """Injected ``tick_exception``: emulate a failing Pallas dispatch.
+        Fires only while the engine would still dispatch kernels
+        (``attn_impl != "xla"``) and *before* the jitted call, so donated
+        buffers survive and the sticky XLA fallback can retry the tick."""
+        if self._fault_plan is None or self.attn_impl == "xla":
+            return
+        if self._fault_plan.at(self.tick_count, "tick_exception"):
+            raise R.FaultInjected(
+                f"injected tick exception @ tick {self.tick_count}")
+
+    def _fault_masks(self, *kinds: str):
+        """Traced injection operands for this tick ([] when no plan): one
+        [slots] bool mask per kind. All-False masks make the injected
+        ``where`` selects bitwise no-ops — no recompile, no drift."""
+        if not self._debug_faults:
+            return []
+        return [jnp.asarray(self._fault_plan.slot_mask(
+            self.tick_count, k, self.slots)) for k in kinds]
+
     def _fused_tick(self, prefilling: list) -> bool:
+        self._maybe_raise_tick_fault()
         slots = self.slots
         (chunk, selected, chunk_tok, chunk_off, finishing, last_row,
          fin_pos) = self._plan_chunks(prefilling, self.cfg.prefill_chunk_budget)
@@ -663,12 +946,17 @@ class ServingEngine:
             self.gen_count, self.max_new_arr, jnp.asarray(dec_active),
             jnp.asarray(chunk_tok), jnp.asarray(chunk_off),
             jnp.asarray(finishing), jnp.asarray(last_row),
-            jnp.asarray(fin_pos))
-        tok, _, done_, _ = jax.device_get(packed)  # the tick's one transfer
+            jnp.asarray(fin_pos), *self._fault_masks("nan"))
+        state = jax.device_get(packed)  # the tick's one transfer
+        tok, _, done_, _ = state[:4]
+        guard = state[4] if self.guards else np.zeros((slots,), np.int64)
 
         for s in range(slots):
             req = self.live[s]
             if req is None:
+                continue
+            if guard[s]:  # numerics guard tripped: discard this tick's output
+                self._quarantine(s, req, guard[s])
                 continue
             if finishing[s]:
                 self._plan[s] = None
@@ -676,8 +964,7 @@ class ServingEngine:
                 if self.speculative:  # keep the drafter history current
                     self.hist = self.hist.at[s, int(fin_pos[s])].set(int(tok[s]))
                 if done_[s]:
-                    req.done = True
-                    self.live[s] = None
+                    self._finish(s, req, self._terminal_status(req))
             elif s in selected:  # mid-prefill: advance the plan
                 p = self._plan[s]
                 p.off += chunk
@@ -685,8 +972,7 @@ class ServingEngine:
             elif dec_active[s]:
                 req.generated.append(int(tok[s]))
                 if done_[s]:
-                    req.done = True
-                    self.live[s] = None
+                    self._finish(s, req, self._terminal_status(req))
         return True
 
     # -- the speculative verify (+ optional prefill-chunk) tick ---------------
@@ -698,7 +984,8 @@ class ServingEngine:
                 self.cfg, self.spec_gamma, chunk, mode=self.mode,
                 attn_impl=self.attn_impl, eos_id=self.eos_id,
                 max_len=self.max_len, cache_len=self.cache_len,
-                trash_base=self.trash_base, fused=self.fused)
+                trash_base=self.trash_base, fused=self.fused,
+                guards=self.guards, debug_faults=self._debug_faults)
             self._spec[chunk] = fn
         return fn
 
@@ -707,6 +994,7 @@ class ServingEngine:
         decoding slot and (when ``prefilling`` is non-empty) append one prompt
         chunk per selected prefilling slot — the speculative twin of
         ``_fused_tick``/``_decode_tick``, still one host transfer."""
+        self._maybe_raise_tick_fault()
         slots, gamma = self.slots, self.spec_gamma
         dec_active = np.array(
             [self.live[s] is not None and self._plan[s] is None
@@ -735,21 +1023,26 @@ class ServingEngine:
             self.done, self.gen_count, self.max_new_arr,
             jnp.asarray(dec_active), jnp.asarray(chunk_tok),
             jnp.asarray(chunk_off), jnp.asarray(finishing),
-            jnp.asarray(last_row), jnp.asarray(fin_pos))
+            jnp.asarray(last_row), jnp.asarray(fin_pos),
+            *self._fault_masks("nan", "drafter_garbage"))
         state = jax.device_get(packed)  # the tick's one transfer
         toks, n_out = state[: gamma + 1], state[gamma + 1]
         drafted_, done_ = state[gamma + 2], state[gamma + 3]
+        guard = (state[gamma + 4] if self.guards
+                 else np.zeros((slots,), np.int64))
 
         for s in range(slots):
             req = self.live[s]
             if req is None:
                 continue
+            if guard[s]:  # numerics guard tripped: discard this tick's output
+                self._quarantine(s, req, guard[s])
+                continue
             if finishing[s]:
                 self._plan[s] = None
                 req.generated.append(int(toks[0, s]))
                 if done_[s]:
-                    req.done = True
-                    self.live[s] = None
+                    self._finish(s, req, self._terminal_status(req))
             elif s in selected:  # mid-prefill: advance the plan
                 p = self._plan[s]
                 p.off += chunk
@@ -762,48 +1055,56 @@ class ServingEngine:
                 self.spec_drafted_total += d
                 self.spec_accepted_total += min(n - 1, d)
                 if done_[s]:
-                    req.done = True
-                    self.live[s] = None
+                    self._finish(s, req, self._terminal_status(req))
+        # acceptance-collapse watchdog: once enough drafts have been offered
+        # to judge the workload, a collapsed acceptance rate means verify
+        # ticks are pure overhead (γ+1-row forwards emitting ~1 token) —
+        # stick to plain decode for the rest of this engine's life.
+        if (self.speculative and self.cfg.spec_disable_after > 0
+                and self.spec_drafted_total >= self.cfg.spec_disable_after
+                and self.spec_acceptance_rate < self.cfg.spec_min_acceptance):
+            self.speculative = False
+            self._event("spec_disabled",
+                        acceptance=round(self.spec_acceptance_rate, 4),
+                        drafted=self.spec_drafted_total)
         return True
 
     def _decode_tick(self) -> bool:
+        self._maybe_raise_tick_fault()
         active = jnp.array([r is not None for r in self.live])
         first_tok = self.cur_tok  # includes tokens from legacy prefills this tick
         logits, self.caches = self._serve(
             self.params, {"tokens": self.cur_tok[:, None]}, self.caches, self.pos
         )
+        extra = (self.caches,) if self.guards else ()
         (self.cur_tok, self.pos, self.done, self.gen_count, packed) = self._advance(
             logits, first_tok, self.pos, self.done, self.gen_count,
-            self.max_new_arr, active,
+            self.max_new_arr, active, *extra, *self._fault_masks("nan"),
         )
         state = jax.device_get(packed)  # the tick's single host transfer
-        first, nxt, _, done, _, entry_done = state
+        first, nxt, _, done, _, entry_done = state[:6]
+        guard = (state[6] if self.guards
+                 else np.zeros((self.slots,), np.int64))
         for slot, req in enumerate(self.live):
             if req is None:
+                continue
+            if guard[slot]:  # numerics guard tripped: discard this tick's output
+                self._quarantine(slot, req, guard[slot])
                 continue
             if slot in self._pending_first:
                 req.generated.append(int(first[slot]))
                 self._pending_first.discard(slot)
                 if entry_done[slot]:  # retired on its prefill token
-                    req.done = True
-                    self.live[slot] = None
+                    self._finish(slot, req, self._terminal_status(req))
                     continue
             req.generated.append(int(nxt[slot]))
             if done[slot]:
-                req.done = True
-                self.live[slot] = None
+                self._finish(slot, req, self._terminal_status(req))
         return True
 
-    def step(self):
-        """One scheduler tick: admit queued requests into free slots, then one
-        fused chunked-prefill + decode step (or a plain decode step when no
-        slot is mid-prefill). One host transfer either way."""
-        for slot in range(self.slots):
-            while self.live[slot] is None and self.queue:
-                if self._admit(slot, self.queue.pop(0)):
-                    break  # rejected requests don't consume the slot
-        if all(r is None for r in self.live):
-            return False
+    def _dispatch(self) -> bool:
+        """Route one tick to the right jit family (recomputed fresh so a
+        fallback retry sees post-quarantine/post-preemption slot state)."""
         prefilling = [s for s in range(self.slots) if self._plan[s] is not None]
         if self.speculative:
             decoding = any(self.live[s] is not None and self._plan[s] is None
@@ -819,14 +1120,84 @@ class ServingEngine:
             return self._fused_tick(prefilling)
         return self._decode_tick()
 
+    def _tick_fallback(self, exc: Exception) -> bool:
+        """Sticky kernel→XLA fallback: a raising tick (an injected Pallas
+        failure, or a real one) flips ``attn_impl`` to the dense XLA form,
+        rebuilds the tick jits, and retries the tick once. A tick that fails
+        even on the fallback — or whose failed jit already invalidated its
+        donated cache buffers — degrades to ``_fail_all_live`` so the engine
+        keeps serving the queue."""
+        detail = f"{type(exc).__name__}: {exc}"
+        if not self.xla_fallback and self.attn_impl != "xla":
+            self._event("xla_fallback", error=detail[:200])
+            self.xla_fallback = True
+            self.attn_impl = "xla"
+            self._fused = {}
+            self._spec = {}
+            self._serve = _serve_step_cached(self.cfg, self.mode, "xla",
+                                             self.fused)
+            leaves = jax.tree.leaves(self.caches)
+            if self.hist is not None:
+                leaves.append(self.hist)
+            if any(getattr(x, "is_deleted", lambda: False)() for x in leaves):
+                detail = "donated_buffers_invalidated: " + detail
+            else:
+                try:
+                    return self._dispatch()
+                except Exception as e2:  # noqa: BLE001
+                    detail = f"{type(e2).__name__}: {e2}"
+        self._fail_all_live(detail[:200])
+        return True
+
+    def step(self):
+        """One scheduler tick: expire/cancel, admit queued requests (highest
+        priority first, preempting under cache pressure), then one fused
+        chunked-prefill + decode step (or a plain decode / speculative-verify
+        step). One host transfer either way. ``step`` never raises — a
+        failing tick degrades through the sticky XLA fallback and, last,
+        ``FAILED`` retirements (DESIGN.md §resilience)."""
+        tick = self.tick_count
+        self._expire_and_cancel(self._clock())
+        if self._fault_plan is not None:
+            # cache_growth: the slot's cache cannot hold the request — the
+            # engine's graceful answer is a CACHE_EXHAUSTED retirement with
+            # every already-emitted token kept.
+            for f in self._fault_plan.at(tick, "cache_growth"):
+                for s in (range(self.slots) if f.slot is None else [f.slot]):
+                    if 0 <= s < self.slots and self.live[s] is not None:
+                        self._event("cache_growth_fault",
+                                    rid=self.live[s].rid, slot=s)
+                        self._finish(s, self.live[s], R.Status.CACHE_EXHAUSTED,
+                                     detail="fault_injected")
+        self._admission()
+        if all(r is None for r in self.live):
+            return False
+        t0 = time.perf_counter()
+        try:
+            if self._fault_plan is not None:
+                for f in self._fault_plan.at(tick, "slow_tick"):
+                    self._event("slow_tick_fault", duration_s=f.duration_s)
+                    time.sleep(f.duration_s)
+            try:
+                out = self._dispatch()
+            except Exception as exc:  # noqa: BLE001 — the tick must not raise
+                out = self._tick_fallback(exc)
+        finally:
+            dur = time.perf_counter() - t0
+            if self.straggler.record(tick, dur):
+                self._event("straggler", duration_s=round(dur, 4))
+            self.tick_count += 1
+        return out
+
     def run(self):
         while self.queue or any(r is not None for r in self.live):
             if not self.step():
                 break
 
 
-def _advance(logits, first_tok, pos, done, gen_count, max_new, active, *,
-             eos_id: int, max_len: int):
+def _advance(logits, first_tok, pos, done, gen_count, max_new, active, *extra,
+             eos_id: int, max_len: int, guards: bool = False,
+             debug_faults: bool = False, axes_tree=None):
     """Pure per-tick state transition for decode-only ticks (jitted once per
     engine).
 
@@ -836,18 +1207,33 @@ def _advance(logits, first_tok, pos, done, gen_count, max_new, active, *,
     array (prefill token, next token, position, done, count, done-at-entry —
     the last row tells the scheduler a slot retired on its prefill token, so
     its decode output this tick must be discarded) so the scheduler reads
-    everything back in a single transfer.
+    everything back in a single transfer. With ``guards`` the packed array
+    grows one guard-flag row ([7, slots]; resilience.GUARD_* bitmask over
+    this tick's logits and freshly written quant-scale rows) and ``extra``
+    leads with the post-step cache tree; with ``debug_faults`` ``extra`` ends
+    with the [slots] NaN-injection mask.
     """
+    caches = extra[0] if guards else None
+    if debug_faults:
+        fault_nan = extra[-1]
+        logits = jnp.where(fault_nan[:, None],
+                           jnp.asarray(jnp.nan, logits.dtype), logits)
     next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     inc = active.astype(jnp.int32)
     new_pos = pos + inc
     new_count = gen_count + inc
     new_done = done | (active & _retire(next_tok, new_pos, new_count, max_new,
                                         eos_id=eos_id, max_len=max_len))
-    packed = jnp.stack([
+    rows = [
         first_tok, next_tok, new_pos, new_done.astype(jnp.int32), new_count,
         done.astype(jnp.int32),
-    ])
+    ]
+    if guards:
+        lbad = R.logits_guard(logits, where=active)
+        sbad = R.scale_guard(caches, axes_tree, pos[:, None], active[:, None])
+        rows.append(lbad.astype(jnp.int32) * R.GUARD_LOGITS
+                    + sbad.astype(jnp.int32) * R.GUARD_SCALES)
+    packed = jnp.stack(rows)
     return next_tok, new_pos, new_done, new_count, packed
 
 
@@ -925,30 +1311,41 @@ def _serve_step_cached(cfg, mode: str, attn_impl: str, fused: bool | None = None
     return fn
 
 
-def _advance_cached(eos_id: int, max_len: int):
-    key_t = (eos_id, max_len)
+def _advance_cached(cfg, eos_id: int, max_len: int, guards: bool = False,
+                    debug_faults: bool = False):
+    key_t = (cfg, eos_id, max_len, guards, debug_faults)
     fn = _ADVANCE_CACHE.get(key_t)
     if fn is None:
-        fn = jax.jit(partial(_advance, eos_id=eos_id, max_len=max_len))
+        # the axes tree is static closure data (needed only by the scale
+        # guard's path-based cache walk)
+        axes_tree = Tr.cache_specs(cfg, 1, 1)[1] if guards else None
+        fn = jax.jit(partial(_advance, eos_id=eos_id, max_len=max_len,
+                             guards=guards, debug_faults=debug_faults,
+                             axes_tree=axes_tree))
         _ADVANCE_CACHE[key_t] = fn
     return fn
 
 
 def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
                      eos_id: int, max_len: int, cache_len: int,
-                     trash_base: int, fused: bool | None = None):
+                     trash_base: int, fused: bool | None = None,
+                     guards: bool = False, debug_faults: bool = False):
     """The engine's one-jit scheduler tick for chunk size ``chunk``: decode
     every decoding slot AND append one prompt chunk per selected prefilling
     slot — inactive slots are diverted into the cache's trash tail, keeping
-    the call fixed-shape with no masking inside the kernels."""
+    the call fixed-shape with no masking inside the kernels. ``guards`` adds
+    one guard-flag row to the packed array ([5, slots]); ``debug_faults``
+    adds one trailing [slots] NaN-injection operand."""
     key_t = (cfg, chunk, mode, attn_impl, eos_id, max_len, cache_len,
-             trash_base, fused)
+             trash_base, fused, guards, debug_faults)
     fn = _FUSED_TICK_CACHE.get(key_t)
     if fn is not None:
         return fn
+    axes_tree = Tr.cache_specs(cfg, 1, 1)[1] if guards else None
 
     def fused(params, caches, cur_tok, pos, done, gen_count, max_new,
-              dec_active, chunk_tok, chunk_off, finishing, last_row, fin_pos):
+              dec_active, chunk_tok, chunk_off, finishing, last_row, fin_pos,
+              *fault):
         # 1. one decode token for every decoding slot (others diverted to
         #    the trash row — fixed-shape batch, garbage ignored). The decode
         #    pass piggybacks on every fused tick even when dec_active is
@@ -967,6 +1364,16 @@ def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
             params, {"tokens": chunk_tok}, caches, chunk_off, cfg,
             mode=mode, attn_impl=attn_impl, last_row=last_row,
             prefix_limit=trash_base, fused=fused)
+        if debug_faults:
+            # NaN activation at the guard's observation point; an all-False
+            # mask makes both selects bitwise no-ops
+            (fault_nan,) = fault
+            dec_logits = jnp.where(
+                fault_nan[:, None],
+                jnp.asarray(jnp.nan, dec_logits.dtype), dec_logits)
+            first_logits = jnp.where(
+                fault_nan[:, None],
+                jnp.asarray(jnp.nan, first_logits.dtype), first_logits)
         next_dec = jnp.argmax(dec_logits, axis=-1).astype(jnp.int32)
         # 3. decode advance (the _advance transition, masked to dec_active)
         inc = dec_active.astype(jnp.int32)
@@ -980,8 +1387,25 @@ def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
         _, new_tok, new_pos, new_count, new_done = _prefill_handoff(
             first_logits, finishing, fin_pos, new_tok, new_pos, new_count,
             new_done, max_new, eos_id=eos_id, max_len=max_len)
-        packed = jnp.stack([new_tok, new_pos,
-                            new_done.astype(jnp.int32), new_count])
+        rows = [new_tok, new_pos, new_done.astype(jnp.int32), new_count]
+        if guards:
+            # logits at rows that emit this tick; scales at rows written
+            # live this tick (decode row iff decoding, chunk rows iff not
+            # trash-diverted) — stale rows past a frontier may hold a
+            # quarantined predecessor's garbage and must not be judged
+            lbad = (R.logits_guard(dec_logits, where=dec_active)
+                    | R.logits_guard(first_logits, where=finishing))
+            crows = (chunk_off[:, None]
+                     + jnp.arange(chunk, dtype=jnp.int32)[None, :])
+            grows = jnp.concatenate([dpos[:, None], crows], axis=1)
+            gvalid = jnp.concatenate(
+                [dec_active[:, None],
+                 jnp.broadcast_to((chunk_off < trash_base)[:, None],
+                                  crows.shape)], axis=1)
+            sbad = R.scale_guard(caches, axes_tree, grows, gvalid)
+            rows.append(lbad.astype(jnp.int32) * R.GUARD_LOGITS
+                        + sbad.astype(jnp.int32) * R.GUARD_SCALES)
+        packed = jnp.stack(rows)
         return caches, new_tok, new_pos, new_done, new_count, packed
 
     fn = jax.jit(fused, donate_argnums=(1,))
@@ -991,7 +1415,8 @@ def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
 
 def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
                     attn_impl: str, eos_id: int, max_len: int, cache_len: int,
-                    trash_base: int, fused: bool | None = None):
+                    trash_base: int, fused: bool | None = None,
+                    guards: bool = False, debug_faults: bool = False):
     """The speculative engine's one-jit tick: draft + verify ``gamma`` tokens
     for every decoding slot, and — when ``chunk`` is a size, the mixed-tick
     form — append one prompt chunk per selected prefilling slot. Compiled
@@ -1006,17 +1431,24 @@ def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
     pointer rewind (never read, overwritten by the next tick's chunk).
     """
     key_t = (cfg, gamma, chunk, mode, attn_impl, eos_id, max_len, cache_len,
-             trash_base, fused)
+             trash_base, fused, guards, debug_faults)
     fn = _SPEC_TICK_CACHE.get(key_t)
     if fn is not None:
         return fn
     drafter = Sp.make_drafter(cfg, gamma=gamma)
+    axes_tree = Tr.cache_specs(cfg, 1, 1)[1] if guards else None
 
     def tick(params, caches, hist, cur_tok, pos, done, gen_count, max_new,
-             dec_active, chunk_tok, chunk_off, finishing, last_row, fin_pos):
+             dec_active, chunk_tok, chunk_off, finishing, last_row, fin_pos,
+             *fault):
         # 1. draft γ candidates per slot from its device-resident history
         #    (prompt-lookup n-gram match — no host round-trip, no model pass)
         drafts = drafter(hist, pos)
+        if debug_faults:
+            fault_nan, fault_draft = fault
+            # drafter_garbage: derange the drafts (still valid ids) so the
+            # verify rejects them — acceptance collapse, not corruption
+            drafts = R.scramble_tokens(drafts, fault_draft, cfg.vocab_size)
         ver_tok = jnp.concatenate([cur_tok[:, None], drafts], axis=1)
         ver_off = jnp.where(dec_active, pos, jnp.int32(trash_base))
         # 2. verify: the γ+1 chunk [cur_tok, drafts] appends at the frontier
@@ -1025,6 +1457,10 @@ def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
         ver_logits, caches = Tr.verify_chunk_step(
             params, {"tokens": ver_tok}, caches, ver_off, cfg, mode=mode,
             prefix_limit=trash_base, fused=fused)
+        if debug_faults:
+            ver_logits = jnp.where(
+                fault_nan[:, None, None],
+                jnp.asarray(jnp.nan, ver_logits.dtype), ver_logits)
         targets, k = Sp.accept_tokens(drafts, ver_logits)
         # 3. sequential-equivalent emission: micro-step j emits targets[:, j]
         #    (valid while j <= k), stopping at the first token that retires
@@ -1064,6 +1500,10 @@ def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
                 params, {"tokens": chunk_tok}, caches, chunk_off, cfg,
                 mode=mode, attn_impl=attn_impl, last_row=last_row,
                 prefix_limit=trash_base, fused=fused)
+            if debug_faults:
+                first_logits = jnp.where(
+                    fault_nan[:, None],
+                    jnp.asarray(jnp.nan, first_logits.dtype), first_logits)
             first_tok, new_tok, new_pos, new_count, new_done = _prefill_handoff(
                 first_logits, finishing, fin_pos, new_tok, new_pos, new_count,
                 new_done, max_new, eos_id=eos_id, max_len=max_len)
@@ -1083,10 +1523,28 @@ def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
                                          jnp.int32(max_len - 1) - pos))
         drafted = jnp.clip(window - 1, 0, gamma) * dec_active.astype(jnp.int32)
         emit_rows = jnp.concatenate([emit0[:, None], targets[:, 1:]], axis=1)
-        packed = jnp.concatenate([
-            emit_rows.T.astype(jnp.int32),
-            n_out[None], drafted[None], new_done.astype(jnp.int32)[None],
-        ])
+        tail = [n_out[None], drafted[None], new_done.astype(jnp.int32)[None]]
+        if guards:
+            # logits at emitting rows; scales at this tick's written rows
+            # (γ+1 verify rows iff decoding, chunk rows iff not diverted)
+            lbad = R.logits_guard(ver_logits, where=dec_active)
+            vrows = (ver_off[:, None]
+                     + jnp.arange(gamma + 1, dtype=jnp.int32)[None, :])
+            grows, gvalid = vrows, jnp.broadcast_to(
+                dec_active[:, None], vrows.shape)
+            if chunk is not None:
+                lbad |= R.logits_guard(first_logits, where=finishing)
+                crows = (chunk_off[:, None]
+                         + jnp.arange(chunk, dtype=jnp.int32)[None, :])
+                grows = jnp.concatenate([grows, crows], axis=1)
+                gvalid = jnp.concatenate(
+                    [gvalid, jnp.broadcast_to(
+                        (chunk_off < trash_base)[:, None], crows.shape)],
+                    axis=1)
+            sbad = R.scale_guard(caches, axes_tree, grows, gvalid)
+            tail.append((lbad.astype(jnp.int32) * R.GUARD_LOGITS
+                         + sbad.astype(jnp.int32) * R.GUARD_SCALES)[None])
+        packed = jnp.concatenate([emit_rows.T.astype(jnp.int32), *tail])
         return caches, hist, new_tok, new_pos, new_done, new_count, packed
 
     fn = jax.jit(tick, donate_argnums=(1, 2))

@@ -1,0 +1,226 @@
+"""Serving resilience layer: request lifecycle, numerics quarantine, faults.
+
+TeLLMe targets sustained edge serving under hard resource budgets: a single
+bad request — a NaN-producing quantized tick, an unbounded prompt, a cache
+that fills mid-decode — must degrade *one* request, never the co-batched
+rest. This module holds the pure, engine-agnostic pieces of that contract
+(DESIGN.md §resilience); ``serving/engine.py`` wires them into the tick
+paths.
+
+Three pieces live here:
+
+* **Status model** — every :class:`~repro.serving.engine.Request` ends in
+  exactly one terminal :class:`Status`:
+  ``OK | CANCELLED | DEADLINE_EXCEEDED | CACHE_EXHAUSTED | QUARANTINED |
+  FAILED``. ``OK`` covers the two normal completions (EOS emitted, budget
+  spent); ``CACHE_EXHAUSTED`` is the cache-ceiling retirement the old engine
+  folded silently into ``done``; the rest are resilience-layer outcomes.
+
+* **Numerics guards** — cheap in-tick finite/overflow checks that ride the
+  engine's existing single per-tick ``device_get`` as one packed int32 flag
+  row (bitmask: :data:`GUARD_LOGITS` for non-finite/overflowing logits,
+  :data:`GUARD_SCALES` for non-finite int8-cache quant scales at the rows
+  written *this tick* — stale rows past a frontier may legitimately hold
+  garbage from a quarantined predecessor, so only fresh writes are judged).
+  A flagged slot is quarantined host-side: its tick emissions are discarded,
+  the request terminates ``QUARANTINED``, and the slot is freed — co-batched
+  slots never see the event (per-slot cache rows are disjoint; the rollback
+  invariant makes the poisoned rows dead to every later occupant).
+
+* **FaultPlan** — a deterministic fault-injection harness for the chaos
+  suite (tests/test_resilience.py) and ``benchmarks/bench_resilience.py``.
+  Faults are declared as ``(kind, tick, slot)`` triples and fire behind a
+  debug hook in the tick path; with no plan installed the engine compiles
+  the exact same tick jits as before (the injection operand does not exist),
+  and with a plan installed but no fault firing the injected
+  ``where(False, ...)`` selects are bitwise no-ops — chaos runs are
+  comparable token-for-token against fault-free runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+
+class Status(enum.Enum):
+    """Request lifecycle states. The last six are terminal."""
+
+    PENDING = "PENDING"    # constructed, not yet submitted
+    QUEUED = "QUEUED"      # in the admission queue (or requeued by preemption)
+    RUNNING = "RUNNING"    # admitted into a slot (prefilling or decoding)
+    OK = "OK"                              # EOS emitted or budget spent
+    CANCELLED = "CANCELLED"                # host-side cancel()
+    DEADLINE_EXCEEDED = "DEADLINE_EXCEEDED"  # TTL expired (queued or running)
+    CACHE_EXHAUSTED = "CACHE_EXHAUSTED"    # frontier hit the cache ceiling
+    QUARANTINED = "QUARANTINED"            # numerics guard tripped on the slot
+    FAILED = "FAILED"                      # rejected at admission / tick failure
+
+    def __str__(self) -> str:  # compact CLI reporting
+        return self.value
+
+
+TERMINAL = frozenset({Status.OK, Status.CANCELLED, Status.DEADLINE_EXCEEDED,
+                      Status.CACHE_EXHAUSTED, Status.QUARANTINED,
+                      Status.FAILED})
+
+# Guard-flag bit layout (one packed int32 row per tick, [slots]):
+GUARD_LOGITS = 1  # non-finite / overflowing logits at an emitting row
+GUARD_SCALES = 2  # non-finite int8-cache quant scale at a row written this tick
+
+
+class FaultInjected(RuntimeError):
+    """Raised by the tick-path debug hook to emulate a failing Pallas call."""
+
+
+# ---------------------------------------------------------------------------
+# Numerics guards (traced — run inside the tick jits)
+# ---------------------------------------------------------------------------
+
+
+def logits_guard(logits, where=None):
+    """Per-slot bool: any non-finite or near-overflow logit. ``logits``
+    [B, ...] (trailing axes reduced); ``where`` [B] masks slots whose rows
+    are meaningful this tick (trash-diverted rows are garbage by design and
+    may echo a *previous* occupant's poison — judging them would quarantine
+    an innocent successor)."""
+    import jax.numpy as jnp
+
+    lim = 0.5 * float(jnp.finfo(logits.dtype).max)
+    bad = ~jnp.isfinite(logits) | (jnp.abs(logits) > lim)
+    bad = bad.reshape(logits.shape[0], -1).any(axis=1)
+    if where is not None:
+        bad &= where
+    return bad
+
+
+def scale_guard(caches, axes_tree, rows, valid):
+    """Per-slot bool: any non-finite quant-scale among this tick's written
+    cache rows. ``rows`` [B, R] int32 seq indices, ``valid`` [B, R] masks
+    rows actually written live this tick (decode row iff decoding, chunk
+    rows iff not trash-diverted). Walks the cache tree by *path* like
+    ``engine._resize_caches``: only ``*_scale`` leaves (the int8 layout's
+    f32 absmax side arrays) are judged, so the bf16 layout contributes
+    nothing and non-attention state is never touched."""
+    import jax.numpy as jnp
+
+    b, r = rows.shape
+    bad = jnp.zeros((b,), bool)
+
+    def rec(c, a, name):
+        nonlocal bad
+        if isinstance(c, dict):
+            for k in c:
+                rec(c[k], a[k], k)
+            return
+        if not name.endswith("_scale") or "act_kv_seq" not in a:
+            return
+        x = jnp.moveaxis(c, (a.index("act_batch"), a.index("act_kv_seq")),
+                         (0, c.ndim - 1))  # [B, ..., S]
+        idx = jnp.clip(rows, 0, x.shape[-1] - 1)
+        idx = idx.reshape((b,) + (1,) * (x.ndim - 2) + (r,))
+        taken = jnp.take_along_axis(x, jnp.broadcast_to(
+            idx, x.shape[:-1] + (r,)), axis=-1)
+        nf = (~jnp.isfinite(taken)).reshape(b, -1, r).any(axis=1)  # [B, R]
+        bad |= (nf & valid).any(axis=1)
+
+    rec(caches, axes_tree, "")
+    return bad
+
+
+def scramble_tokens(tokens, mask, vocab: int):
+    """Deterministically derange drafted tokens for the ``drafter_garbage``
+    fault: mapped tokens stay valid ids but (for vocab > 1) never equal the
+    original, so acceptance collapses without ever indexing out of range.
+    ``mask`` [B] selects slots; unselected rows pass through bitwise."""
+    import jax.numpy as jnp
+
+    garbled = (tokens + jnp.int32(max(vocab // 2, 1))) % jnp.int32(vocab)
+    return jnp.where(mask[:, None], garbled, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fault injection (host — drives the debug hook)
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("nan", "tick_exception", "slow_tick", "cache_growth",
+               "drafter_garbage")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected fault.
+
+    kind
+        ``"nan"`` — the slot's logits this tick become NaN (a NaN activation
+        surfacing at the observation point the guards watch);
+        ``"tick_exception"`` — the tick's jitted call raises (emulating a
+        failing Pallas kernel; fires only while the engine would still
+        dispatch kernels, i.e. ``attn_impl != "xla"``);
+        ``"slow_tick"`` — the tick stalls ``duration_s`` (straggler path);
+        ``"cache_growth"`` — the slot's cache cannot grow/hold the request
+        (forced ``CACHE_EXHAUSTED`` retirement);
+        ``"drafter_garbage"`` — the slot's speculative drafts are deranged
+        (acceptance collapse → the engine's spec auto-disable).
+    tick
+        0-based scheduler tick on which the fault fires.
+    slot
+        Target slot for slot-scoped kinds; ``None`` targets every slot.
+    duration_s
+        ``slow_tick`` stall length.
+    repeat
+        Fire on ticks ``[tick, tick + repeat)`` — collapse faults need a
+        window, point faults leave it at 1.
+    """
+
+    kind: str
+    tick: int
+    slot: int | None = None
+    duration_s: float = 0.25
+    repeat: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"have {FAULT_KINDS}")
+        if self.tick < 0 or self.repeat < 1:
+            raise ValueError(f"fault window [{self.tick}, +{self.repeat}) "
+                             f"must be non-negative")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic schedule of :class:`Fault`s, evaluated per tick.
+
+    The plan is pure host-side data: the engine asks ``at(tick, kind)`` at
+    fixed points in its tick path and turns the answers into traced operands
+    (slot masks) or host actions (raise / sleep / force-retire). Two runs of
+    the same plan over the same requests take identical actions on identical
+    ticks — the chaos suite's reproducibility contract.
+    """
+
+    faults: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+
+    def at(self, tick: int, kind: str) -> list[Fault]:
+        return [f for f in self.faults
+                if f.kind == kind and f.tick <= tick < f.tick + f.repeat]
+
+    def slot_mask(self, tick: int, kind: str, slots: int) -> np.ndarray:
+        """[slots] bool mask of slots targeted by ``kind`` on ``tick``."""
+        mask = np.zeros((slots,), bool)
+        for f in self.at(tick, kind):
+            if f.slot is None:
+                mask[:] = True
+            elif 0 <= f.slot < slots:
+                mask[f.slot] = True
+        return mask
+
+    def any_after(self, tick: int) -> bool:
+        """Whether any fault could still fire at/after ``tick`` (lets long
+        benches stop building injection operands once the plan is spent)."""
+        return any(tick < f.tick + f.repeat for f in self.faults)

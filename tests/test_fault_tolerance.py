@@ -32,6 +32,46 @@ class TestStragglerMonitor:
         m = StragglerMonitor(warmup=10)
         assert not any(m.record(i, float(1 + 10 * (i == 3))) for i in range(5))
 
+    def test_monitor_is_the_serving_tick_watchdog(self):
+        """The shared serving/training watchdog: ServingEngine.step() feeds
+        the monitor its tick times, so an injected slow tick surfaces as a
+        straggler event in engine stats (DESIGN.md §resilience)."""
+        import dataclasses
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs import get_config
+        from repro.core import params as P
+        from repro.models import transformer as T
+        from repro.serving import engine as E
+        from repro.serving import resilience as R
+
+        cfg = dataclasses.replace(get_config("tellme-0.7b", smoke=True),
+                                  dtype=jnp.float32)
+        params = P.init_params(T.param_specs(cfg), jax.random.PRNGKey(0))
+        # warm the compiled-tick caches so compile time doesn't skew the
+        # EWMA — with an armed (never-firing) plan, because debug_faults is
+        # part of the tick-jit cache key
+        idle = R.FaultPlan(faults=(
+            R.Fault(kind="slow_tick", tick=10_000),))
+        warm = E.ServingEngine(params, cfg, slots=2, max_len=96, mode="eval",
+                               eos_id=-2, fault_plan=idle)
+        warm.submit(E.Request(rid=0, prompt=np.arange(1, 9), max_new=4))
+        warm.run()
+        plan = R.FaultPlan(faults=(
+            R.Fault(kind="slow_tick", tick=6, duration_s=0.6),))
+        eng = E.ServingEngine(
+            params, cfg, slots=2, max_len=96, mode="eval", eos_id=-2,
+            fault_plan=plan,
+            straggler=StragglerMonitor(warmup=1, threshold=8.0))
+        eng.submit(E.Request(rid=0, prompt=np.arange(1, 9), max_new=16))
+        eng.run()
+        stats = eng.stats()
+        assert stats["straggler"]["straggler_events"] >= 1
+        straggled = [e for e in stats["events"] if e["kind"] == "straggler"]
+        assert straggled and straggled[0]["duration_s"] >= 0.6
+
 
 class TestResilientExecutor:
     def test_retries_transient_failures(self):

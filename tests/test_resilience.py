@@ -1,0 +1,474 @@
+"""Chaos suite for the serving resilience layer (DESIGN.md §resilience).
+
+Contracts under test:
+
+* with resilience enabled and NO faults injected, greedy engine emissions
+  are bit-identical to guards-off runs — across bf16/int8 KV caches and
+  speculative on/off;
+* for every FaultPlan class, unaffected co-batched requests finish with
+  outputs bit-identical to a fault-free run, affected requests terminate
+  with the correct structured status, and ``step()`` never raises;
+* preempted-and-requeued requests finish with greedy outputs identical to
+  an uncontended run.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import params as P
+from repro.models import transformer as T
+from repro.serving import engine as E
+from repro.serving import resilience as R
+
+
+def _cfg(**kw):
+    cfg = get_config("tellme-0.7b", smoke=True)
+    return dataclasses.replace(cfg, dtype=jnp.float32, **kw)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = P.init_params(T.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lens=(40, 70, 30, 17), seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=n) for n in lens]
+
+
+def _run(params, cfg, prompts, *, max_new=8, slots=2, max_len=192, **kw):
+    eng = E.ServingEngine(params, cfg, slots=slots, max_len=max_len,
+                          mode="eval", eos_id=-2, **kw)
+    reqs = [E.Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        assert eng.submit(r)
+    eng.run()
+    return reqs, eng
+
+
+def _outs(reqs):
+    return [tuple(r.generated) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# No-fault bit-identity: guards must be observation-only
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kvd", ["bf16", "int8"])
+@pytest.mark.parametrize("spec", [False, True])
+def test_guards_do_not_change_emissions(setup, kvd, spec):
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, kv_cache_dtype=kvd)
+    prompts = _prompts(cfg)
+    off, eoff = _run(params, cfg, prompts, guards=False, speculative=spec)
+    on, eon = _run(params, cfg, prompts, guards=True, speculative=spec)
+    assert _outs(off) == _outs(on)
+    assert all(r.status is R.Status.OK for r in on)
+    assert eon.events == []
+
+
+def test_armed_but_idle_fault_plan_is_bitwise_noop(setup):
+    """A FaultPlan whose faults never fire (tick past the run) must not
+    perturb emissions: the injected where(False, ...) selects are no-ops."""
+    cfg, params = setup
+    prompts = _prompts(cfg)
+    base, _ = _run(params, cfg, prompts)
+    plan = R.FaultPlan(faults=(R.Fault(kind="nan", tick=10_000),))
+    armed, eng = _run(params, cfg, prompts, fault_plan=plan)
+    assert _outs(base) == _outs(armed)
+    assert eng.events == []
+
+
+# ---------------------------------------------------------------------------
+# Structured terminal statuses
+# ---------------------------------------------------------------------------
+
+
+def test_normal_completion_statuses(setup):
+    cfg, params = setup
+    reqs, eng = _run(params, cfg, _prompts(cfg))
+    assert all(r.status is R.Status.OK for r in reqs)
+    assert all(r.done and r.finished_at is not None for r in reqs)
+    assert eng.stats()["statuses"] == {"OK": len(reqs)}
+
+
+def test_cache_exhausted_status(setup):
+    cfg, params = setup
+    # max_len 72 and a 70-token prompt: the frontier hits the ceiling long
+    # before the budget — the old engine folded this silently into done
+    reqs, _ = _run(params, cfg, _prompts(cfg, lens=(70,)), max_new=64,
+                   max_len=72, slots=1)
+    assert reqs[0].status is R.Status.CACHE_EXHAUSTED
+    assert 0 < len(reqs[0].generated) < 64
+
+
+def test_cancellation_queued_and_running(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, lens=(40, 30, 20))
+    eng = E.ServingEngine(params, cfg, slots=1, max_len=192, mode="eval",
+                          eos_id=-2)
+    reqs = [E.Request(rid=i, prompt=p, max_new=16)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    assert eng.cancel(0)  # running
+    assert eng.cancel(2)  # still queued
+    assert not eng.cancel(99)
+    eng.run()
+    assert reqs[0].status is R.Status.CANCELLED
+    assert reqs[2].status is R.Status.CANCELLED
+    assert reqs[1].status is R.Status.OK
+
+
+def test_deadline_exceeded_with_fake_clock(setup):
+    cfg, params = setup
+    clk = [0.0]
+    eng = E.ServingEngine(params, cfg, slots=1, max_len=192, mode="eval",
+                          eos_id=-2, clock=lambda: clk[0])
+    slow = E.Request(rid=0, prompt=_prompts(cfg)[0], max_new=64,
+                     deadline_s=5.0)
+    fine = E.Request(rid=1, prompt=_prompts(cfg)[1], max_new=4)
+    eng.submit(slow)
+    eng.submit(fine)
+    for _ in range(2):
+        eng.step()
+    clk[0] = 10.0  # past slow's TTL; fine has none
+    eng.run()
+    assert slow.status is R.Status.DEADLINE_EXCEEDED
+    assert fine.status is R.Status.OK
+
+
+def test_default_ttl_from_config(setup):
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, request_ttl_s=7.5)
+    eng = E.ServingEngine(params, cfg, slots=1, max_len=192, mode="eval")
+    req = E.Request(rid=0, prompt=_prompts(cfg)[0], max_new=4)
+    eng.submit(req)
+    assert req.deadline_s == 7.5
+
+
+def test_bounded_queue_backpressure(setup):
+    cfg, params = setup
+    eng = E.ServingEngine(params, cfg, slots=1, max_len=192, mode="eval",
+                          eos_id=-2, queue_cap=2)
+    reqs = [E.Request(rid=i, prompt=_prompts(cfg)[0], max_new=4)
+            for i in range(4)]
+    accepted = [eng.submit(r) for r in reqs]
+    assert accepted == [True, True, False, False]
+    assert reqs[2].status is R.Status.FAILED
+    assert reqs[2].status_detail == "queue_full"
+    assert len(eng.queue) == 2  # bounded, not silently grown
+    eng.run()
+    assert reqs[0].status is R.Status.OK and reqs[1].status is R.Status.OK
+    # a rejected request may be resubmitted once there is room again
+    assert eng.submit(reqs[2])
+    eng.run()
+    assert reqs[2].status is R.Status.OK
+
+
+# ---------------------------------------------------------------------------
+# Numerics quarantine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kvd", ["bf16", "int8"])
+@pytest.mark.parametrize("spec", [False, True])
+def test_nan_quarantine_isolates_slot(setup, kvd, spec):
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, kv_cache_dtype=kvd)
+    prompts = _prompts(cfg)
+    base, _ = _run(params, cfg, prompts, speculative=spec)
+    plan = R.FaultPlan(faults=(R.Fault(kind="nan", tick=3, slot=0),))
+    out, eng = _run(params, cfg, prompts, speculative=spec, fault_plan=plan)
+    bad = [i for i, r in enumerate(out) if r.status is R.Status.QUARANTINED]
+    assert len(bad) == 1
+    assert out[bad[0]].status_detail == f"guard_flag={R.GUARD_LOGITS}"
+    # every unaffected request: bit-identical to the fault-free run
+    for i, r in enumerate(out):
+        if i not in bad:
+            assert r.status is R.Status.OK
+            assert tuple(r.generated) == tuple(base[i].generated)
+    assert [e["kind"] for e in eng.events] == ["quarantine"]
+    assert eng.stats()["quarantined"] == 1
+
+
+def test_quarantined_slot_is_reused_cleanly(setup):
+    """The slot freed by a quarantine admits the next request, whose output
+    matches an uncontended run — poisoned rows are dead to the successor."""
+    cfg, params = setup
+    prompts = _prompts(cfg, lens=(40, 70, 30))
+    base, _ = _run(params, cfg, prompts, slots=1)
+    plan = R.FaultPlan(faults=(R.Fault(kind="nan", tick=2, slot=0),))
+    out, _ = _run(params, cfg, prompts, slots=1, fault_plan=plan)
+    assert out[0].status is R.Status.QUARANTINED
+    for i in (1, 2):
+        assert out[i].status is R.Status.OK
+        assert tuple(out[i].generated) == tuple(base[i].generated)
+
+
+def test_nan_activations_trip_scale_guard(setup):
+    """NaN activations (poisoned weights mid-run) flow through the int8
+    quantizer into this tick's written scale rows — the scale guard's bit
+    must be set alongside the logits guard's."""
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=192, mode="eval",
+                          eos_id=-2)
+    reqs = [E.Request(rid=i, prompt=p, max_new=12)
+            for i, p in enumerate(_prompts(cfg, lens=(40, 30)))]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()  # both prompts prefill (one 64-chunk each): slots now decoding
+    eng.params = jax.tree.map(
+        lambda x: (jnp.full_like(x, jnp.nan)
+                   if jnp.issubdtype(x.dtype, jnp.floating) else x),
+        eng.params)
+    eng.run()
+    quarantined = [r for r in reqs if r.status is R.Status.QUARANTINED]
+    assert len(quarantined) == 2  # every decoding slot hit the NaN weights
+    for r in quarantined:
+        flag = int(r.status_detail.split("=")[1])
+        assert flag & R.GUARD_SCALES
+        assert flag & R.GUARD_LOGITS
+
+
+# ---------------------------------------------------------------------------
+# Tick exception → sticky XLA fallback
+# ---------------------------------------------------------------------------
+
+
+def test_tick_exception_falls_back_to_xla(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg)
+    base, _ = _run(params, cfg, prompts)
+    plan = R.FaultPlan(faults=(R.Fault(kind="tick_exception", tick=2),))
+    out, eng = _run(params, cfg, prompts, fault_plan=plan)
+    assert eng.xla_fallback and eng.attn_impl == "xla"
+    assert any(e["kind"] == "xla_fallback" for e in eng.events)
+    # the fallback is sticky AND lossless: every request completes, and on
+    # this backend the dense XLA form is the same math — bit-identical
+    assert all(r.status is R.Status.OK for r in out)
+    assert _outs(out) == _outs(base)
+
+
+def test_step_never_raises_even_on_repeated_faults(setup):
+    cfg, params = setup
+    plan = R.FaultPlan(faults=tuple(
+        R.Fault(kind=k, tick=t) for t, k in enumerate(
+            ["tick_exception", "nan", "cache_growth", "slow_tick"])))
+    out, eng = _run(params, cfg, _prompts(cfg), fault_plan=plan)
+    assert all(r.status in R.TERMINAL for r in out)
+    assert eng.tick_count > 0
+
+
+# ---------------------------------------------------------------------------
+# Slow tick / straggler wiring, cache-growth failure
+# ---------------------------------------------------------------------------
+
+
+def test_cache_growth_fault_forces_cache_exhausted(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, lens=(40, 30))
+    plan = R.FaultPlan(faults=(R.Fault(kind="cache_growth", tick=4, slot=0),))
+    out, eng = _run(params, cfg, prompts, fault_plan=plan, max_new=16)
+    exhausted = [r for r in out if r.status is R.Status.CACHE_EXHAUSTED]
+    assert len(exhausted) == 1
+    assert exhausted[0].status_detail == "fault_injected"
+    assert any(e["kind"] == "cache_growth_fault" for e in eng.events)
+    # emitted-so-far tokens are kept, not discarded
+    assert len(exhausted[0].generated) > 0
+
+
+# ---------------------------------------------------------------------------
+# Drafter garbage → speculative auto-disable
+# ---------------------------------------------------------------------------
+
+
+def test_drafter_garbage_disables_speculation(setup):
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, spec_disable_after=8,
+                              spec_min_acceptance=0.3)
+    prompts = _prompts(cfg)
+    base, _ = _run(params, cfg, prompts, max_new=12)
+    plan = R.FaultPlan(faults=(
+        R.Fault(kind="drafter_garbage", tick=0, repeat=1000),))
+    out, eng = _run(params, cfg, prompts, max_new=12, speculative=True,
+                    fault_plan=plan)
+    assert not eng.speculative  # collapse detected, sticky plain decode
+    dis = [e for e in eng.events if e["kind"] == "spec_disabled"]
+    assert len(dis) == 1 and dis[0]["acceptance"] < 0.3
+    # garbage drafts are rejected by verify, never emitted: outputs stay
+    # bit-identical to plain decode throughout
+    assert _outs(out) == _outs(base)
+    assert all(r.status is R.Status.OK for r in out)
+
+
+# ---------------------------------------------------------------------------
+# Preemption
+# ---------------------------------------------------------------------------
+
+
+def _solo(params, cfg, prompt, max_new=12):
+    eng = E.ServingEngine(params, cfg, slots=1, max_len=192, mode="eval",
+                          eos_id=-2)
+    req = E.Request(rid=0, prompt=prompt, max_new=max_new)
+    eng.submit(req)
+    eng.run()
+    return tuple(req.generated)
+
+
+def test_preempted_request_resumes_bit_identically(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, lens=(40, 70, 30))
+    base = [_solo(params, cfg, p) for p in prompts]
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=192, mode="eval",
+                          eos_id=-2)
+    r0 = E.Request(rid=0, prompt=prompts[0], max_new=12)
+    r1 = E.Request(rid=1, prompt=prompts[1], max_new=12)
+    eng.submit(r0)
+    eng.submit(r1)
+    for _ in range(6):
+        eng.step()  # both slots decoding, tokens already emitted
+    hi = E.Request(rid=2, prompt=prompts[2], max_new=12)
+    hi.priority = 5
+    eng.submit(hi)
+    eng.run()
+    pre = [e for e in eng.events if e["kind"] == "preempt"]
+    assert len(pre) == 1 and pre[0]["emitted"] > 0
+    victim = {0: r0, 1: r1}[pre[0]["rid"]]
+    assert victim.preemptions == 1
+    # THE preemption invariant: eviction + re-prefill from prompt + emitted
+    # history continues the exact greedy stream of an uncontended run
+    for req, want in ((r0, base[0]), (r1, base[1]), (hi, base[2])):
+        assert req.status is R.Status.OK
+        assert tuple(req.generated) == want
+
+
+def test_equal_priority_never_preempts(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, lens=(40, 70, 30))
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=192, mode="eval",
+                          eos_id=-2)
+    for i in (0, 1):
+        eng.submit(E.Request(rid=i, prompt=prompts[i], max_new=12))
+    for _ in range(4):
+        eng.step()
+    eng.submit(E.Request(rid=2, prompt=prompts[2], max_new=12))  # same prio
+    eng.run()
+    assert not any(e["kind"] == "preempt" for e in eng.events)
+
+
+# ---------------------------------------------------------------------------
+# One-transfer-per-tick contract survives the guard row
+# ---------------------------------------------------------------------------
+
+
+def test_guarded_tick_is_still_one_device_get(setup, monkeypatch):
+    cfg, params = setup
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=192, mode="eval",
+                          eos_id=-2, guards=True)
+    for i, p in enumerate(_prompts(cfg, lens=(40, 30))):
+        eng.submit(E.Request(rid=i, prompt=p, max_new=6))
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    ticks = 0
+    while eng.step():
+        ticks += 1
+    assert ticks > 0 and len(calls) == ticks
+
+
+# ---------------------------------------------------------------------------
+# Guard helpers + FaultPlan unit tests (pure, no engine)
+# ---------------------------------------------------------------------------
+
+
+class TestGuardHelpers:
+    def test_logits_guard_flags_nonfinite_and_overflow(self):
+        x = jnp.zeros((3, 4), jnp.float32)
+        x = x.at[0, 1].set(jnp.nan)
+        x = x.at[2, 0].set(3e38)  # > 0.5 * finfo.max
+        np.testing.assert_array_equal(
+            np.array(R.logits_guard(x)), [True, False, True])
+        where = jnp.array([False, True, True])
+        np.testing.assert_array_equal(
+            np.array(R.logits_guard(x, where=where)), [False, False, True])
+
+    def test_scale_guard_only_judges_written_rows(self):
+        cfg = _cfg(kv_cache_dtype="int8")
+        caches = E.init_caches(cfg, 2, 16, dtype=cfg.dtype)
+        axes = T.cache_specs(cfg, 1, 1)[1]
+
+        def plant(c):
+            if isinstance(c, dict):
+                return {k: (plant(v) if k == "k_scale" or isinstance(v, dict)
+                            else v) for k, v in c.items()}
+            return c.at[..., 5].set(jnp.nan)  # act_kv_seq is the last axis
+
+        caches = plant(caches)
+        rows = jnp.array([[5], [5]], jnp.int32)
+        ok = jnp.array([[True], [True]])
+        np.testing.assert_array_equal(
+            np.array(R.scale_guard(caches, axes, rows, ok)), [True, True])
+        # same poison, rows not written this tick -> never judged
+        rows2 = jnp.array([[4], [6]], jnp.int32)
+        np.testing.assert_array_equal(
+            np.array(R.scale_guard(caches, axes, rows2, ok)), [False, False])
+        # bf16 layout has no scale leaves: identically False
+        cfgb = _cfg(kv_cache_dtype="bf16")
+        cb = E.init_caches(cfgb, 2, 16, dtype=cfgb.dtype)
+        np.testing.assert_array_equal(
+            np.array(R.scale_guard(cb, T.cache_specs(cfgb, 1, 1)[1],
+                                   rows, ok)), [False, False])
+
+    def test_scramble_tokens_derange_and_noop(self):
+        toks = jnp.array([[0, 1, 2], [3, 4, 5]], jnp.int32)
+        mask = jnp.array([True, False])
+        out = np.array(R.scramble_tokens(toks, mask, vocab=8))
+        assert (out[0] != np.array([0, 1, 2])).all()
+        assert (out[0] >= 0).all() and (out[0] < 8).all()
+        np.testing.assert_array_equal(out[1], [3, 4, 5])
+
+
+class TestFaultPlan:
+    def test_window_and_slot_mask(self):
+        plan = R.FaultPlan(faults=(
+            R.Fault(kind="nan", tick=2, slot=1, repeat=3),
+            R.Fault(kind="nan", tick=4),
+        ))
+        assert plan.at(1, "nan") == []
+        assert len(plan.at(2, "nan")) == 1
+        assert len(plan.at(4, "nan")) == 2  # window overlap + all-slots fault
+        np.testing.assert_array_equal(plan.slot_mask(2, "nan", 3),
+                                      [False, True, False])
+        np.testing.assert_array_equal(plan.slot_mask(4, "nan", 3),
+                                      [True, True, True])
+        assert plan.any_after(4) and not plan.any_after(5)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            R.Fault(kind="bogus", tick=0)
+        with pytest.raises(ValueError):
+            R.Fault(kind="nan", tick=-1)
+        with pytest.raises(ValueError):
+            R.Fault(kind="nan", tick=0, repeat=0)
+
+    def test_determinism_two_identical_runs(self, setup):
+        cfg, params = setup
+        plan = R.FaultPlan(faults=(R.Fault(kind="nan", tick=3, slot=0),))
+        a, ea = _run(params, cfg, _prompts(cfg), fault_plan=plan)
+        b, eb = _run(params, cfg, _prompts(cfg), fault_plan=plan)
+        assert _outs(a) == _outs(b)
+        assert [r.status for r in a] == [r.status for r in b]
+        assert ea.events == eb.events

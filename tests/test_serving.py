@@ -112,3 +112,83 @@ def test_continuous_batching_tokens_match_reference():
     for r, ref in zip(reqs, singles):
         assert r.done
         np.testing.assert_array_equal(np.array(r.generated[:4]), ref[:4])
+
+
+class TestAdmissionEdgeCases:
+    """submit/_admit hardening (DESIGN.md §resilience): degenerate prompts
+    must reject with a structured status, never crash the scheduler or
+    strand co-queued requests."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = _cfg("tellme-0.7b")
+        params = P.init_params(T.param_specs(cfg), jax.random.PRNGKey(0))
+        return cfg, params
+
+    def _engine(self, params, cfg, **kw):
+        kw.setdefault("slots", 2)
+        kw.setdefault("max_len", 128)
+        return E.ServingEngine(params, cfg, mode="eval", eos_id=-2, **kw)
+
+    def test_empty_prompt_rejected_not_crashed(self, setup):
+        from repro.serving import resilience as R
+        cfg, params = setup
+        eng = self._engine(params, cfg)
+        bad = E.Request(rid=0, prompt=np.zeros((0,), np.int64), max_new=4)
+        ok = E.Request(rid=1, prompt=np.arange(1, 9), max_new=4)
+        eng.submit(bad)
+        eng.submit(ok)
+        eng.run()
+        assert bad.status is R.Status.FAILED
+        assert bad.status_detail == "bad_prompt" and bad.generated == []
+        assert ok.status is R.Status.OK and len(ok.generated) == 4
+
+    def test_prompt_exactly_on_chunk_grid(self, setup):
+        cfg, params = setup
+        size = sorted(cfg.prefill_chunk_sizes)[0]
+        prompt = jax.random.randint(jax.random.PRNGKey(3), (size,), 0,
+                                    cfg.vocab_size)
+        ref = np.array(E.generate(params, cfg, prompt[None], steps=4,
+                                  mode="eval").tokens[0])
+        eng = self._engine(params, cfg, max_len=192)
+        req = E.Request(rid=0, prompt=prompt, max_new=4)
+        eng.submit(req)
+        eng.run()
+        np.testing.assert_array_equal(np.array(req.generated), ref)
+
+    def test_prompt_at_max_len_rejected(self, setup):
+        from repro.serving import resilience as R
+        cfg, params = setup
+        eng = self._engine(params, cfg)
+        for plen in (eng.max_len, eng.max_len + 7):
+            req = E.Request(rid=plen, prompt=np.ones((plen,), np.int64),
+                            max_new=4)
+            eng.submit(req)
+            eng.run()
+            assert req.status is R.Status.FAILED
+            assert req.status_detail == "bad_prompt"
+
+    def test_prompt_at_max_len_minus_one_emits_one_token(self, setup):
+        from repro.serving import resilience as R
+        cfg, params = setup
+        eng = self._engine(params, cfg)
+        req = E.Request(rid=0, prompt=np.ones((eng.max_len - 1,), np.int64),
+                        max_new=8)
+        eng.submit(req)
+        eng.run()
+        # one row of headroom: exactly one token, then the cache is full
+        assert len(req.generated) == 1
+        assert req.status in (R.Status.OK, R.Status.CACHE_EXHAUSTED)
+
+    def test_submit_when_queue_full_is_bounded_rejection(self, setup):
+        from repro.serving import resilience as R
+        cfg, params = setup
+        eng = self._engine(params, cfg, queue_cap=1)
+        reqs = [E.Request(rid=i, prompt=np.arange(1, 9), max_new=2)
+                for i in range(3)]
+        assert [eng.submit(r) for r in reqs] == [True, False, False]
+        assert len(eng.queue) == 1  # bounded, not silent growth
+        assert all(r.status is R.Status.FAILED
+                   and r.status_detail == "queue_full" for r in reqs[1:])
+        eng.run()
+        assert reqs[0].status is R.Status.OK

@@ -18,6 +18,7 @@ Guarantees under test:
 """
 
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -259,6 +260,31 @@ class TestAutotuner:
                          {"bm": 1, "bk": 1}),
                  AT.choose_engine(8, 64, 128))
         assert before == after == ({"bm": 8, "bk": 128}, "tl")
+
+    @pytest.mark.parametrize("payload", [
+        "{not json",                                       # truncated write
+        '{"version": 999, "kernels": {}}',                 # version mismatch
+        '["a", "list"]',                                   # non-dict payload
+        '{"version": 1, "kernels": ["nope"]}',             # bad kernels level
+        '{"version": 1, "kernels": {"ternary_matmul": '
+        '{"k1-m1-n1": {"us": 1.0}}}}',                     # entry sans knobs
+    ])
+    def test_corrupt_cache_ignored_and_rewritten(self, tmp_path, payload):
+        """A corrupted/truncated or version-mismatched cache file must never
+        raise at import/trace time: lookups fall back to the defaults and
+        the garbage file is atomically replaced with a fresh valid cache."""
+        path = tmp_path / "corrupt.json"
+        path.write_text(payload)
+        AT.set_cache_path(path)
+        assert AT.best("ternary_matmul", "k1-m1-n1", {"bm": 64}) == {"bm": 64}
+        assert AT.lookup("ternary_matmul", "k1-m1-n1") is None
+        rewritten = json.loads(path.read_text())  # valid JSON again
+        assert rewritten["version"] == AT._VERSION
+        assert rewritten["kernels"] == {}
+        # and the rewritten file round-trips records as usual
+        AT.record("ternary_matmul", "k1-m1-n1", {"bm": 8}, 1.0)
+        AT.set_cache_path(path)
+        assert AT.lookup("ternary_matmul", "k1-m1-n1") == {"bm": 8}
 
     def test_tune_sweeps_then_caches(self, tmp_path):
         AT.set_cache_path(tmp_path / "tune.json")
