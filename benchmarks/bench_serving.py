@@ -1,0 +1,385 @@
+"""Open-loop serving traffic benchmark over the HTTP/SSE front door.
+
+TeLLMe's headline numbers are serving-latency numbers; this bench measures
+them *as a service* through real sockets (DESIGN.md §serving-frontdoor):
+
+1. **Latency sweep** — an in-process `ServingServer` takes open-loop Poisson
+   traffic (ragged prompt lengths, arrivals independent of completions) at
+   ≥3 arrival rates with an SLO mix: plain requests, tight-deadline requests
+   (retire DEADLINE_EXCEEDED without burning prefill — the admission-time
+   deadline check), and mid-stream client disconnects (cancel frees the slot
+   within a tick). Reports p50/p99 TTFT, p50/p99 inter-token latency,
+   goodput, and 429/deadline/cancel counts per rate.
+2. **Backpressure burst** — a concurrent burst against a tiny admission
+   queue must yield HTTP 429 + Retry-After (bounded admission, never
+   unbounded buffering in the server).
+3. **FaultPlan chaos** — the same fixed request set served clean and under a
+   `FaultPlan` (tick_exception + slow_tick + nan). Acceptance bars, not
+   trend metrics (the bench FAILS on violation): every request that ends OK
+   under faults streams a token sequence *byte-identical* to the clean run
+   (greedy emissions are scheduling-independent — the PR-1..7 invariant,
+   now measured through the SSE pipe), at least one nan-targeted request is
+   quarantined/failed with an SSE ``error`` event, and every terminal event
+   maps through ``SSE_EVENT_FOR_STATUS`` (no unmapped terminal ever reaches
+   a socket).
+
+Emits ``BENCH_serving.json`` (CI uploads it) plus ``name,value,notes`` rows.
+
+Run:  PYTHONPATH=src:. python -m benchmarks.bench_serving --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import params as P
+from repro.models import transformer as Tr
+from repro.serving import engine as E
+from repro.serving import resilience as R
+from repro.serving.server import SSE_EVENT_FOR_STATUS, ServingServer
+
+
+def bench_config():
+    return dataclasses.replace(get_config("tellme-0.7b", smoke=True),
+                               dtype=jnp.float32)
+
+
+_PARAMS_CACHE = {}
+
+
+def _params(cfg):
+    key = (cfg.d_model, cfg.n_layers, cfg.vocab_size)
+    if key not in _PARAMS_CACHE:
+        specs = Tr.param_specs(cfg)
+        _PARAMS_CACHE[key] = Tr.pack_tree(
+            P.init_params(specs, jax.random.PRNGKey(0)), specs)
+    return _PARAMS_CACHE[key]
+
+
+def _engine(cfg, *, queue_cap=None, fault_plan=None, slots=3, max_len=256):
+    return E.ServingEngine(_params(cfg), cfg, slots=slots, max_len=max_len,
+                           mode="packed", queue_cap=queue_cap,
+                           fault_plan=fault_plan)
+
+
+# --------------------------------------------------------------------------
+# SSE client (stdlib asyncio, real sockets)
+# --------------------------------------------------------------------------
+
+async def _sse_request(host, port, payload, *, disconnect_after=None):
+    """One POST /v1/generate; returns the request's full observable record:
+    http status, SSE events, token ids, arrival timestamps, terminal."""
+    rec = {"http": None, "tokens": [], "events": [], "status": None,
+           "detail": None, "t_sent": time.perf_counter(), "t_first": None,
+           "itl": [], "retry_after": None, "disconnected": False}
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        body = json.dumps(payload).encode()
+        writer.write((f"POST /v1/generate HTTP/1.1\r\nhost: {host}\r\n"
+                      f"content-length: {len(body)}\r\n\r\n").encode() + body)
+        await writer.drain()
+        status_line = await reader.readline()
+        rec["http"] = int(status_line.split()[1])
+        headers = {}
+        while True:
+            line = await reader.readline()
+            if line in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = line.decode().partition(":")
+            headers[k.strip().lower()] = v.strip()
+        rec["retry_after"] = headers.get("retry-after")
+        if rec["http"] != 200:
+            return rec
+        event, last_tok_t = None, None
+        while True:
+            line = await reader.readline()
+            if not line:
+                break  # EOF = stream closed after the terminal event
+            line = line.strip().decode()
+            if line.startswith("event:"):
+                event = line.split(":", 1)[1].strip()
+            elif line.startswith("data:"):
+                data = json.loads(line.split(":", 1)[1])
+                rec["events"].append(event)
+                if event == "token":
+                    now = time.perf_counter()
+                    if rec["t_first"] is None:
+                        rec["t_first"] = now
+                    else:
+                        rec["itl"].append(now - last_tok_t)
+                    last_tok_t = now
+                    rec["tokens"].append(data["token"])
+                    if (disconnect_after is not None
+                            and len(rec["tokens"]) >= disconnect_after):
+                        rec["disconnected"] = True
+                        return rec  # abrupt close → server must cancel
+                elif event in ("done", "error"):
+                    rec["status"] = data["status"]
+                    rec["detail"] = data.get("detail")
+        return rec
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except Exception:  # noqa: BLE001
+            pass
+
+
+async def _wait_ready(server):
+    while not server.ready:
+        await asyncio.sleep(0.02)
+
+
+# --------------------------------------------------------------------------
+# Phase 1+2: open-loop Poisson sweep + backpressure burst
+# --------------------------------------------------------------------------
+
+def _mix(cfg, n, seed):
+    """Ragged prompt mix with an SLO spread: every 5th request carries a
+    deadline it cannot meet (admission-time DEADLINE_EXCEEDED, zero prefill
+    burned), every 6th client disconnects after its first token."""
+    rng = random.Random(seed)
+    specs = []
+    for i in range(n):
+        plen = rng.choice((8, 16, 24, 40, 48))
+        payload = {"prompt": [1 + (7 * i + j) % (cfg.vocab_size - 1)
+                              for j in range(plen)],
+                   "max_new": rng.choice((8, 12, 16))}
+        spec = {"payload": payload, "disconnect_after": None}
+        if i % 5 == 4:
+            payload["deadline_s"] = 0.001  # expired before any slot frees
+        elif i % 6 == 5:
+            spec["disconnect_after"] = 1
+        specs.append(spec)
+    return specs
+
+
+async def _sweep_rate(cfg, rate, n, seed):
+    server = ServingServer(_engine(cfg, queue_cap=16), host="127.0.0.1",
+                           port=0)
+    await server.start()
+    try:
+        await _wait_ready(server)
+        rng = random.Random(seed)
+        specs = _mix(cfg, n, seed)
+        at = 0.0
+        for s in specs:
+            at += rng.expovariate(rate)
+            s["at"] = at  # open loop: arrival times fixed up front
+
+        t0 = time.perf_counter()
+
+        async def one(spec):
+            await asyncio.sleep(spec["at"])
+            return await _sse_request(server.host, server.port,
+                                      spec["payload"],
+                                      disconnect_after=spec["disconnect_after"])
+
+        recs = await asyncio.gather(*(one(s) for s in specs))
+        wall = time.perf_counter() - t0
+        return recs, wall
+    finally:
+        await server.drain_and_stop(10.0)
+
+
+def _pct(xs, q):
+    if not xs:
+        return None
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def _summarize(recs, wall):
+    ttft = [r["t_first"] - r["t_sent"] for r in recs
+            if r["t_first"] is not None]
+    itl = [g for r in recs for g in r["itl"]]
+    ok_tokens = sum(len(r["tokens"]) for r in recs if r["status"] == "OK")
+    counts = {
+        "ok": sum(r["status"] == "OK" for r in recs),
+        "deadline": sum(r["status"] == "DEADLINE_EXCEEDED" for r in recs),
+        "cancelled": sum(r["disconnected"] for r in recs),
+        "http_429": sum(r["http"] == 429 for r in recs),
+        "error": sum(r["status"] in ("QUARANTINED", "FAILED") for r in recs),
+    }
+    ms = lambda x: None if x is None else round(x * 1e3, 2)  # noqa: E731
+    return {
+        "n": len(recs),
+        "ttft_ms": {"p50": ms(_pct(ttft, 0.50)), "p99": ms(_pct(ttft, 0.99))},
+        "itl_ms": {"p50": ms(_pct(itl, 0.50)), "p99": ms(_pct(itl, 0.99))},
+        "goodput_tok_s": round(ok_tokens / max(wall, 1e-9), 1),
+        "counts": counts,
+    }
+
+
+async def _burst(cfg, n=12):
+    """Concurrent burst against a tiny admission queue: bounded admission
+    must answer 429 + Retry-After, not buffer unboundedly."""
+    server = ServingServer(_engine(cfg, queue_cap=2, slots=2),
+                           host="127.0.0.1", port=0)
+    await server.start()
+    try:
+        await _wait_ready(server)
+        payload = {"prompt": list(range(1, 25)), "max_new": 8}
+        recs = await asyncio.gather(*(
+            _sse_request(server.host, server.port, dict(payload))
+            for _ in range(n)))
+        rejected = [r for r in recs if r["http"] == 429]
+        return {
+            "sent": n,
+            "rejected_429": len(rejected),
+            "retry_after_present": all(r["retry_after"] for r in rejected),
+        }
+    finally:
+        await server.drain_and_stop(10.0)
+
+
+# --------------------------------------------------------------------------
+# Phase 3: FaultPlan chaos through the socket
+# --------------------------------------------------------------------------
+
+def _fault_plan():
+    """tick_exception early (sticky XLA fallback path), a slow tick (straggler
+    detector), then a nan burst pinned to slot 0 (numerics quarantine).
+    Warmup consumes the first few ticks, so faults start at tick 6."""
+    return R.FaultPlan(faults=(
+        R.Fault(kind="tick_exception", tick=6),
+        R.Fault(kind="slow_tick", tick=8, duration_s=0.05),
+        R.Fault(kind="nan", tick=10, slot=0, repeat=4),
+    ))
+
+
+async def _fault_phase(cfg):
+    prompts = [[1 + (11 * i + j) % (cfg.vocab_size - 1)
+                for j in range(16 + 8 * (i % 3))] for i in range(6)]
+
+    async def serve_all(fault_plan):
+        server = ServingServer(_engine(cfg, fault_plan=fault_plan),
+                               host="127.0.0.1", port=0)
+        await server.start()
+        try:
+            await _wait_ready(server)
+            return await asyncio.gather(*(
+                _sse_request(server.host, server.port,
+                             {"prompt": p, "max_new": 24}) for p in prompts))
+        finally:
+            await server.drain_and_stop(10.0)
+
+    clean = await serve_all(None)
+    faulted = await serve_all(_fault_plan())
+
+    failures = []
+    if not all(r["status"] == "OK" for r in clean):
+        failures.append("clean run must end every request OK: "
+                        f"{[r['status'] for r in clean]}")
+    # unmapped-terminal check: every stream ended in exactly one mapped
+    # terminal event of the right kind
+    unmapped = []
+    for r in clean + faulted:
+        if r["status"] is None:
+            unmapped.append("stream ended without a terminal event")
+        elif r["status"] not in SSE_EVENT_FOR_STATUS:
+            unmapped.append(r["status"])
+        elif r["events"][-1] != SSE_EVENT_FOR_STATUS[r["status"]]:
+            unmapped.append(f"{r['status']} via {r['events'][-1]}")
+    if unmapped:
+        failures.append(f"unmapped terminal statuses: {unmapped}")
+    # bit-identity bar: greedy emissions are scheduling- and fault-
+    # independent for requests the faults didn't kill (PR-7 isolation)
+    mismatched = [i for i, (c, f) in enumerate(zip(clean, faulted))
+                  if f["status"] == "OK" and f["tokens"] != c["tokens"]]
+    if mismatched:
+        failures.append(f"OK-under-faults streams diverged from clean run "
+                        f"at indices {mismatched}")
+    statuses = {}
+    for r in faulted:
+        statuses[r["status"]] = statuses.get(r["status"], 0) + 1
+    if not any(r["status"] in ("QUARANTINED", "FAILED") and
+               r["events"][-1] == "error" for r in faulted):
+        failures.append("nan fault produced no QUARANTINED/FAILED error "
+                        f"event (statuses: {statuses})")
+    return {
+        "clean_ok": sum(r["status"] == "OK" for r in clean),
+        "fault_statuses": statuses,
+        "ok_bit_identical": not mismatched,
+        "failures": failures,
+    }
+
+
+# --------------------------------------------------------------------------
+
+async def _amain(smoke: bool):
+    cfg = bench_config()
+    rates = list(getattr(cfg, "bench_arrival_rates", (2.0, 6.0, 18.0)))
+    n = 8 if smoke else int(getattr(cfg, "bench_requests_per_rate", 24))
+    data = {"bench": "serving_front_door", "smoke": smoke, "rates": []}
+    for i, rate in enumerate(rates):
+        recs, wall = await _sweep_rate(cfg, rate, n, seed=1234 + i)
+        data["rates"].append({"rate": rate, **_summarize(recs, wall)})
+    data["backpressure"] = await _burst(cfg)
+    data["fault"] = await _fault_phase(cfg)
+    return data
+
+
+def run(*, smoke: bool = True) -> list[str]:
+    data = asyncio.run(_amain(smoke))
+    failures = list(data["fault"]["failures"])
+    bp = data["backpressure"]
+    if bp["rejected_429"] < 1:
+        failures.append("backpressure burst produced no HTTP 429")
+    elif not bp["retry_after_present"]:
+        failures.append("429 responses missing Retry-After")
+    data["pass"] = not failures
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(data, f, indent=2)
+
+    rows = []
+    for r in data["rates"]:
+        tag = f"rate{r['rate']:g}"
+        rows.append(f"serving_ttft_p50_ms_{tag},{r['ttft_ms']['p50']},"
+                    f"open-loop Poisson x{r['n']} (CPU smoke, incl. queueing)")
+        rows.append(f"serving_ttft_p99_ms_{tag},{r['ttft_ms']['p99']},"
+                    f"tail incl. chunked-prefill contention")
+        rows.append(f"serving_itl_p50_ms_{tag},{r['itl_ms']['p50']},"
+                    f"inter-token gap at the socket")
+        rows.append(f"serving_itl_p99_ms_{tag},{r['itl_ms']['p99']},"
+                    f"tail inter-token gap")
+        rows.append(f"serving_goodput_tok_s_{tag},{r['goodput_tok_s']},"
+                    f"OK-status tokens over wall time; counts={r['counts']}")
+    rows.append(f"serving_429_burst,{bp['rejected_429']}/{bp['sent']},"
+                f"bounded admission queue answers 429 + Retry-After")
+    ft = data["fault"]
+    rows.append(f"serving_fault_bit_identity,"
+                f"{'PASS' if ft['ok_bit_identical'] else 'FAIL'},"
+                f"OK-under-faults SSE streams byte-identical to clean run")
+    rows.append(f"serving_fault_statuses,\"{ft['fault_statuses']}\","
+                f"FaultPlan terminal mix (nan+slow_tick+tick_exception)")
+    if failures:
+        raise AssertionError("; ".join(failures))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    try:
+        for row in run(smoke=args.smoke):
+            print(row)
+    except AssertionError as exc:
+        print(f"FAIL: {exc}")
+        return 1
+    print("wrote BENCH_serving.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,6 +23,7 @@ def main() -> int:
         ("tableV_compression", "benchmarks.bench_compression"),
         ("tl_engine", "benchmarks.bench_tl_engine"),
         ("serving_resilience", "benchmarks.bench_resilience"),
+        ("serving_front_door", "benchmarks.bench_serving"),
     ]
     failures = 0
     print("name,value,notes")

@@ -1,0 +1,151 @@
+"""Streaming client example for the HTTP/SSE front door.
+
+Boots an in-process ``ServingServer`` (smoke-scale packed-ternary engine,
+DESIGN.md §serving-frontdoor), then talks to it exactly the way an external
+client would — over a loopback socket, stdlib only:
+
+* a plain streaming request, printing each ``token`` event as it arrives and
+  the terminal ``done`` event with its structured status;
+* a tight-deadline request that retires ``DEADLINE_EXCEEDED`` while queued
+  (the admission-time deadline check — zero prefill burned);
+* a burst against the bounded admission queue, showing HTTP 429 +
+  Retry-After backpressure;
+* a mid-stream client disconnect, then ``/v1/stats`` showing the engine
+  retired the request ``CANCELLED`` and freed its slot.
+
+Point it at an already-running server (``python -m repro.launch.server``)
+with ``--connect HOST:PORT`` to skip the in-process boot.
+
+Run:  PYTHONPATH=src:. python examples/stream_client.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+
+
+async def sse_generate(host, port, payload, *, disconnect_after=None,
+                       quiet=False):
+    """POST /v1/generate and consume the SSE stream as it arrives."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps(payload).encode()
+    writer.write((f"POST /v1/generate HTTP/1.1\r\nhost: {host}\r\n"
+                  f"content-length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    headers = {}
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = line.decode().partition(":")
+        headers[k.strip().lower()] = v.strip()
+    if status != 200:
+        print(f"  HTTP {status} (retry-after: {headers.get('retry-after')})")
+        writer.close()
+        return status, None
+    event, tokens, terminal = None, [], None
+    while True:
+        line = await reader.readline()
+        if not line:
+            break
+        line = line.strip().decode()
+        if line.startswith("event:"):
+            event = line.split(":", 1)[1].strip()
+        elif line.startswith("data:"):
+            data = json.loads(line.split(":", 1)[1])
+            if event == "token":
+                tokens.append(data["token"])
+                if not quiet:
+                    print(f"  token[{data['index']}] = {data['token']}")
+                if disconnect_after and len(tokens) >= disconnect_after:
+                    print("  -- client hangs up mid-stream --")
+                    writer.close()
+                    return status, None
+            elif event in ("done", "error"):
+                terminal = data
+                print(f"  {event}: status={data['status']} "
+                      f"tokens={data['tokens']}")
+    writer.close()
+    return status, terminal
+
+
+async def demo(host: str, port: int) -> None:
+    print("\n[1] streaming generation")
+    await sse_generate(host, port, {"prompt": list(range(1, 33)),
+                                    "max_new": 8})
+
+    print("\n[2] deadline propagation: 1 ms deadline behind a long request")
+    long_task = asyncio.ensure_future(sse_generate(
+        host, port, {"prompt": list(range(1, 41)), "max_new": 32},
+        quiet=True))
+    await asyncio.sleep(0.1)  # let it occupy the slots
+    await sse_generate(host, port, {"prompt": [1, 2, 3], "max_new": 8,
+                                    "deadline_s": 0.001})
+    await long_task
+
+    print("\n[3] backpressure: concurrent burst vs the bounded queue")
+    results = await asyncio.gather(*(
+        sse_generate(host, port, {"prompt": list(range(1, 25)), "max_new": 4},
+                     quiet=True) for _ in range(10)))
+    n429 = sum(1 for s, _ in results if s == 429)
+    print(f"  {len(results) - n429} served, {n429} rejected with 429")
+
+    print("\n[4] disconnect-cancel: hang up after the first token")
+    await sse_generate(host, port, {"prompt": list(range(1, 33)),
+                                    "max_new": 64}, disconnect_after=1)
+    await asyncio.sleep(0.3)  # give the engine a tick to retire it
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(b"GET /v1/stats HTTP/1.1\r\n\r\n")
+    await writer.drain()
+    stats = json.loads((await reader.read()).partition(b"\r\n\r\n")[2])
+    writer.close()
+    print(f"  server statuses: {stats['statuses']} "
+          f"(live={stats['live']} queued={stats['queued']})")
+
+
+async def main_async(args) -> int:
+    if args.connect:
+        host, port = args.connect.rsplit(":", 1)
+        await demo(host, int(port))
+        return 0
+
+    import jax
+    from repro.configs import get_config
+    from repro.core import params as P
+    from repro.models import transformer as Tr
+    from repro.serving import engine as E
+    from repro.serving.server import ServingServer
+
+    cfg = dataclasses.replace(get_config("tellme-0.7b", smoke=True))
+    specs = Tr.param_specs(cfg)
+    params = Tr.pack_tree(P.init_params(specs, jax.random.PRNGKey(0)), specs)
+    engine = E.ServingEngine(params, cfg, slots=2, max_len=256, mode="packed",
+                             queue_cap=3)
+    server = await ServingServer(engine, host="127.0.0.1", port=0).start()
+    print(f"[stream_client] in-process server on port {server.port}, "
+          f"warming up (first jit)...")
+    while not server.ready:
+        await asyncio.sleep(0.05)
+    try:
+        await demo(server.host, server.port)
+    finally:
+        await server.drain_and_stop(5.0)
+        print("\n[stream_client] server drained cleanly")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="talk to an already-running server instead of "
+                         "booting one in-process")
+    args = ap.parse_args(argv)
+    return asyncio.run(main_async(args))
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

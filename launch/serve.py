@@ -1,139 +1,10 @@
-"""Serving front door (ROADMAP item 5, seeded by the resilience layer).
+"""Thin wrapper: the canonical batch-serving CLI lives at
+``src/repro/launch/serve.py`` (one home for flags and docs).
 
-A minimal operator-facing CLI over ``serving.ServingEngine``: build the
-packed-ternary engine, serve a batch of requests under the full resilience
-envelope — bounded admission queue, per-request deadlines, priorities and
-preemption, numerics quarantine, sticky kernel→XLA fallback — and report
-every request's structured terminal status plus the engine's event log.
-`step()` never raises (DESIGN.md §resilience), so this loop is the whole
-production driver: there is no try/except around it by design.
-
-Requests come from ``--requests FILE`` (one JSON object per line:
-``{"rid": 0, "prompt": [1, 2, 3], "max_new": 16, "priority": 0}``) or, with
-no file, a synthetic ragged batch that exercises chunked prefill, retirement
-and re-admission.
-
-Run:  PYTHONPATH=src python launch/serve.py [--kv-cache-dtype int8]
-          [--speculative] [--queue-cap N] [--deadline-s S] [--slots N]
-          [--max-len N] [--json]
+Run:  PYTHONPATH=src python launch/serve.py --smoke [--json] [...]
 """
 
-from __future__ import annotations
-
-import argparse
-import dataclasses
-import json
-import sys
-import time
-
-import jax
-
-from repro.configs import get_config
-from repro.core import params as P
-from repro.models import transformer as T
-from repro.serving import engine as E
-
-
-def _load_requests(path: str | None, cfg, deadline_s: float | None):
-    if path is None:
-        lens = [8, 200, 24, 150, 64, 12, 96, 40]
-        return [
-            E.Request(rid=i,
-                      prompt=jax.random.randint(jax.random.PRNGKey(i),
-                                                (lens[i],), 0, cfg.vocab_size),
-                      max_new=4 + 2 * (i % 3), deadline_s=deadline_s)
-            for i in range(len(lens))
-        ]
-    reqs = []
-    with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if not line:
-                continue
-            d = json.loads(line)
-            import numpy as np
-            reqs.append(E.Request(
-                rid=int(d["rid"]), prompt=np.asarray(d["prompt"], np.int64),
-                max_new=int(d.get("max_new", 16)),
-                priority=int(d.get("priority", 0)),
-                deadline_s=d.get("deadline_s", deadline_s)))
-    return reqs
-
-
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--arch", default="tellme-0.7b")
-    ap.add_argument("--smoke", action="store_true", default=True,
-                    help="smoke-scale config (default: on; full-size weights "
-                         "need a checkpoint loader, ROADMAP item 5)")
-    ap.add_argument("--kv-cache-dtype", default="bf16",
-                    choices=["bf16", "int8"])
-    ap.add_argument("--speculative", action="store_true")
-    ap.add_argument("--slots", type=int, default=3)
-    ap.add_argument("--max-len", type=int, default=512)
-    ap.add_argument("--queue-cap", type=int, default=0,
-                    help="bound the admission queue (0 = unbounded); full "
-                         "queue rejects the submit with FAILED/queue_full")
-    ap.add_argument("--deadline-s", type=float, default=0.0,
-                    help="default per-request TTL (0 = none); expired "
-                         "requests retire as DEADLINE_EXCEEDED")
-    ap.add_argument("--requests", default=None, metavar="FILE",
-                    help="JSONL request file (default: synthetic batch)")
-    ap.add_argument("--json", action="store_true",
-                    help="emit a machine-readable result object instead of "
-                         "the human summary")
-    args = ap.parse_args(argv)
-
-    cfg = dataclasses.replace(get_config(args.arch, smoke=args.smoke),
-                              kv_cache_dtype=args.kv_cache_dtype)
-    specs = T.param_specs(cfg)
-    params = T.pack_tree(P.init_params(specs, jax.random.PRNGKey(0)), specs)
-    eng = E.ServingEngine(params, cfg, slots=args.slots, max_len=args.max_len,
-                          mode="packed", speculative=args.speculative,
-                          queue_cap=args.queue_cap or None)
-
-    reqs = _load_requests(args.requests, cfg, args.deadline_s or None)
-    admitted = [eng.submit(r) for r in reqs]
-    t0 = time.time()
-    eng.run()
-    dt = time.time() - t0
-    stats = eng.stats()
-    total = sum(len(r.generated) for r in reqs)
-
-    if args.json:
-        json.dump({
-            "requests": [{
-                "rid": r.rid, "status": r.status.name,
-                "detail": r.status_detail, "tokens": list(r.generated),
-                "preemptions": r.preemptions,
-            } for r in reqs],
-            "admitted": sum(admitted), "rejected": len(reqs) - sum(admitted),
-            "tokens": total, "ticks": stats["ticks"], "seconds": round(dt, 3),
-            "statuses": stats["statuses"], "events": stats["events"],
-            "attn_impl": stats["attn_impl"],
-            "xla_fallback": stats["xla_fallback"],
-        }, sys.stdout, indent=2)
-        print()
-    else:
-        print(f"served {sum(admitted)}/{len(reqs)} admitted requests, "
-              f"{total} tokens in {stats['ticks']} ticks ({dt:.1f}s incl. "
-              f"compile, {total / dt:.1f} tok/s)")
-        for r in reqs:
-            note = f" ({r.status_detail})" if r.status_detail else ""
-            pre = f" preempted×{r.preemptions}" if r.preemptions else ""
-            print(f"  req {r.rid}: prompt={len(r.prompt)} "
-                  f"[{r.status.name}{note}]{pre} -> {len(r.generated)} tokens")
-        print(f"statuses: {stats['statuses']} | "
-              f"preemptions={stats['preemptions']} "
-              f"quarantined={stats['quarantined']} "
-              f"stragglers={stats['straggler']['straggler_events']} "
-              f"attn_impl={stats['attn_impl']}"
-              f"{' (xla fallback)' if stats['xla_fallback'] else ''}")
-    # operator exit code: 0 only if every admitted request ended OK
-    bad = [r for r, a in zip(reqs, admitted)
-           if a and r.status.name not in ("OK",)]
-    return 1 if bad else 0
-
+from repro.launch.serve import main
 
 if __name__ == "__main__":
     raise SystemExit(main())

@@ -1,0 +1,10 @@
+"""Thin wrapper: the canonical HTTP/SSE server launcher lives at
+``src/repro/launch/server.py`` (DESIGN.md §serving-frontdoor).
+
+Run:  PYTHONPATH=src python launch/server.py --smoke --port 8080
+"""
+
+from repro.launch.server import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -97,6 +97,22 @@ class ModelConfig:
     request_ttl_s: float = 0.0
     spec_min_acceptance: float = 0.05
     spec_disable_after: int = 64
+    # Engine event-log ring size (0 = unbounded): stats() bookkeeping on a
+    # long-lived server stays fixed-size, with a dropped-events counter.
+    stats_ring_events: int = 4096
+    # --- serving: async front door (DESIGN.md §serving-frontdoor) ----------------
+    # HTTP/SSE server defaults (launch/server.py overrides per flag). The
+    # drain timeout is the SIGTERM hard-kill ceiling: in-flight requests get
+    # this long to finish or deadline-out before the server cancels them.
+    server_host: str = "127.0.0.1"
+    server_port: int = 8080
+    server_drain_timeout_s: float = 30.0
+    server_poll_s: float = 0.001  # driver-thread idle poll between ticks
+    # --- serving: open-loop traffic benchmark (benchmarks/bench_serving.py) ------
+    # Poisson arrival-rate sweep (requests/s) and per-rate request count for
+    # the latency-under-load report; --smoke shrinks both.
+    bench_arrival_rates: tuple = (2.0, 6.0, 18.0)
+    bench_requests_per_rate: int = 24
     # --- numerics ----------------------------------------------------------------
     norm_eps: float = 1e-5
     rope_theta: float = 10000.0

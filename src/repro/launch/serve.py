@@ -1,25 +1,41 @@
-"""Serving launcher: packed-ternary continuous batching (chunked prefill + decode).
+"""Canonical batch-serving CLI: packed-ternary continuous batching under the
+full resilience envelope.
 
-Converts trained (or randomly-initialized) float params into the 2-bit
-packed serving form, then serves a ragged batch of prompts through the
-continuous-batching engine: prompts prefill in fixed-size chunks (bucketed to
-``cfg.prefill_chunk_sizes`` — at most three compiled prefill shapes) written
-straight into the batched KV cache, while decoding slots keep advancing every
-tick. Reports time-to-first-token and decode throughput — the paper's Fig. 9
-metrics, on CPU at smoke scale.
+This is the single home of the one-shot serving launcher (the repo-root
+``launch/serve.py`` is a thin wrapper). It converts trained (or randomly
+initialized) float params into the 2-bit packed serving form, then serves a
+batch of prompts through the continuous-batching engine — chunked prefill in
+bucketed fixed-size chunks, decode slots advancing every tick — under the
+PR-7 resilience envelope: bounded admission queue, per-request deadlines and
+priorities with preemption, numerics quarantine, sticky kernel→XLA fallback.
+``step()`` never raises (DESIGN.md §resilience), so the drive loop is the
+whole production driver. Reports time-to-first-token and decode throughput
+(the paper's Fig. 9 metrics, on CPU at smoke scale) plus every request's
+structured terminal status.
+
+For the *streaming* front door (HTTP/SSE, open-loop traffic), see
+``repro.launch.server`` (DESIGN.md §serving-frontdoor).
+
+Requests come from ``--requests FILE`` (one JSON object per line:
+``{"rid": 0, "prompt": [1, 2, 3], "max_new": 16, "priority": 0}``) or, with
+no file, a synthetic batch shaped by --prompt-len/--ragged/--gen/--batch.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch tellme-0.7b --smoke \
-      --prompt-len 64 --gen 32 --batch 4
+      --prompt-len 64 --gen 32 --batch 4 [--speculative] [--queue-cap N] \
+      [--deadline-s S] [--json]
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import sys
 import time
 
 import jax
+import numpy as np
 
 from ..configs import get_config
 from ..core import params as P
@@ -27,8 +43,37 @@ from ..models import transformer as Tr
 from ..serving import engine as E
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def _load_requests(path, cfg, args):
+    if path is None:
+        lens = [args.prompt_len] * args.batch
+        if args.ragged:
+            lens = [max(8, args.prompt_len // (1 << (i % 3)))
+                    for i in range(args.batch)]
+        return [
+            E.Request(rid=i,
+                      prompt=jax.random.randint(jax.random.PRNGKey(i + 1),
+                                                (l,), 0, cfg.vocab_size),
+                      max_new=args.gen,
+                      deadline_s=args.deadline_s or None)
+            for i, l in enumerate(lens)
+        ]
+    reqs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            reqs.append(E.Request(
+                rid=int(d["rid"]), prompt=np.asarray(d["prompt"], np.int64),
+                max_new=int(d.get("max_new", 16)),
+                priority=int(d.get("priority", 0)),
+                deadline_s=d.get("deadline_s", args.deadline_s or None)))
+    return reqs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="tellme-0.7b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=64)
@@ -51,17 +96,27 @@ def main(argv=None):
                          "per-request bucketed prefill + scatter")
     ap.add_argument("--speculative", action="store_true",
                     help="speculative decoding (DESIGN.md §speculative): "
-                         "prompt-lookup drafting + chunk-verify through the "
-                         "prefill_append path; greedy output bit-identical "
-                         "to plain decode, up to γ+1 tokens per tick")
+                         "prompt-lookup drafting + chunk-verify; greedy "
+                         "output bit-identical to plain decode")
     ap.add_argument("--spec-gamma", type=int, default=0,
                     help="draft tokens verified per tick (default: "
                          "cfg.spec_gamma)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bound the admission queue (0 = unbounded); full "
+                         "queue rejects the submit with FAILED/queue_full")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="default per-request TTL (0 = none); expired "
+                         "requests retire as DEADLINE_EXCEEDED")
+    ap.add_argument("--requests", default=None, metavar="FILE",
+                    help="JSONL request file (default: synthetic batch)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable result object instead of "
+                         "the human summary")
     ap.add_argument("--ckpt")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_cache_dtype)
+    cfg = dataclasses.replace(get_config(args.arch, smoke=args.smoke),
+                              kv_cache_dtype=args.kv_cache_dtype)
     specs = Tr.param_specs(cfg)
     params = P.init_params(specs, jax.random.PRNGKey(0))
     if args.ckpt:
@@ -70,39 +125,35 @@ def main(argv=None):
         ckpt = CheckpointManager(args.ckpt)
         trees, _ = ckpt.restore(ckpt.latest_step())
         params = trees["params"]
-    serve_params = Tr.pack_tree(params, specs) if args.mode == "packed" else params
-    if args.mode == "packed":
+    serve_params = (Tr.pack_tree(params, specs)
+                    if args.mode == "packed" else params)
+    if args.mode == "packed" and not args.json:
         fb = P.param_bytes(specs)
-        pb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(serve_params))
+        pb = sum(x.size * x.dtype.itemsize
+                 for x in jax.tree.leaves(serve_params))
         print(f"[serve] packed weights: {pb/2**20:.1f} MiB "
               f"(float master {fb/2**20:.1f} MiB, {fb/pb:.1f}x compression)")
 
-    lens = [args.prompt_len] * args.batch
-    if args.ragged:
-        lens = [max(8, args.prompt_len // (1 << (i % 3))) for i in range(args.batch)]
-    prompts = [
-        jax.random.randint(jax.random.PRNGKey(i + 1), (l,), 0, cfg.vocab_size)
-        for i, l in enumerate(lens)
-    ]
-    max_len = args.max_len or max(lens) + args.gen + 1
+    reqs = _load_requests(args.requests, cfg, args)
+    lens = [len(r.prompt) for r in reqs]
+    max_len = args.max_len or max(lens) + max(r.max_new for r in reqs) + 1
     eng = E.ServingEngine(
-        serve_params, cfg, slots=args.slots or args.batch, max_len=max_len,
+        serve_params, cfg, slots=args.slots or len(reqs), max_len=max_len,
         mode=args.mode, prefill=args.prefill, speculative=args.speculative,
         spec_gamma=args.spec_gamma or None,
+        queue_cap=args.queue_cap or None,
     )
-    reqs = [E.Request(rid=i, prompt=p, max_new=args.gen) for i, p in enumerate(prompts)]
-    for r in reqs:
-        eng.submit(r)
+    admitted = [eng.submit(r) for r in reqs]
 
-    # measured cache residency vs the bf16 layout of the same geometry
-    got, ref16 = E.cache_savings(eng)
-    print(f"[serve] kv_cache_dtype={cfg.kv_cache_dtype}: cache resident "
-          f"{got/2**20:.2f} MiB (bf16 layout {ref16/2**20:.2f} MiB, "
-          f"{ref16/got:.2f}x)")
-    if args.speculative and not eng.speculative:
-        print(f"[serve] speculative requested but family={cfg.family!r} "
-              f"prefill={eng.prefill!r} stays on plain decode "
-              f"(DESIGN.md §speculative)")
+    if not args.json:
+        got, ref16 = E.cache_savings(eng)
+        print(f"[serve] kv_cache_dtype={cfg.kv_cache_dtype}: cache resident "
+              f"{got/2**20:.2f} MiB (bf16 layout {ref16/2**20:.2f} MiB, "
+              f"{ref16/got:.2f}x)")
+        if args.speculative and not eng.speculative:
+            print(f"[serve] speculative requested but family={cfg.family!r} "
+                  f"prefill={eng.prefill!r} stays on plain decode "
+                  f"(DESIGN.md §speculative)")
 
     t0 = time.time()
     first_tok_at = {}
@@ -114,25 +165,53 @@ def main(argv=None):
             if r.generated and r.rid not in first_tok_at:
                 first_tok_at[r.rid] = time.time() - t0
     dt = time.time() - t0
-
+    stats = eng.stats()
     total = sum(len(r.generated) for r in reqs)
-    rejected = sum(1 for r in reqs if r.done and not r.generated)
     ttft = sorted(first_tok_at.values())
-    print(f"[serve] prefill={eng.prefill} lens={lens}: {ticks} ticks, "
-          f"{total} tokens in {dt*1e3:.1f} ms (incl. compile, "
-          f"{rejected} rejected)")
-    if ttft:
-        print(f"[serve] time-to-first-token ms: "
-              f"min={ttft[0]*1e3:.1f} max={ttft[-1]*1e3:.1f}")
-    print(f"[serve] decode throughput: {total/max(dt, 1e-9):.1f} tok/s "
-          f"({eng.compiled_prefill_shapes} compiled tick shapes)")
-    if eng.speculative:
-        rates = " ".join(f"r{r.rid}={r.spec_acceptance:.2f}" for r in reqs)
-        print(f"[serve] speculative γ={eng.spec_gamma}: acceptance "
-              f"{eng.spec_acceptance_rate:.2f} overall ({rates}), "
-              f"accepted-tokens/s {total/max(dt, 1e-9):.1f}")
-    print(f"[serve] sample generated ids[0,:16]: {reqs[0].generated[:16]}")
-    return 0
+
+    if args.json:
+        json.dump({
+            "requests": [{
+                "rid": r.rid, "status": r.status.name,
+                "detail": r.status_detail, "tokens": list(r.generated),
+                "preemptions": r.preemptions,
+            } for r in reqs],
+            "admitted": sum(admitted), "rejected": len(reqs) - sum(admitted),
+            "tokens": total, "ticks": stats["ticks"], "seconds": round(dt, 3),
+            "ttft_ms": [round(t * 1e3, 2) for t in ttft],
+            "statuses": stats["statuses"], "events": stats["events"],
+            "attn_impl": stats["attn_impl"],
+            "xla_fallback": stats["xla_fallback"],
+        }, sys.stdout, indent=2)
+        print()
+    else:
+        print(f"[serve] prefill={eng.prefill} lens={lens}: served "
+              f"{sum(admitted)}/{len(reqs)} admitted, {total} tokens in "
+              f"{ticks} ticks / {dt*1e3:.1f} ms (incl. compile)")
+        if ttft:
+            print(f"[serve] time-to-first-token ms: "
+                  f"min={ttft[0]*1e3:.1f} max={ttft[-1]*1e3:.1f}")
+        print(f"[serve] decode throughput: {total/max(dt, 1e-9):.1f} tok/s "
+              f"({eng.compiled_prefill_shapes} compiled tick shapes)")
+        if eng.speculative:
+            rates = " ".join(f"r{r.rid}={r.spec_acceptance:.2f}" for r in reqs)
+            print(f"[serve] speculative γ={eng.spec_gamma}: acceptance "
+                  f"{eng.spec_acceptance_rate:.2f} overall ({rates})")
+        for r in reqs:
+            note = f" ({r.status_detail})" if r.status_detail else ""
+            pre = f" preempted×{r.preemptions}" if r.preemptions else ""
+            print(f"  req {r.rid}: prompt={len(r.prompt)} "
+                  f"[{r.status.name}{note}]{pre} -> {len(r.generated)} tokens")
+        print(f"[serve] statuses: {stats['statuses']} | "
+              f"preemptions={stats['preemptions']} "
+              f"quarantined={stats['quarantined']} "
+              f"stragglers={stats['straggler']['straggler_events']} "
+              f"attn_impl={stats['attn_impl']}"
+              f"{' (xla fallback)' if stats['xla_fallback'] else ''}")
+    # operator exit code: 0 only if every admitted request ended OK
+    bad = [r for r, a in zip(reqs, admitted)
+           if a and r.status.name not in ("OK",)]
+    return 1 if bad else 0
 
 
 if __name__ == "__main__":

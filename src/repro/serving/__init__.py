@@ -17,4 +17,9 @@ from .resilience import (  # noqa: F401
     FaultPlan,
     Status,
 )
+from .server import (  # noqa: F401
+    SSE_EVENT_FOR_STATUS,
+    EngineDriver,
+    ServingServer,
+)
 from .speculative import accept_tokens, make_drafter, ngram_draft  # noqa: F401

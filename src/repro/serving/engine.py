@@ -561,7 +561,21 @@ class ServingEngine:
         self._clock = clock
         self.straggler = straggler or FT.StragglerMonitor()
         self.tick_count = 0
+        # Tick-stamped resilience/serving event ring: bounded so a days-long
+        # server cannot leak host memory through its own bookkeeping. When
+        # full, the oldest event is dropped and counted (stats() reports it).
         self.events: list[dict] = []  # (kind, tick, ...) resilience events
+        self.events_cap = int(getattr(cfg, "stats_ring_events", 4096))
+        self.events_dropped = 0
+        # Incremental delivery hooks (DESIGN.md §serving-frontdoor): after
+        # every step(), on_emit(req, new_tokens) fires once per request that
+        # emitted this tick and on_finish(req) once per request that reached
+        # a terminal status inside the tick — both on the caller's (driver)
+        # thread, after the tick's device transfer, never mid-dispatch. The
+        # async server bridges them onto per-stream queues; None (default)
+        # keeps the tick path hook-free.
+        self.on_emit = None  # callable(req, list[int]) | None
+        self.on_finish = None  # callable(req) | None
         self.status_counts: collections.Counter = collections.Counter()
         self.xla_fallback = False  # sticky kernel→XLA impl fallback tripped
         self._seq = 0  # submission counter (priority FIFO / preemption ties)
@@ -581,11 +595,7 @@ class ServingEngine:
         full — backpressure instead of silent growth. A rejected request may
         be resubmitted later: a successful submit resets its lifecycle."""
         if self.queue_cap and len(self.queue) >= self.queue_cap:
-            req.done = True
-            req.status = R.Status.FAILED
-            req.status_detail = "queue_full"
-            req.finished_at = self._clock()
-            self.status_counts[R.Status.FAILED] += 1
+            self._finish(None, req, R.Status.FAILED, detail="queue_full")
             self._event("admission_reject", rid=req.rid, detail="queue_full")
             return False
         req.done = False
@@ -610,6 +620,9 @@ class ServingEngine:
         return False
 
     def _event(self, kind: str, **detail):
+        if self.events_cap and len(self.events) >= self.events_cap:
+            del self.events[0]  # fixed-size ring: drop oldest, keep counting
+            self.events_dropped += 1
         self.events.append({"kind": kind, "tick": self.tick_count, **detail})
 
     def _finish(self, slot: int | None, req: Request, status: R.Status,
@@ -696,6 +709,9 @@ class ServingEngine:
             "statuses": {s.name: n for s, n in sorted(
                 self.status_counts.items(), key=lambda kv: kv[0].name)},
             "events": [dict(e) for e in self.events],
+            "events_dropped": self.events_dropped,
+            "queued": len(self.queue),
+            "live": sum(r is not None for r in self.live),
             "straggler": self.straggler.report(),
             "attn_impl": self.attn_impl,
             "xla_fallback": self.xla_fallback,
@@ -739,6 +755,18 @@ class ServingEngine:
         the rest. A preempted request (``generated`` non-empty) re-prefills
         from its prompt + emitted history with the remaining budget, so its
         continuation is exactly what an uncontended run would have decoded."""
+        # Deadlines are re-judged at admission time, not only at the top of
+        # the tick: a slow tick (compile, straggler) can expire a queued
+        # request between the tick-top expiry pass and this pop — admitting
+        # it would burn a slot and prefill chunks for output nobody can use.
+        # Cancellation gets the same courtesy (same race window).
+        now = self._clock()
+        if req.cancel_requested:
+            self._finish(None, req, R.Status.CANCELLED)
+            return False
+        if req.expired(now):
+            self._finish(None, req, R.Status.DEADLINE_EXCEEDED)
+            return False
         prompt = np.asarray(req.prompt)
         remaining = req.max_new
         if req.generated:  # resume after preemption: prompt + emitted history
@@ -1155,7 +1183,32 @@ class ServingEngine:
         chunked-prefill + decode step (or a plain decode / speculative-verify
         step). One host transfer either way. ``step`` never raises — a
         failing tick degrades through the sticky XLA fallback and, last,
-        ``FAILED`` retirements (DESIGN.md §resilience)."""
+        ``FAILED`` retirements (DESIGN.md §resilience).
+
+        With ``on_emit``/``on_finish`` set (DESIGN.md §serving-frontdoor),
+        every request that was in the queue or a slot when the tick started
+        is re-inspected after it: new tokens fire ``on_emit(req, tokens)``
+        and a terminal transition fires ``on_finish(req)`` — tokens strictly
+        before the finish, so a stream's terminal event always trails its
+        last token. Every path that can end a request inside a tick (expiry,
+        cancellation, quarantine, retirement, ``_fail_all_live``) flows
+        through this one delivery point; requests rejected by ``submit()``
+        itself never reach it (the caller sees the rejection synchronously).
+        """
+        watch = None
+        if self.on_emit is not None or self.on_finish is not None:
+            watch = [(r, len(r.generated)) for r in
+                     self.queue + [x for x in self.live if x is not None]]
+        out = self._step_impl()
+        if watch is not None:
+            for req, n in watch:
+                if self.on_emit is not None and len(req.generated) > n:
+                    self.on_emit(req, req.generated[n:])
+                if self.on_finish is not None and req.done:
+                    self.on_finish(req)
+        return out
+
+    def _step_impl(self):
         tick = self.tick_count
         self._expire_and_cancel(self._clock())
         if self._fault_plan is not None:

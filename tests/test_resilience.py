@@ -472,3 +472,142 @@ class TestFaultPlan:
         assert _outs(a) == _outs(b)
         assert [r.status for r in a] == [r.status for r in b]
         assert ea.events == eb.events
+
+
+# ---------------------------------------------------------------------------
+# Serving front-door satellites: bounded event ring, admission-time
+# deadlines, disconnect/cancel races (DESIGN.md §serving-frontdoor)
+# ---------------------------------------------------------------------------
+
+
+def test_event_ring_bounded_with_drop_counter(setup):
+    """The tick-stamped event log is a fixed-size ring: a days-long server
+    cannot leak host memory through its own bookkeeping."""
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, stats_ring_events=4)
+    eng = E.ServingEngine(params, cfg, slots=1, max_len=192, mode="eval",
+                          eos_id=-2, queue_cap=1)
+    keeper = E.Request(rid=0, prompt=_prompts(cfg)[0], max_new=4)
+    assert eng.submit(keeper)
+    for i in range(10):  # every one of these overflows the bounded queue
+        assert not eng.submit(E.Request(rid=100 + i, prompt=_prompts(cfg)[0],
+                                        max_new=4))
+    assert len(eng.events) == 4  # ring holds the newest, drops the oldest
+    assert [e["rid"] for e in eng.events] == [106, 107, 108, 109]
+    assert all(e["kind"] == "admission_reject" for e in eng.events)
+    assert eng.events_dropped == 6
+    assert eng.stats()["events_dropped"] == 6
+    eng.run()
+    assert keeper.status is R.Status.OK
+
+
+def test_deadline_checked_at_admission_not_after_prefill(setup, monkeypatch):
+    """Regression: a queued request whose deadline expires between the
+    tick-top expiry pass and the admission pop (slow tick: compile,
+    straggler) must retire DEADLINE_EXCEEDED *without* burning a slot or
+    prefill chunks — previously it was admitted and prefilled first."""
+    cfg, params = setup
+    clk = [0.0]
+    eng = E.ServingEngine(params, cfg, slots=1, max_len=192, mode="eval",
+                          eos_id=-2, clock=lambda: clk[0], queue_cap=2)
+    a = E.Request(rid=0, prompt=_prompts(cfg)[0], max_new=4)
+    b = E.Request(rid=1, prompt=_prompts(cfg)[1], max_new=4, deadline_s=5.0)
+    c = E.Request(rid=2, prompt=_prompts(cfg)[2], max_new=4)
+    assert eng.submit(a)
+    eng.step()  # a takes the only slot
+    assert eng.submit(b) and eng.submit(c)
+    # the admission queue is full while b waits
+    assert not eng.submit(E.Request(rid=3, prompt=_prompts(cfg)[3], max_new=4))
+
+    scheduled = []
+    orig_sched = E.chunk_schedule
+    monkeypatch.setattr(
+        E, "chunk_schedule",
+        lambda n, sizes: (scheduled.append(n), orig_sched(n, sizes))[1])
+    orig_pop = eng._pop_queued
+
+    def pop_then_stall():
+        req = orig_pop()
+        if req.rid == 1:
+            clk[0] = 10.0  # tick stalls after the pop: b is now past its TTL
+        return req
+
+    monkeypatch.setattr(eng, "_pop_queued", pop_then_stall)
+    eng.run()
+    assert a.status is R.Status.OK and c.status is R.Status.OK
+    assert b.status is R.Status.DEADLINE_EXCEEDED
+    assert b.generated == []
+    assert len(b.prompt) not in scheduled  # no prefill chunks were burned
+
+
+def test_cancel_mid_prefill_chunk_sequence(setup):
+    """Cancel lands while the victim is mid multi-chunk prefill: it retires
+    CANCELLED with its slot freed within one tick, and co-batched + successor
+    streams are bit-identical to a run where it was never submitted."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    long_prompt = rng.integers(1, cfg.vocab_size, size=150)  # 2-chunk plan
+    others = _prompts(cfg, lens=(40, 30), seed=1)
+    base, _ = _run(params, cfg, others, max_len=256)  # victim never admitted
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=256, mode="eval",
+                          eos_id=-2)
+    victim = E.Request(rid=100, prompt=long_prompt, max_new=8)
+    keep = E.Request(rid=101, prompt=others[0], max_new=8)
+    late = E.Request(rid=102, prompt=others[1], max_new=8)
+    assert eng.submit(victim) and eng.submit(keep)
+    eng.step()
+    vslot = next(s for s in range(eng.slots) if eng.live[s] is victim)
+    plan = eng._plan[vslot]
+    assert plan is not None and plan.ci < len(plan.chunks)  # mid-sequence
+    assert eng.cancel(victim.rid)
+    eng.step()  # cancellation retires at the very next tick
+    assert victim.done and victim.status is R.Status.CANCELLED
+    assert eng.live[vslot] is not victim  # slot freed within one tick
+    assert eng.submit(late)
+    eng.run()
+    assert [tuple(keep.generated), tuple(late.generated)] == _outs(base)
+
+
+def test_cancel_between_spec_verify_ticks(setup):
+    """Cancel lands between speculative verify micro-steps: the victim's
+    in-flight draft is abandoned cleanly and the co-batched request's stream
+    is bit-identical to a run without the victim."""
+    cfg, params = setup
+    prompts = _prompts(cfg, lens=(40, 30))
+    base, _ = _run(params, cfg, [prompts[1]], speculative=True)
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=192, mode="eval",
+                          eos_id=-2, speculative=True)
+    victim = E.Request(rid=0, prompt=prompts[0], max_new=32)
+    keep = E.Request(rid=1, prompt=prompts[1], max_new=8)
+    assert eng.submit(victim) and eng.submit(keep)
+    for _ in range(64):  # into the verify loop, but not done
+        eng.step()
+        if victim.generated:
+            break
+    assert victim.generated and not victim.done
+    assert eng.cancel(victim.rid)
+    eng.step()
+    assert victim.status is R.Status.CANCELLED
+    assert all(eng.live[s] is not victim for s in range(eng.slots))
+    eng.run()
+    assert keep.status is R.Status.OK
+    assert [tuple(keep.generated)] == _outs(base)
+
+
+def test_double_cancel_is_idempotent(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, lens=(40, 30))
+    base, _ = _run(params, cfg, [prompts[1]])
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=192, mode="eval",
+                          eos_id=-2)
+    victim = E.Request(rid=0, prompt=prompts[0], max_new=8)
+    keep = E.Request(rid=1, prompt=prompts[1], max_new=8)
+    assert eng.submit(victim) and eng.submit(keep)
+    eng.step()
+    assert eng.cancel(0) and eng.cancel(0)  # second mark is a no-op
+    eng.step()
+    assert victim.status is R.Status.CANCELLED
+    assert not eng.cancel(0)  # already retired: nothing left to cancel
+    eng.run()
+    assert eng.stats()["statuses"]["CANCELLED"] == 1  # exactly one retirement
+    assert [tuple(keep.generated)] == _outs(base)
