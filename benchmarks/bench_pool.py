@@ -1,0 +1,233 @@
+"""Replica-pool benchmark: goodput scaling + kill-one-replica recovery.
+
+Measures the ``ReplicaPool`` (DESIGN.md §replica-pool) through the same real
+HTTP/SSE sockets as ``bench_serving``:
+
+1. **Goodput vs replica count** — the PR-8 open-loop Poisson workload
+   (ragged prompts, tight-deadline requests, mid-stream disconnects —
+   ``bench_serving._mix``) replayed with the *same seed* against pools of
+   1, 2, and 3 replicas behind one shared SLO-class admission queue.
+   Reports p50/p99 TTFT, inter-token latency, goodput, and status counts
+   per pool size.
+2. **Kill-one-replica recovery** — an N=3 pool serving a fixed request set
+   has replica 0's driver thread REALLY killed (async ``SystemExit``) after
+   its first dispatch. Records kill→migration latency (failover detection
+   + deterministic request migration), kill→all-terminal wall time, and
+   the migrated-request count. Acceptance bars, not trend metrics (the
+   bench exits nonzero on violation): every stream still ends ``done OK``
+   with exactly one terminal event, at least one request migrates, and
+   every token sequence is *byte-identical* to an uncontended solo-engine
+   reference — zero token-stream divergence across crash failover.
+
+Emits ``BENCH_pool.json`` (CI uploads it) plus ``name,value,notes`` rows.
+
+Run:  PYTHONPATH=src:. python -m benchmarks.bench_pool --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import ctypes
+import dataclasses
+import json
+import random
+import time
+
+import numpy as np
+
+from benchmarks.bench_serving import (_mix, _params, _sse_request,
+                                      _summarize, _wait_ready, bench_config)
+from repro.serving import engine as E
+from repro.serving.pool import ReplicaPool
+from repro.serving.server import ServingServer
+
+
+def _pool(cfg, replicas, *, queue_cap=16, fault_plan=None, slots=3,
+          max_len=256):
+    params = _params(cfg)  # one pytree shared across replicas
+
+    def factory(idx):
+        return E.ServingEngine(params, cfg, slots=slots, max_len=max_len,
+                               mode="packed", replica_id=idx)
+
+    return ReplicaPool(factory, cfg, replicas=replicas, queue_cap=queue_cap,
+                       fault_plan=fault_plan)
+
+
+async def _boot(cfg, replicas, **kw):
+    pool = _pool(cfg, replicas, **kw)
+    server = await ServingServer(pool, host="127.0.0.1", port=0).start()
+    await _wait_ready(server)
+    return server, pool
+
+
+# --------------------------------------------------------------------------
+# Phase 1: goodput vs replica count (PR-8 Poisson workload, same seed)
+# --------------------------------------------------------------------------
+
+async def _sweep_pool(cfg, replicas, rate, n, seed):
+    server, pool = await _boot(cfg, replicas)
+    try:
+        rng = random.Random(seed)
+        specs = _mix(cfg, n, seed)
+        at = 0.0
+        for s in specs:
+            at += rng.expovariate(rate)
+            s["at"] = at  # open loop: arrival times fixed up front
+
+        t0 = time.perf_counter()
+
+        async def one(spec):
+            await asyncio.sleep(spec["at"])
+            return await _sse_request(server.host, server.port,
+                                      spec["payload"],
+                                      disconnect_after=spec["disconnect_after"])
+
+        recs = await asyncio.gather(*(one(s) for s in specs))
+        wall = time.perf_counter() - t0
+        return {"replicas": replicas, **_summarize(recs, wall),
+                "migrated": pool.migrated_total}
+    finally:
+        await server.drain_and_stop(30.0)
+
+
+# --------------------------------------------------------------------------
+# Phase 2: kill-one-replica recovery (real thread kill, byte-identity bar)
+# --------------------------------------------------------------------------
+
+def _ref_streams(cfg, prompts, max_new):
+    """Uncontended solo-engine reference: the token sequences every pool
+    stream must reproduce byte-for-byte (greedy emissions are
+    scheduling-independent — the PR-1..7 invariant, now across failover)."""
+    eng = E.ServingEngine(_params(cfg), cfg, slots=3, max_len=256,
+                          mode="packed")
+    reqs = [E.Request(rid=i, prompt=np.array(p, dtype=np.int32),
+                      max_new=max_new) for i, p in enumerate(prompts)]
+    for r in reqs:
+        assert eng.submit(r)
+    eng.run()
+    return [tuple(r.generated) for r in reqs]
+
+
+async def _recovery(cfg, n, *, seed=77, max_new=8):
+    rng = random.Random(seed)
+    prompts = [[1 + rng.randrange(cfg.vocab_size - 1)
+                for _ in range(rng.choice((12, 24, 40)))] for _ in range(n)]
+    ref = _ref_streams(cfg, prompts, max_new)
+    cfg2 = dataclasses.replace(cfg, pool_backoff_s=0.1)
+    server, pool = await _boot(cfg2, 3)
+    try:
+        tasks = [asyncio.ensure_future(_sse_request(
+            server.host, server.port, {"prompt": p, "max_new": max_new}))
+            for p in prompts]
+        while pool.replicas[0].inflight == 0:
+            await asyncio.sleep(0.005)
+        t_kill = time.perf_counter()
+        tid = pool.replicas[0].driver._thread.ident
+        assert ctypes.pythonapi.PyThreadState_SetAsyncExc(
+            ctypes.c_long(tid), ctypes.py_object(SystemExit)) == 1
+        while pool.migrated_total == 0:
+            if time.perf_counter() - t_kill > 30.0:
+                break  # accounted below: migrated == 0 fails the bench
+            await asyncio.sleep(0.002)
+        t_migrated = time.perf_counter()
+        recs = await asyncio.gather(*tasks)
+        t_done = time.perf_counter()
+    finally:
+        await server.drain_and_stop(30.0)
+
+    failures = []
+    for i, (rec, want) in enumerate(zip(recs, ref)):
+        if rec["http"] != 200 or rec["status"] != "OK":
+            failures.append(f"req{i}: http={rec['http']} "
+                            f"status={rec['status']}")
+        elif tuple(rec["tokens"]) != want:
+            failures.append(f"req{i}: token stream diverged from the solo "
+                            f"reference after migration")
+        elif rec["events"].count("done") != 1:
+            failures.append(f"req{i}: {rec['events'].count('done')} "
+                            f"terminal events (want exactly one)")
+    ms = lambda dt: round(dt * 1e3, 1)  # noqa: E731
+    return {
+        "replicas": 3,
+        "requests": n,
+        "migrated": pool.migrated_total,
+        "kill_to_migration_ms": ms(t_migrated - t_kill),
+        "kill_to_all_terminal_ms": ms(t_done - t_kill),
+        "bit_identical": not failures,
+        "failures": failures,
+    }
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+async def _amain(smoke: bool):
+    # Generous hang timeout: a first-compile tick can stall a driver's
+    # heartbeat for seconds on a loaded CI box, and a spurious hang-failover
+    # would pollute the goodput/recovery numbers. The kill phase detects the
+    # dead thread structurally (driver.crashed), not via the heartbeat.
+    cfg = dataclasses.replace(bench_config(), pool_hang_timeout_s=300.0)
+    rate = 12.0
+    n = 8 if smoke else 24
+    data = {"bench": "replica_pool", "smoke": smoke, "rate": rate,
+            "goodput": []}
+    for replicas in (1, 2, 3):
+        data["goodput"].append(
+            await _sweep_pool(cfg, replicas, rate, n, seed=4321))
+    data["recovery"] = await _recovery(cfg, 6 if smoke else 12)
+    return data
+
+
+def run(*, smoke: bool = True) -> list[str]:
+    data = asyncio.run(_amain(smoke))
+    rec = data["recovery"]
+    failures = list(rec["failures"])
+    if rec["migrated"] < 1:
+        failures.append("kill-one-replica produced no migrated requests")
+    data["pass"] = not failures
+    with open("BENCH_pool.json", "w") as f:
+        json.dump(data, f, indent=2)
+
+    rows = []
+    for g in data["goodput"]:
+        tag = f"r{g['replicas']}"
+        rows.append(f"pool_goodput_tok_s_{tag},{g['goodput_tok_s']},"
+                    f"open-loop Poisson x{g['n']} @ {data['rate']:g}/s "
+                    f"(CPU smoke); counts={g['counts']}")
+        rows.append(f"pool_ttft_p99_ms_{tag},{g['ttft_ms']['p99']},"
+                    f"tail TTFT incl. shared-queue wait")
+    rows.append(f"pool_kill_migrated,{rec['migrated']}/{rec['requests']},"
+                f"N=3 real thread kill: requests re-homed via deterministic "
+                f"migration")
+    rows.append(f"pool_kill_to_migration_ms,{rec['kill_to_migration_ms']},"
+                f"crash detection + failover requeue latency")
+    rows.append(f"pool_kill_to_all_terminal_ms,"
+                f"{rec['kill_to_all_terminal_ms']},"
+                f"kill → every stream terminal")
+    rows.append(f"pool_kill_bit_identity,"
+                f"{'PASS' if rec['bit_identical'] else 'FAIL'},"
+                f"OK streams byte-identical to uncontended solo reference")
+    if failures:
+        raise AssertionError("; ".join(failures))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    try:
+        for row in run(smoke=args.smoke):
+            print(row)
+    except AssertionError as exc:
+        print(f"FAIL: {exc}")
+        return 1
+    print("wrote BENCH_pool.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

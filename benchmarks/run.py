@@ -24,6 +24,7 @@ def main() -> int:
         ("tl_engine", "benchmarks.bench_tl_engine"),
         ("serving_resilience", "benchmarks.bench_resilience"),
         ("serving_front_door", "benchmarks.bench_serving"),
+        ("replica_pool", "benchmarks.bench_pool"),
     ]
     failures = 0
     print("name,value,notes")

@@ -11,7 +11,13 @@ client would — over a loopback socket, stdlib only:
 * a burst against the bounded admission queue, showing HTTP 429 +
   Retry-After backpressure;
 * a mid-stream client disconnect, then ``/v1/stats`` showing the engine
-  retired the request ``CANCELLED`` and freed its slot.
+  retired the request ``CANCELLED`` and freed its slot;
+* the same burst through :func:`sse_generate_reliable` — honoring 429
+  ``Retry-After`` with seeded-jitter exponential backoff until every
+  request lands;
+* a forced mid-stream drop + auto-reconnect with a client-side token
+  watermark: the stitched stream equals the uninterrupted one
+  byte-for-byte (greedy determinism → exactly-once delivery).
 
 Point it at an already-running server (``python -m repro.launch.server``)
 with ``--connect HOST:PORT`` to skip the in-process boot.
@@ -28,8 +34,16 @@ import json
 
 
 async def sse_generate(host, port, payload, *, disconnect_after=None,
-                       quiet=False):
-    """POST /v1/generate and consume the SSE stream as it arrives."""
+                       quiet=False, skip=0):
+    """POST /v1/generate and consume the SSE stream as it arrives.
+
+    Returns a dict: ``status`` (HTTP), ``terminal`` (the done/error payload,
+    or ``None`` for a dropped stream), ``tokens`` (token events *after* the
+    first ``skip`` — the reconnect watermark), ``retry_after`` (seconds, on
+    429). ``skip`` lets a reconnecting caller discard the prefix it already
+    delivered: greedy decoding is deterministic, so a re-issued request
+    replays the identical stream and the index skip is exact.
+    """
     reader, writer = await asyncio.open_connection(host, port)
     body = json.dumps(payload).encode()
     writer.write((f"POST /v1/generate HTTP/1.1\r\nhost: {host}\r\n"
@@ -43,34 +57,94 @@ async def sse_generate(host, port, payload, *, disconnect_after=None,
             break
         k, _, v = line.decode().partition(":")
         headers[k.strip().lower()] = v.strip()
+    retry_after = float(headers.get("retry-after", 0) or 0)
     if status != 200:
-        print(f"  HTTP {status} (retry-after: {headers.get('retry-after')})")
+        if not quiet:
+            print(f"  HTTP {status} "
+                  f"(retry-after: {headers.get('retry-after')})")
         writer.close()
-        return status, None
-    event, tokens, terminal = None, [], None
+        return {"status": status, "terminal": None, "tokens": [],
+                "retry_after": retry_after}
+    event, tokens, terminal, seen = None, [], None, 0
     while True:
         line = await reader.readline()
         if not line:
-            break
+            break  # dropped stream, no terminal event: caller may reconnect
         line = line.strip().decode()
         if line.startswith("event:"):
             event = line.split(":", 1)[1].strip()
         elif line.startswith("data:"):
             data = json.loads(line.split(":", 1)[1])
             if event == "token":
-                tokens.append(data["token"])
-                if not quiet:
-                    print(f"  token[{data['index']}] = {data['token']}")
-                if disconnect_after and len(tokens) >= disconnect_after:
-                    print("  -- client hangs up mid-stream --")
+                if seen >= skip:
+                    tokens.append(data["token"])
+                    if not quiet:
+                        print(f"  token[{data['index']}] = {data['token']}")
+                seen += 1
+                if disconnect_after and seen - skip >= disconnect_after:
+                    if not quiet:
+                        print("  -- client hangs up mid-stream --")
                     writer.close()
-                    return status, None
+                    return {"status": status, "terminal": None,
+                            "tokens": tokens, "retry_after": retry_after}
             elif event in ("done", "error"):
                 terminal = data
-                print(f"  {event}: status={data['status']} "
-                      f"tokens={data['tokens']}")
+                if not quiet:
+                    print(f"  {event}: status={data['status']} "
+                          f"tokens={data['tokens']}")
     writer.close()
-    return status, terminal
+    return {"status": status, "terminal": terminal, "tokens": tokens,
+            "retry_after": retry_after}
+
+
+async def sse_generate_reliable(host, port, payload, *, seed=0,
+                                max_attempts=8, base_backoff_s=0.05,
+                                quiet=True, drop_after=None):
+    """Production-shaped client loop over :func:`sse_generate`:
+
+    * **429 backpressure** → retry with exponential backoff, floored at the
+      server's ``Retry-After``, times a jitter factor in [0.5, 1.5) drawn
+      from a **seeded private RNG** (``random.Random(seed)`` — never the
+      ``random`` module's global state, so concurrent clients with distinct
+      seeds de-synchronize deterministically and tests stay reproducible);
+    * **dropped stream** (EOF before the terminal event) → reconnect and
+      re-issue the request with a client-side token **watermark**: the first
+      ``len(tokens_seen)`` token events of the replayed stream are skipped.
+      Greedy decoding replays byte-identically, so delivery is exactly-once
+      at the client even across reconnects.
+
+    ``drop_after`` force-drops the first attempt after N tokens (demo /
+    test hook for the reconnect path). Returns the :func:`sse_generate`
+    dict plus ``attempts`` and the ``backoffs`` actually slept.
+    """
+    import random as _random
+
+    rng = _random.Random(seed)
+    got, backoffs = [], []
+    for attempt in range(max_attempts):
+        da = drop_after if (drop_after and attempt == 0) else None
+        try:
+            r = await sse_generate(host, port, payload, quiet=quiet,
+                                   skip=len(got), disconnect_after=da)
+        except (ConnectionError, OSError, asyncio.IncompleteReadError):
+            r = {"status": None, "terminal": None, "tokens": [],
+                 "retry_after": 0.0}
+        got.extend(r["tokens"])
+        if r["status"] == 200 and r["terminal"] is not None:
+            return {**r, "tokens": got, "attempts": attempt + 1,
+                    "backoffs": backoffs}
+        if r["status"] == 429:
+            delay = max(r["retry_after"], base_backoff_s * (2 ** attempt))
+            delay *= 0.5 + rng.random()
+            backoffs.append(delay)
+            await asyncio.sleep(delay)
+            continue
+        if r["status"] in (200, None):
+            continue  # dropped mid-stream / connect failure: reconnect
+        return {**r, "tokens": got, "attempts": attempt + 1,
+                "backoffs": backoffs}  # non-retryable (4xx)
+    return {"status": None, "terminal": None, "tokens": got,
+            "attempts": max_attempts, "backoffs": backoffs}
 
 
 async def demo(host: str, port: int) -> None:
@@ -91,7 +165,7 @@ async def demo(host: str, port: int) -> None:
     results = await asyncio.gather(*(
         sse_generate(host, port, {"prompt": list(range(1, 25)), "max_new": 4},
                      quiet=True) for _ in range(10)))
-    n429 = sum(1 for s, _ in results if s == 429)
+    n429 = sum(1 for r in results if r["status"] == 429)
     print(f"  {len(results) - n429} served, {n429} rejected with 429")
 
     print("\n[4] disconnect-cancel: hang up after the first token")
@@ -103,8 +177,33 @@ async def demo(host: str, port: int) -> None:
     await writer.drain()
     stats = json.loads((await reader.read()).partition(b"\r\n\r\n")[2])
     writer.close()
-    print(f"  server statuses: {stats['statuses']} "
+    print(f"  server statuses: {stats.get('statuses')} "
           f"(live={stats['live']} queued={stats['queued']})")
+
+    print("\n[5] retry loop: same burst, honoring Retry-After with "
+          "seeded-jitter backoff — every request eventually lands")
+    results = await asyncio.gather(*(
+        sse_generate_reliable(host, port,
+                              {"prompt": list(range(1, 25)), "max_new": 4},
+                              seed=i) for i in range(10)))
+    ok = sum(1 for r in results if r["terminal"] is not None)
+    retried = sum(1 for r in results if r["attempts"] > 1)
+    print(f"  {ok}/{len(results)} served ({retried} needed retries; "
+          f"total backoff sleeps: "
+          f"{sum(len(r['backoffs']) for r in results)})")
+
+    print("\n[6] reconnect-with-watermark: drop after 3 tokens, re-issue, "
+          "skip the replayed prefix (greedy determinism = exactly-once)")
+    full = await sse_generate(host, port, {"prompt": list(range(1, 33)),
+                                           "max_new": 8}, quiet=True)
+    resumed = await sse_generate_reliable(
+        host, port, {"prompt": list(range(1, 33)), "max_new": 8},
+        drop_after=3, seed=1)
+    match = resumed["tokens"] == full["tokens"]
+    print(f"  stitched stream == uninterrupted stream: {match} "
+          f"({resumed['attempts']} attempts, {len(resumed['tokens'])} tokens)")
+    if not match:
+        raise SystemExit("watermark reconnect diverged from reference")
 
 
 async def main_async(args) -> int:

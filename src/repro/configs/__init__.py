@@ -9,4 +9,5 @@ from .base import (  # noqa: F401
     get_config,
     get_parallel_config,
     list_archs,
+    resolve_slo,
 )

@@ -100,6 +100,37 @@ class ModelConfig:
     # Engine event-log ring size (0 = unbounded): stats() bookkeeping on a
     # long-lived server stays fixed-size, with a dropped-events counter.
     stats_ring_events: int = 4096
+    # --- serving: SLO classes + replica pool (DESIGN.md §replica-pool) -----------
+    # Admission classes for the multi-replica pool: (name, priority,
+    # default_deadline_s, chunk_budget_weight) tuples — tuple-of-tuples so the
+    # frozen config stays hashable. The class maps onto the PR-7 lifecycle
+    # fields (priority feeds preemption + queue order, deadline_s the TTL; a
+    # 0.0 deadline means "none — fall back to request_ttl_s") and its weight
+    # scales the engine's per-tick prefill_chunk_budget while a request of
+    # that class is the highest class mid-prefill: interactive prefills at
+    # full pace, batch/best_effort yield tick capacity to co-batched decode.
+    slo_classes: tuple = (
+        ("interactive", 2, 0.0, 1.0),
+        ("batch", 1, 0.0, 0.5),
+        ("best_effort", 0, 0.0, 0.25),
+    )
+    # Replica-pool health gating / failover (serving/pool.py). A replica is
+    # drained + quarantined (never hard-removed) after pool_health_fail_ticks
+    # consecutive failed engine ticks or a dense straggler window
+    # (pool_straggler_events flagged among the last pool_straggler_window
+    # ticks); reinstatement probes run after an exponential backoff
+    # (pool_backoff_s doubling to pool_backoff_max_s). A driver thread whose
+    # heartbeat goes stale for pool_hang_timeout_s is declared hung and its
+    # live requests are migrated like a crash.
+    pool_replicas: int = 2
+    pool_health_fail_ticks: int = 3
+    pool_backoff_s: float = 0.25
+    pool_backoff_max_s: float = 8.0
+    pool_hang_timeout_s: float = 2.0
+    pool_probe_timeout_s: float = 10.0
+    pool_poll_interval_s: float = 0.01
+    pool_straggler_window: int = 8
+    pool_straggler_events: int = 3
     # --- serving: async front door (DESIGN.md §serving-frontdoor) ----------------
     # HTTP/SSE server defaults (launch/server.py overrides per flag). The
     # drain timeout is the SIGTERM hard-kill ceiling: in-flight requests get
@@ -190,6 +221,19 @@ def _layer_params(cfg: ModelConfig, i: int, *, active_only: bool = False) -> int
         if cfg.family != "ssm":
             n += 3 * d * ff
     return n
+
+
+def resolve_slo(cfg: ModelConfig, name: str) -> tuple[int, float | None, float]:
+    """Map an SLO class name onto the lifecycle fields: ``(priority,
+    deadline_s | None, chunk_budget_weight)``. A 0.0 class deadline resolves
+    to ``None`` (the engine then applies ``cfg.request_ttl_s``). Unknown
+    class names raise — a typo'd class must be an admission-time 400, not a
+    silent best_effort demotion."""
+    for cls, prio, deadline, weight in cfg.slo_classes:
+        if cls == name:
+            return int(prio), (float(deadline) if deadline else None), float(weight)
+    raise KeyError(f"unknown SLO class {name!r}; "
+                   f"have {[c[0] for c in cfg.slo_classes]}")
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,7 @@ from ..configs import get_config
 from ..core import params as P
 from ..models import transformer as Tr
 from ..serving import engine as E
+from ..serving.pool import ReplicaPool
 from ..serving.server import ServingServer
 
 
@@ -40,15 +41,38 @@ def build_engine(args) -> E.ServingEngine:
                            queue_cap=args.queue_cap or None)
 
 
+def build_backend(args):
+    """One bare engine, or — with ``--replicas N > 1`` — a ReplicaPool of N
+    engines sharing one packed params pytree (byte-identical migration needs
+    identical weights; sharing also keeps host memory flat)."""
+    if args.replicas <= 1:
+        return build_engine(args)
+    cfg = dataclasses.replace(get_config(args.arch, smoke=args.smoke),
+                              kv_cache_dtype=args.kv_cache_dtype)
+    specs = Tr.param_specs(cfg)
+    params = Tr.pack_tree(P.init_params(specs, jax.random.PRNGKey(0)), specs)
+
+    def factory(idx):
+        return E.ServingEngine(params, cfg, slots=args.slots,
+                               max_len=args.max_len, mode="packed",
+                               speculative=args.speculative,
+                               replica_id=idx)
+
+    return ReplicaPool(factory, cfg, replicas=args.replicas,
+                       queue_cap=args.queue_cap)  # 0 = unbounded, as engine
+
+
 async def amain(args) -> int:
-    server = ServingServer(build_engine(args), host=args.host, port=args.port,
+    server = ServingServer(build_backend(args), host=args.host,
+                           port=args.port,
                            drain_timeout_s=args.drain_timeout_s or None)
     await server.start()
     loop = asyncio.get_running_loop()
     for sig in (signal.SIGTERM, signal.SIGINT):
         loop.add_signal_handler(sig, server.begin_drain)
     print(f"[server] listening on http://{server.host}:{server.port} "
-          f"(slots={args.slots} queue_cap={args.queue_cap or 'unbounded'}); "
+          f"(replicas={args.replicas} slots={args.slots} "
+          f"queue_cap={args.queue_cap or 'unbounded'}); "
           f"SIGTERM drains", flush=True)
     await server.serve_until_drained()
     print("[server] drained, exiting 0", flush=True)
@@ -71,6 +95,10 @@ def main(argv=None) -> int:
     ap.add_argument("--queue-cap", type=int, default=32,
                     help="bounded admission queue; full → HTTP 429 "
                          "(0 = unbounded)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="N > 1 serves a ReplicaPool: SLO-class admission, "
+                         "health-gated routing, crash failover "
+                         "(DESIGN.md §replica-pool)")
     ap.add_argument("--drain-timeout-s", type=float, default=0.0,
                     help="graceful-drain hard-kill timeout "
                          "(default: cfg.server_drain_timeout_s)")

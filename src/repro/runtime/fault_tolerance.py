@@ -63,6 +63,18 @@ class StragglerMonitor:
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * duration
         return flagged
 
+    def degraded(self, *, window: int = 8, min_events: int = 3) -> bool:
+        """Health-gate signal for the replica pool (DESIGN.md §replica-pool):
+        True when at least ``min_events`` of the last ``window`` recorded
+        steps were flagged stragglers — a *dense* straggler window, not one
+        co-tenant hiccup. A single slow tick never drains a replica; a
+        replica whose tick EWMA has genuinely shifted keeps tripping the
+        per-tick threshold and lands here."""
+        if self.count <= self.warmup:
+            return False
+        recent = [e for e in self.events if e.step > self.count - window]
+        return len(recent) >= min_events
+
     def report(self) -> dict:
         return {
             "steps": self.count,

@@ -17,6 +17,7 @@ from .resilience import (  # noqa: F401
     FaultPlan,
     Status,
 )
+from .pool import ReplicaPool, SLOQueue  # noqa: F401
 from .server import (  # noqa: F401
     SSE_EVENT_FOR_STATUS,
     EngineDriver,

@@ -418,6 +418,14 @@ class Request:
     finished_at: float | None = None
     cancel_requested: bool = False
     preemptions: int = 0  # times evicted + requeued for re-prefill
+    migrations: int = 0  # times moved to another replica after a crash/hang
+    # SLO class (DESIGN.md §replica-pool): the class name this request was
+    # admitted under (None outside the pool) and its chunk-budget weight —
+    # the highest weight among slots mid-prefill scales the engine's
+    # per-tick prefill_chunk_budget (1.0, the default, is bit-identical to
+    # the pre-pool engine).
+    slo: str | None = None
+    budget_weight: float = 1.0
     _seq: int = 0  # submission order (preemption tie-breaks, FIFO in priority)
     # speculative-decoding stats (0 unless served by a speculative engine):
     # drafts offered / drafts accepted across this request's verify ticks.
@@ -432,6 +440,25 @@ class Request:
     def expired(self, now: float) -> bool:
         return (self.deadline_s is not None and self.submitted_at is not None
                 and now - self.submitted_at > self.deadline_s)
+
+
+def snapshot_request(req: Request) -> Request:
+    """Resumable clone of one request: prompt + emitted history (copies —
+    the donor's arrays/lists are never aliased) + the RNG-free lifecycle
+    fields. Re-prefilling prompt+history with the remaining budget
+    reproduces the greedy stream bit-identically (the §resilience
+    preempt-resume invariant), so this is the unit of cross-replica
+    migration (DESIGN.md §replica-pool)."""
+    snap = Request(rid=req.rid, prompt=np.array(req.prompt),
+                   max_new=req.max_new, generated=list(req.generated))
+    snap.priority = req.priority
+    snap.deadline_s = req.deadline_s
+    snap.submitted_at = req.submitted_at
+    snap.preemptions = req.preemptions
+    snap.migrations = req.migrations
+    snap.slo = req.slo
+    snap.budget_weight = req.budget_weight
+    return snap
 
 
 @dataclasses.dataclass
@@ -493,7 +520,8 @@ class ServingEngine:
                  queue_cap: int | None = None,
                  fault_plan: R.FaultPlan | None = None, guards: bool = True,
                  clock=time.monotonic,
-                 straggler: FT.StragglerMonitor | None = None):
+                 straggler: FT.StragglerMonitor | None = None,
+                 replica_id: int | str | None = None):
         self.params = _engine_params(params, cfg, mode)
         self.cfg, self.mode = cfg, mode
         self.fused = fused  # int8-resident NQD pipeline (None: on iff packed)
@@ -561,6 +589,17 @@ class ServingEngine:
         self._clock = clock
         self.straggler = straggler or FT.StragglerMonitor()
         self.tick_count = 0
+        # Pool-facing identity + health counters (DESIGN.md §replica-pool):
+        # replica_id names this engine in aggregated stats (operators can
+        # tell WHICH replica quarantined a request); uptime/tick counters
+        # are monotonic for the engine object's lifetime — device re-init
+        # (_fail_all_live) does not reset them. consecutive_tick_failures
+        # counts ticks that entered the exception path (even if the sticky
+        # XLA fallback recovered them) and resets on the next clean tick —
+        # the pool's drain gate.
+        self.replica_id = replica_id
+        self._started_at = self._clock()
+        self.consecutive_tick_failures = 0
         # Tick-stamped resilience/serving event ring: bounded so a days-long
         # server cannot leak host memory through its own bookkeeping. When
         # full, the oldest event is dropped and counted (stats() reports it).
@@ -705,7 +744,10 @@ class ServingEngine:
     def stats(self) -> dict:
         """Engine-level resilience/serving stats for CLIs and tests."""
         return {
+            "replica_id": self.replica_id,
             "ticks": self.tick_count,
+            "uptime_s": max(self._clock() - self._started_at, 0.0),
+            "consecutive_tick_failures": self.consecutive_tick_failures,
             "statuses": {s.name: n for s, n in sorted(
                 self.status_counts.items(), key=lambda kv: kv[0].name)},
             "events": [dict(e) for e in self.events],
@@ -721,6 +763,31 @@ class ServingEngine:
                                if e["kind"] == "preempt"),
             "quarantined": self.status_counts.get(R.Status.QUARANTINED, 0),
         }
+
+    def export_requests(self) -> list[Request]:
+        """Resumable snapshot of every non-terminal request — the crash-
+        failover export (DESIGN.md §replica-pool).
+
+        Each snapshot is a *fresh* :class:`Request` carrying exactly the
+        host state a surviving replica needs to continue the stream:
+        prompt, emitted history (a copy — the donor's list is never
+        aliased), remaining budget (``max_new`` minus the emitted history,
+        which ``_admit`` re-derives), and the RNG-free lifecycle fields
+        (priority/deadline/submitted_at/SLO class). No device state crosses:
+        re-prefilling prompt+history with the remaining budget reproduces
+        the stream bit-identically — the §resilience preempt-resume
+        invariant generalized across engine boundaries.
+
+        Safe to call on an engine whose driver thread is dead (the normal
+        crash-failover caller) and GIL-safe against a *hung* driver that
+        later wakes: each request's ``generated`` only ever grows
+        append-only on the driver thread, so a concurrent snapshot is a
+        consistent prefix of the true stream.
+        """
+        return [snapshot_request(req)
+                for req in list(self.queue)
+                + [r for r in self.live if r is not None]
+                if not req.done]
 
     @property
     def prefilling_slots(self) -> int:
@@ -897,6 +964,22 @@ class ServingEngine:
 
     # -- the fused chunked-prefill + decode tick ------------------------------
 
+    def _chunk_budget(self) -> int:
+        """Effective chunk-token budget this tick: the base
+        ``cfg.prefill_chunk_budget`` scaled by the highest SLO
+        ``budget_weight`` among requests currently mid-prefill — the highest
+        class present sets the prefill pace, so a lone batch/best_effort
+        prompt appends fewer chunk rows per tick (shorter ticks → lower
+        inter-token latency for co-batched decoding slots) while an
+        interactive prompt always prefills at full pace. All weights 1.0
+        (the default outside the pool) reproduce the pre-pool budget
+        exactly; ``_plan_chunks`` still floors the result at one chunk so
+        prefill always progresses."""
+        w = max((self.live[s].budget_weight for s in range(self.slots)
+                 if self._plan[s] is not None and self.live[s] is not None),
+                default=1.0)
+        return max(1, int(round(self.cfg.prefill_chunk_budget * w)))
+
     def _plan_chunks(self, prefilling: list, budget: int):
         """Select this tick's prompt-chunk work: the head slot's chunk size
         wins, same-size slots fill the token ``budget`` (≥ one chunk, so
@@ -962,7 +1045,7 @@ class ServingEngine:
         self._maybe_raise_tick_fault()
         slots = self.slots
         (chunk, selected, chunk_tok, chunk_off, finishing, last_row,
-         fin_pos) = self._plan_chunks(prefilling, self.cfg.prefill_chunk_budget)
+         fin_pos) = self._plan_chunks(prefilling, self._chunk_budget())
         dec_active = np.array(
             [self.live[s] is not None and self._plan[s] is None
              for s in range(slots)])
@@ -1033,7 +1116,7 @@ class ServingEngine:
             # (at least one chunk, so prefill always progresses) go to prompts
             (chunk, selected, chunk_tok, chunk_off, finishing, last_row,
              fin_pos) = self._plan_chunks(
-                prefilling, self.cfg.prefill_chunk_budget
+                prefilling, self._chunk_budget()
                 - int(dec_active.sum()) * (gamma + 1))
         else:
             chunk = None
@@ -1233,7 +1316,12 @@ class ServingEngine:
                     time.sleep(f.duration_s)
             try:
                 out = self._dispatch()
+                self.consecutive_tick_failures = 0  # clean tick: gate resets
             except Exception as exc:  # noqa: BLE001 — the tick must not raise
+                # counted even when the sticky XLA fallback recovers the
+                # tick: repeated entries into the exception path are the
+                # pool's drain signal (DESIGN.md §replica-pool)
+                self.consecutive_tick_failures += 1
                 out = self._tick_fallback(exc)
         finally:
             dur = time.perf_counter() - t0

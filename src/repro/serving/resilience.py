@@ -146,7 +146,14 @@ def scramble_tokens(tokens, mask, vocab: int):
 # ---------------------------------------------------------------------------
 
 FAULT_KINDS = ("nan", "tick_exception", "slow_tick", "cache_growth",
-               "drafter_garbage")
+               "drafter_garbage", "replica_crash", "replica_hang")
+
+# Pool-scoped kinds (serving/pool.py consumes these; the engine ignores
+# them): the fault targets a *replica*, fires once when that replica's
+# engine reaches `tick`, and emulates whole-process death (crash: the driver
+# thread dies mid-loop with no cleanup) or a wedged runtime (hang: the
+# driver stalls `duration_s`, long enough to trip the heartbeat detector).
+REPLICA_FAULT_KINDS = ("replica_crash", "replica_hang")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,13 +170,23 @@ class Fault:
         ``"cache_growth"`` — the slot's cache cannot grow/hold the request
         (forced ``CACHE_EXHAUSTED`` retirement);
         ``"drafter_garbage"`` — the slot's speculative drafts are deranged
-        (acceptance collapse → the engine's spec auto-disable).
+        (acceptance collapse → the engine's spec auto-disable);
+        ``"replica_crash"`` — the target replica's driver thread dies
+        abruptly (``SystemExit`` mid-loop: no drain, no terminal events —
+        the pool's crash-failover path must migrate its requests);
+        ``"replica_hang"`` — the target replica's driver thread stalls
+        ``duration_s`` without ticking (heartbeat goes stale → the pool
+        treats it like a crash and migrates).
     tick
-        0-based scheduler tick on which the fault fires.
+        0-based scheduler tick on which the fault fires (for replica kinds:
+        the *target replica's* engine tick that arms the fault).
     slot
         Target slot for slot-scoped kinds; ``None`` targets every slot.
+    replica
+        Target replica index for pool-scoped kinds (``replica_crash`` /
+        ``replica_hang``); ignored by engine-scoped kinds.
     duration_s
-        ``slow_tick`` stall length.
+        ``slow_tick`` / ``replica_hang`` stall length.
     repeat
         Fire on ticks ``[tick, tick + repeat)`` — collapse faults need a
         window, point faults leave it at 1.
@@ -178,6 +195,7 @@ class Fault:
     kind: str
     tick: int
     slot: int | None = None
+    replica: int | None = None
     duration_s: float = 0.25
     repeat: int = 1
 
@@ -219,6 +237,14 @@ class FaultPlan:
             elif 0 <= f.slot < slots:
                 mask[f.slot] = True
         return mask
+
+    def replica_faults(self, kind: str, replica: int) -> list[Fault]:
+        """Pool-scoped faults of ``kind`` targeting ``replica`` (``None``
+        targets every replica). Arming is tick-based against the *target
+        replica's* engine tick — the pool checks ``engine.tick_count >=
+        f.tick`` and fires each fault at most once."""
+        return [f for f in self.faults if f.kind == kind
+                and (f.replica is None or f.replica == replica)]
 
     def any_after(self, tick: int) -> bool:
         """Whether any fault could still fire at/after ``tick`` (lets long

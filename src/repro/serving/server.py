@@ -61,9 +61,11 @@ import itertools
 import json
 import queue as thread_queue
 import threading
+import time
 
 import numpy as np
 
+from ..configs.base import resolve_slo
 from . import engine as E
 from . import resilience as R
 
@@ -113,7 +115,7 @@ class EngineDriver:
     """
 
     def __init__(self, engine: E.ServingEngine, *, poll_s: float | None = None,
-                 warmup=True):
+                 warmup=True, name: str = "engine-driver"):
         self.engine = engine
         self.poll_s = (float(getattr(engine.cfg, "server_poll_s", 0.001))
                        if poll_s is None else float(poll_s))
@@ -125,9 +127,20 @@ class EngineDriver:
         self._rids = itertools.count(1)
         self._sinks: dict[int, _StreamSink] = {}  # driver thread only
         self._reqs: dict[int, E.Request] = {}
+        # Pool taps (DESIGN.md §replica-pool): emit/finish listeners fire on
+        # the driver thread for EVERY request (pool-submitted requests never
+        # appear in _sinks); fault_hook runs at the top of each loop
+        # iteration (the pool's replica_crash/replica_hang injection point —
+        # a SystemExit raised there kills the thread with no cleanup, the
+        # same observable as a real crash); beat is the loop heartbeat the
+        # pool's hang detector watches.
+        self.emit_listener = None  # callable(req, list[int]) | None
+        self.finish_listener = None  # callable(req) | None
+        self.fault_hook = None  # callable(driver) | None
+        self.beat = time.monotonic()
         engine.on_emit = self._on_emit
         engine.on_finish = self._on_finish
-        self._thread = threading.Thread(target=self._run, name="engine-driver",
+        self._thread = threading.Thread(target=self._run, name=name,
                                         daemon=True)
 
     # -- asyncio-side API ----------------------------------------------------
@@ -140,6 +153,14 @@ class EngineDriver:
         return self._stop.is_set() or not self._thread.is_alive()
 
     @property
+    def crashed(self) -> bool:
+        """The thread died without anyone asking it to stop — a crash, not
+        a shutdown (never true before ``start()``)."""
+        return (self._thread.ident is not None
+                and not self._thread.is_alive()
+                and not self._stop.is_set())
+
+    @property
     def tracked(self) -> int:
         """Streams with no terminal event delivered yet."""
         return len(self._sinks)
@@ -148,7 +169,8 @@ class EngineDriver:
         return list(self._sinks)
 
     async def submit(self, prompt, *, max_new: int, priority: int = 0,
-                     deadline_s: float | None = None):
+                     deadline_s: float | None = None, slo: str | None = None,
+                     budget_weight: float = 1.0):
         """Submit on the driver thread; returns ``(rid, sink)`` or ``None``
         when the bounded admission queue rejected it (the HTTP 429 path)."""
         loop = asyncio.get_running_loop()
@@ -161,7 +183,8 @@ class EngineDriver:
             req = E.Request(rid=rid, prompt=prompt, max_new=int(max_new),
                             priority=int(priority),
                             deadline_s=(None if deadline_s is None
-                                        else float(deadline_s)))
+                                        else float(deadline_s)),
+                            slo=slo, budget_weight=float(budget_weight))
             if self.engine.submit(req):
                 self._sinks[rid] = sink
                 self._reqs[rid] = req
@@ -175,6 +198,40 @@ class EngineDriver:
 
     def cancel(self, rid: int) -> None:
         self._post(lambda: self.engine.cancel(rid))
+
+    # -- pool-side API (thread-safe, no asyncio loop required) ---------------
+
+    def submit_request(self, req: E.Request, cb=None) -> None:
+        """Post a fully-built :class:`Request` for engine admission on the
+        driver thread. ``cb(ok)`` (if given) runs on the driver thread right
+        after ``engine.submit`` — the pool's dispatch bookkeeping hook.
+        Raises :class:`ConnectionError` when the driver is stopped/dead."""
+        def cmd():
+            ok = self.engine.submit(req)
+            if cb is not None:
+                cb(ok)
+
+        self._post(cmd)
+
+    def stats_blocking(self, timeout_s: float = 1.0) -> dict | None:
+        """Engine stats taken on the driver thread, awaited with a plain
+        threading.Event — usable off-asyncio (the pool's aggregation path).
+        Returns ``None`` when the driver is stopped, crashed, or wedged past
+        ``timeout_s`` (a hung replica must not hang ``/v1/stats``)."""
+        box: dict = {}
+        done = threading.Event()
+
+        def cmd():
+            box["s"] = self.engine.stats()
+            done.set()
+
+        try:
+            self._post(cmd)
+        except ConnectionError:
+            return None
+        if not done.wait(timeout_s):
+            return None
+        return box.get("s")
 
     async def stats(self) -> dict:
         """Engine stats snapshot taken on the driver thread (no torn reads)."""
@@ -217,6 +274,12 @@ class EngineDriver:
         self.ready.set()
         eng = self.engine
         while not self._stop.is_set():
+            self.beat = time.monotonic()
+            if self.fault_hook is not None:
+                # May raise SystemExit (replica_crash: the thread dies here,
+                # mid-loop, with no cleanup — exactly like a real crash) or
+                # sleep (replica_hang: beat goes stale for the duration).
+                self.fault_hook(self)
             self._drain_cmds()
             if eng.queue or any(r is not None for r in eng.live):
                 try:
@@ -282,11 +345,15 @@ class EngineDriver:
     # -- engine hooks (driver thread, fired by step()) -----------------------
 
     def _on_emit(self, req: E.Request, toks: list) -> None:
+        if self.emit_listener is not None:
+            self.emit_listener(req, toks)
         sink = self._sinks.get(req.rid)
         if sink is not None:
             sink.push(("tokens", [int(t) for t in toks]))
 
     def _on_finish(self, req: E.Request) -> None:
+        if self.finish_listener is not None:
+            self.finish_listener(req)
         sink = self._sinks.pop(req.rid, None)
         self._reqs.pop(req.rid, None)
         if sink is not None:
@@ -300,7 +367,13 @@ def _resolve(fut: asyncio.Future, value) -> None:
 
 
 class ServingServer:
-    """The HTTP/SSE front door. One instance, one engine, one driver thread.
+    """The HTTP/SSE front door. One instance, one backend.
+
+    The backend is either a bare ``ServingEngine`` (wrapped in a single
+    :class:`EngineDriver`) or a ``serving.pool.ReplicaPool`` (detected via
+    its ``IS_POOL`` marker — the pool owns its own drivers, SLO-class
+    admission, health-gated routing and crash failover; the server just
+    routes submits/cancels/stats at it and aggregates ``/v1/stats``).
 
     Lifecycle: ``await start()`` (binds the socket, starts the driver),
     ``begin_drain()`` (SIGTERM handler; idempotent), ``await
@@ -308,10 +381,17 @@ class ServingServer:
     ``drain_and_stop`` directly with a short timeout.
     """
 
-    def __init__(self, engine: E.ServingEngine, *, host: str | None = None,
+    def __init__(self, engine, *, host: str | None = None,
                  port: int | None = None, drain_timeout_s: float | None = None,
                  warmup=True, poll_s: float | None = None):
         cfg = engine.cfg
+        self.cfg = cfg
+        if getattr(engine, "IS_POOL", False):  # serving.pool.ReplicaPool
+            self.pool = engine
+            self.driver = None
+        else:
+            self.pool = None
+            self.driver = EngineDriver(engine, warmup=warmup, poll_s=poll_s)
         self.host = (getattr(cfg, "server_host", "127.0.0.1")
                      if host is None else host)
         self.port = (int(getattr(cfg, "server_port", 8080))
@@ -319,7 +399,6 @@ class ServingServer:
         self.drain_timeout_s = (
             float(getattr(cfg, "server_drain_timeout_s", 30.0))
             if drain_timeout_s is None else float(drain_timeout_s))
-        self.driver = EngineDriver(engine, warmup=warmup, poll_s=poll_s)
         self.draining = False
         self._drained = None  # asyncio.Event, created on start()
         self._server = None
@@ -331,7 +410,10 @@ class ServingServer:
     async def start(self) -> "ServingServer":
         self._loop = asyncio.get_running_loop()
         self._drained = asyncio.Event()
-        self.driver.start()
+        if self.pool is not None:
+            self.pool.start()
+        else:
+            self.driver.start()
         self._server = await asyncio.start_server(self._handle, self.host,
                                                   self.port)
         self.port = self._server.sockets[0].getsockname()[1]
@@ -339,6 +421,9 @@ class ServingServer:
 
     @property
     def ready(self) -> bool:
+        if self.pool is not None:
+            return (self.pool.ready and not self.draining
+                    and not self.pool.stopped)
         return (self.driver.ready.is_set() and not self.draining
                 and not self.driver.stopped)
 
@@ -358,14 +443,15 @@ class ServingServer:
         while self._loop.time() < deadline and not await self._idle():
             await asyncio.sleep(0.02)
         if not await self._idle():  # hard kill: cancel whatever is left
-            for rid in self.driver.tracked_rids():
-                self.driver.cancel(rid)
+            for rid in self._tracked_rids():
+                self._cancel(rid)
             grace = self._loop.time() + 2.0
             while self._loop.time() < grace and not await self._idle():
                 await asyncio.sleep(0.02)
         self._server.close()
         await self._server.wait_closed()
-        await asyncio.to_thread(self.driver.stop)  # fails any leftover stream
+        stop = self.pool.stop if self.pool is not None else self.driver.stop
+        await asyncio.to_thread(stop)  # fails any leftover stream
         await asyncio.sleep(0.05)  # let final events flush through handlers
         for w in list(self._writers):  # no stuck connections, ever
             w.close()
@@ -374,7 +460,19 @@ class ServingServer:
     async def serve_until_drained(self) -> None:
         await self._drained.wait()
 
+    def _tracked_rids(self) -> list[int]:
+        return (self.pool.tracked_rids() if self.pool is not None
+                else self.driver.tracked_rids())
+
+    def _cancel(self, rid: int) -> None:
+        if self.pool is not None:
+            self.pool.cancel(rid)
+        else:
+            self.driver.cancel(rid)
+
     async def _idle(self) -> bool:
+        if self.pool is not None:
+            return self.pool.stopped or self.pool.idle()
         if self.driver.stopped:
             return True
         s = await self.driver.stats()
@@ -418,9 +516,16 @@ class ServingServer:
                 pass
 
     async def _handle_stats(self, writer: asyncio.StreamWriter) -> None:
-        if self.driver.stopped:
-            return await _plain(writer, 503, "stopped")
-        s = await self.driver.stats()
+        if self.pool is not None:
+            if self.pool.stopped:
+                return await _plain(writer, 503, "stopped")
+            # pool.stats() blocks up to its per-replica stats timeout when a
+            # replica is wedged — keep the event loop out of that wait
+            s = await asyncio.to_thread(self.pool.stats)
+        else:
+            if self.driver.stopped:
+                return await _plain(writer, 503, "stopped")
+            s = await self.driver.stats()
         s["draining"] = self.draining
         s["ready"] = self.ready
         await _plain(writer, 200, json.dumps(s), ctype="application/json")
@@ -435,19 +540,37 @@ class ServingServer:
             payload = json.loads(body or b"{}")
             prompt = [int(t) for t in payload["prompt"]]
             max_new = int(payload.get("max_new", 16))
-            priority = int(payload.get("priority",
-                                       headers.get("x-priority", 0)))
-            deadline_s = payload.get("deadline_s",
-                                     headers.get("x-deadline-s"))
-            deadline_s = None if deadline_s is None else float(deadline_s)
+            # SLO class seeds priority/deadline/chunk-budget weight
+            # (DESIGN.md §replica-pool); explicit priority/deadline_s still
+            # override the class defaults. Unknown class → KeyError → 400.
+            slo = payload.get("slo", headers.get("x-slo"))
+            slo = None if slo is None else str(slo)
+            priority, deadline_s, weight = 0, None, 1.0
+            if slo is not None:
+                priority, deadline_s, weight = resolve_slo(self.cfg, slo)
+            raw_prio = payload.get("priority", headers.get("x-priority"))
+            if raw_prio is not None:
+                priority = int(raw_prio)
+            raw_deadline = payload.get("deadline_s",
+                                       headers.get("x-deadline-s"))
+            if raw_deadline is not None:
+                deadline_s = float(raw_deadline)
             if max_new < 1:
                 raise ValueError("max_new must be >= 1")
         except (KeyError, TypeError, ValueError) as exc:
             return await _plain(writer, 400, f"bad request: {exc}")
 
-        sub = await self.driver.submit(prompt, max_new=max_new,
-                                       priority=priority,
-                                       deadline_s=deadline_s)
+        if self.pool is not None:
+            sink = _StreamSink(asyncio.get_running_loop())
+            rid = self.pool.submit(prompt, max_new=max_new, slo=slo,
+                                   priority=priority, deadline_s=deadline_s,
+                                   budget_weight=weight, sink=sink)
+            sub = None if rid is None else (rid, sink)
+        else:
+            sub = await self.driver.submit(prompt, max_new=max_new,
+                                           priority=priority,
+                                           deadline_s=deadline_s, slo=slo,
+                                           budget_weight=weight)
         if sub is None:  # bounded admission queue: backpressure, not buffering
             return await _plain(writer, 429, "admission queue full",
                                 extra={"retry-after": "1"})
@@ -460,7 +583,7 @@ class ServingServer:
         try:
             await writer.drain()
         except ConnectionError:
-            self.driver.cancel(rid)
+            self._cancel(rid)
 
         # reader EOF = client went away: cancel within one tick, then keep
         # draining the sink until the engine's terminal event tears it down
@@ -476,7 +599,7 @@ class ServingServer:
                     pending, return_when=asyncio.FIRST_COMPLETED)
                 if eof_task in done and not disconnected:
                     disconnected = True
-                    self.driver.cancel(rid)
+                    self._cancel(rid)
                 if get_task not in done:
                     continue
                 item = get_task.result()
@@ -490,7 +613,7 @@ class ServingServer:
                             await writer.drain()
                         except ConnectionError:
                             disconnected = True
-                            self.driver.cancel(rid)
+                            self._cancel(rid)
                     else:
                         idx += len(item[1])
                     get_task = asyncio.ensure_future(sink.queue.get())

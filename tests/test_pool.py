@@ -1,0 +1,531 @@
+"""Replica pool tests (DESIGN.md §replica-pool).
+
+Contracts under test:
+
+* SLO-class admission: class → (priority, deadline, chunk-budget weight)
+  mapping, explicit overrides, unknown-class rejection;
+* health-gated least-loaded routing, drain → quarantine → backoff →
+  probe-based reinstatement (never hard removal);
+* crash failover = deterministic request migration: for an injected
+  ``replica_crash``, a REAL driver-thread kill (async SystemExit), and a
+  heartbeat-stale ``replica_hang``, every migrated greedy stream is
+  byte-identical to an uncontended single-replica run, with exactly one
+  terminal event and no duplicated/lost tokens (the emit watermark);
+* server pool mode: SSE streams survive a mid-serve replica kill with
+  contiguous token indexes, ``/v1/stats`` aggregates per-replica stats,
+  ``slo`` is parsed (body + header) and unknown classes 400.
+"""
+
+import asyncio
+import ctypes
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.bench_serving import _sse_request
+from repro.configs import get_config, resolve_slo
+from repro.core import params as P
+from repro.models import transformer as T
+from repro.runtime import fault_tolerance as FT
+from repro.serving import engine as E
+from repro.serving import resilience as R
+from repro.serving.pool import ReplicaPool
+from repro.serving.server import ServingServer
+
+
+# replica_crash / thread-kill tests end driver threads with SystemExit on
+# purpose; pytest's threadexception hook would warn on each one
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+
+
+def _cfg(**kw):
+    cfg = get_config("tellme-0.7b", smoke=True)
+    # On a loaded CI box a driver thread can be GIL-starved past the default
+    # 2 s heartbeat, tripping spurious hang-failover in tests that aren't
+    # about hangs; the hang test overrides this back down to 0.25 s.
+    kw.setdefault("pool_hang_timeout_s", 300.0)
+    return dataclasses.replace(cfg, dtype=jnp.float32, **kw)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = P.init_params(T.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _factory(params, cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 192)
+
+    def factory(idx):
+        return E.ServingEngine(params, cfg, mode="eval", eos_id=-2, **kw)
+
+    return factory
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=n) for n in lens]
+
+
+def _solo(params, cfg, prompts, max_new=10):
+    """Uncontended single-replica reference streams."""
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=192, mode="eval",
+                          eos_id=-2)
+    reqs = [E.Request(rid=i, prompt=np.array(p), max_new=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        assert eng.submit(r)
+    eng.run()
+    return [tuple(r.generated) for r in reqs]
+
+
+class _Sink:
+    """Pool-protocol sink: records every push for exactly-once assertions."""
+
+    def __init__(self):
+        self.items = []
+
+    def push(self, item):
+        self.items.append(item)
+
+    @property
+    def tokens(self):
+        return [t for it in self.items if it[0] == "tokens" for t in it[1]]
+
+    @property
+    def finals(self):
+        return [it for it in self.items if it[0] == "final"]
+
+
+def _drive(pool, *, timeout_s=180.0, sleep_s=0.005):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout_s:
+        pool.poll()
+        if pool.idle():
+            return
+        time.sleep(sleep_s)
+    raise AssertionError(f"pool did not go idle: {pool.stats()}")
+
+
+def _wait_ready(pool, *, n=None, timeout_s=120.0):
+    t0 = time.monotonic()
+    want = len(pool.replicas) if n is None else n
+    while time.monotonic() - t0 < timeout_s:
+        pool.poll()
+        if sum(r.state == "ready" for r in pool.replicas) >= want:
+            return
+        time.sleep(0.005)
+    raise AssertionError("replicas never became ready")
+
+
+# ---------------------------------------------------------------------------
+# SLO-class admission
+# ---------------------------------------------------------------------------
+
+
+def test_slo_class_mapping_and_overrides(setup):
+    cfg, params = setup
+    pool = ReplicaPool(_factory(params, cfg), cfg, replicas=1, warmup=False)
+    try:
+        rid = pool.submit([1, 2, 3], max_new=4, slo="interactive")
+        req = pool._streams[rid].req
+        prio, dl, w = resolve_slo(cfg, "interactive")
+        assert (req.priority, req.deadline_s, req.budget_weight) == \
+            (prio, dl, w)
+        assert req.slo == "interactive" and req.submitted_at is not None
+
+        rid = pool.submit([1, 2, 3], max_new=4, slo="best_effort",
+                          priority=7, deadline_s=9.0)
+        req = pool._streams[rid].req
+        assert (req.priority, req.deadline_s) == (7, 9.0)  # overrides win
+        assert req.budget_weight == resolve_slo(cfg, "best_effort")[2]
+
+        with pytest.raises(KeyError):
+            pool.submit([1], max_new=1, slo="no_such_class")
+    finally:
+        pool.stop()
+
+
+def test_slo_classes_weight_the_chunk_budget(setup):
+    """An admitted request's SLO weight scales the engine's effective
+    per-tick prefill chunk budget (floor 1; weight 1.0 = pre-pool bits)."""
+    cfg, params = setup
+    eng = E.ServingEngine(params, cfg, slots=2, max_len=192, mode="eval",
+                          eos_id=-2)
+    assert eng._chunk_budget() == cfg.prefill_chunk_budget  # idle: default
+    req = E.Request(rid=1, prompt=np.arange(1, 40), max_new=2)
+    req.budget_weight = 0.25
+    assert eng.submit(req)
+    eng.step()  # plans the prefill
+    if any(p is not None for p in eng._plan):
+        assert eng._chunk_budget() == max(
+            1, int(round(cfg.prefill_chunk_budget * 0.25)))
+    eng.run()
+
+
+# ---------------------------------------------------------------------------
+# Routing + plain pool serving
+# ---------------------------------------------------------------------------
+
+
+def test_least_loaded_routing_and_solo_bit_identity(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, (40, 70, 30, 17))
+    ref = _solo(params, cfg, prompts)
+    pool = ReplicaPool(_factory(params, cfg), cfg, replicas=2, warmup=False)
+    pool.start(supervise=False)
+    try:
+        _wait_ready(pool)
+        sinks = [_Sink() for _ in prompts]
+        for p, s in zip(prompts, sinks):
+            pool.submit([int(t) for t in p], max_new=10, sink=s)
+        pool.poll()
+        # least-loaded spread: 4 requests over 2×2 slots → 2 each
+        assert [r.inflight for r in pool.replicas] == [2, 2]
+        _drive(pool)
+        for s, want in zip(sinks, ref):
+            assert tuple(s.tokens) == want  # byte-identical through the pool
+            assert len(s.finals) == 1 and s.finals[0][1] == "OK"
+        assert pool.stats()["statuses"] == {"OK": len(prompts)}
+    finally:
+        pool.stop()
+
+
+def test_pool_cancel_queued_and_dispatched(setup):
+    cfg, params = setup
+    pool = ReplicaPool(_factory(params, cfg, slots=1), cfg, replicas=1,
+                       warmup=False)
+    try:
+        # queued cancel: nothing ready yet (drivers not started) → immediate
+        sink = _Sink()
+        rid = pool.submit([1, 2, 3], max_new=4, sink=sink)
+        assert pool.cancel(rid)
+        assert sink.finals == [("final", "CANCELLED", None, 0)]
+        assert rid not in pool._streams and len(pool.queue) == 0
+
+        pool.start(supervise=False)
+        _wait_ready(pool)
+        sink2 = _Sink()
+        prompts = _prompts(cfg, (60,))
+        rid2 = pool.submit([int(t) for t in prompts[0]], max_new=64,
+                           sink=sink2)
+        pool.poll()
+        assert pool._streams[rid2].replica == 0  # dispatched
+        assert pool.cancel(rid2)
+        _drive(pool)
+        assert len(sink2.finals) == 1
+        assert sink2.finals[0][1] == "CANCELLED"
+        assert not pool.cancel(rid2)  # unknown rid now
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# Health state machine
+# ---------------------------------------------------------------------------
+
+
+def test_health_gate_drain_quarantine_probe_reinstate(setup):
+    cfg, params = setup
+    cfg2 = dataclasses.replace(cfg, pool_backoff_s=0.05,
+                               pool_probe_timeout_s=60.0)
+    pool = ReplicaPool(_factory(params, cfg2), cfg2, replicas=2,
+                       warmup=False)
+    pool.start(supervise=False)
+    try:
+        _wait_ready(pool)
+        rep = pool.replicas[0]
+        # tick-failure gate
+        rep.engine.consecutive_tick_failures = cfg2.pool_health_fail_ticks
+        pool.poll()
+        assert rep.state == "draining"
+        pool.poll()  # no inflight → quarantined under backoff
+        assert rep.state == "quarantined"
+        assert rep.backoff_s == pytest.approx(0.05)
+        assert rep.engine.consecutive_tick_failures == 0  # gate archived
+        # routing never touches a non-ready replica
+        sink = _Sink()
+        pool.submit([1, 2, 3, 4], max_new=4, sink=sink)
+        pool.poll()
+        assert pool._streams == {} or all(
+            st.replica != 0 for st in pool._streams.values())
+        time.sleep(0.08)  # backoff elapses → probe → reinstatement
+        t0 = time.monotonic()
+        while rep.state != "ready" and time.monotonic() - t0 < 60:
+            pool.poll()
+            time.sleep(0.005)
+        assert rep.state == "ready"
+        assert rep.backoff_s == 0.0  # forgiven after a clean probe
+        _drive(pool)
+        assert len(sink.finals) == 1 and sink.finals[0][1] == "OK"
+
+        # straggler gate drains too (dense window via the monitor itself)
+        rep1 = pool.replicas[1]
+        mon = rep1.engine.straggler
+        mon.count = 50
+        for s in (48, 49, 50):
+            mon.events.append(FT.StragglerEvent(s, 1.0, 0.1))
+        assert mon.degraded(window=cfg2.pool_straggler_window,
+                            min_events=cfg2.pool_straggler_events)
+        pool.poll()
+        assert rep1.state == "draining"
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# Crash failover: injected, real thread kill, hang — byte-identical streams
+# ---------------------------------------------------------------------------
+
+
+def _run_pool_with_failure(params, cfg, *, replicas, kill, prompts,
+                           max_new=10, fault_plan=None):
+    """Serve ``prompts`` on a pool while ``kill(pool)`` fires once after the
+    first token lands on replica 0. Returns (sinks, pool_stats)."""
+    pool = ReplicaPool(_factory(params, cfg), cfg, replicas=replicas,
+                       warmup=False, fault_plan=fault_plan)
+    pool.start(supervise=False)
+    try:
+        _wait_ready(pool)
+        sinks = [_Sink() for _ in prompts]
+        for p, s in zip(prompts, sinks):
+            pool.submit([int(t) for t in p], max_new=max_new, sink=s)
+        killed = kill is None
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < 240:
+            pool.poll()
+            if not killed and any(s.tokens for s in sinks):
+                kill(pool)
+                killed = True
+            if killed and pool.idle():
+                break
+            time.sleep(0.005)
+        assert pool.idle(), f"pool stuck: {pool.stats()}"
+        return sinks, pool.stats()
+    finally:
+        pool.stop()
+
+
+def test_injected_replica_crash_migrates_byte_identical(setup):
+    cfg, params = setup
+    cfg2 = dataclasses.replace(cfg, pool_backoff_s=0.1)
+    prompts = _prompts(cfg, (40, 70, 30, 17, 25, 55))
+    ref = _solo(params, cfg, prompts)
+    plan = R.FaultPlan((R.Fault("replica_crash", tick=3, replica=0),))
+    sinks, stats = _run_pool_with_failure(params, cfg2, replicas=2,
+                                          kill=None, prompts=prompts,
+                                          fault_plan=plan)
+    assert stats["migrated_total"] >= 1  # replica 0 held work when it died
+    assert stats["statuses"].get("OK") == len(prompts)
+    for s, want in zip(sinks, ref):
+        assert tuple(s.tokens) == want  # no dup, no loss, byte-identical
+        assert len(s.finals) == 1 and s.finals[0][1] == "OK"
+        assert s.finals[0][3] == len(want)
+
+
+def test_real_thread_kill_n3_migrates_byte_identical(setup):
+    """The acceptance bar: N=3, one replica's driver thread REALLY killed
+    (async SystemExit, not an injected hook) mid-serve."""
+    cfg, params = setup
+    cfg2 = dataclasses.replace(cfg, pool_backoff_s=0.1)
+    prompts = _prompts(cfg, (40, 70, 30, 17, 25, 55, 45, 33, 20), seed=3)
+    ref = _solo(params, cfg, prompts)
+
+    def kill(pool):
+        tid = pool.replicas[0].driver._thread.ident
+        n = ctypes.pythonapi.PyThreadState_SetAsyncExc(
+            ctypes.c_long(tid), ctypes.py_object(SystemExit))
+        assert n == 1
+
+    sinks, stats = _run_pool_with_failure(params, cfg2, replicas=3,
+                                          kill=kill, prompts=prompts)
+    assert stats["migrated_total"] >= 1
+    assert stats["statuses"].get("OK") == len(prompts)
+    for s, want in zip(sinks, ref):
+        assert tuple(s.tokens) == want
+        assert len(s.finals) == 1 and s.finals[0][1] == "OK"
+    rep0 = [r for r in stats["per_replica"] if r["replica_id"] == 0][0]
+    assert rep0["crashes"] >= 1
+
+
+def test_replica_hang_heartbeat_failover_no_zombie_dups(setup):
+    """A hung driver trips the heartbeat detector; its requests migrate,
+    and when the zombie wakes its late events are disowned by the
+    ``st.req is req`` identity check — streams stay exactly-once."""
+    cfg, params = setup
+    cfg2 = dataclasses.replace(cfg, pool_hang_timeout_s=0.25,
+                               pool_backoff_s=0.1)
+    prompts = _prompts(cfg, (40, 70, 30, 17), seed=5)
+    ref = _solo(params, cfg, prompts)
+    plan = R.FaultPlan((R.Fault("replica_hang", tick=3, replica=0,
+                                duration_s=1.0),))
+    sinks, stats = _run_pool_with_failure(params, cfg2, replicas=2,
+                                          kill=None, prompts=prompts,
+                                          fault_plan=plan)
+    assert stats["migrated_total"] >= 1
+    for s, want in zip(sinks, ref):
+        assert tuple(s.tokens) == want  # zombie wake-up never double-sends
+        assert len(s.finals) == 1 and s.finals[0][1] == "OK"
+
+
+def test_restarted_replica_serves_again(setup):
+    """After a crash, the factory rebuilds the replica and a clean probe
+    reinstates it — replicas are never hard-removed."""
+    cfg, params = setup
+    cfg2 = dataclasses.replace(cfg, pool_backoff_s=0.05,
+                               pool_probe_timeout_s=120.0)
+    plan = R.FaultPlan((R.Fault("replica_crash", tick=1, replica=0),))
+    pool = ReplicaPool(_factory(params, cfg2), cfg2, replicas=1,
+                       warmup=False, fault_plan=plan)
+    pool.start(supervise=False)
+    try:
+        _wait_ready(pool)
+        sink = _Sink()
+        pool.submit([1, 2, 3, 4, 5], max_new=4, sink=sink)
+        _drive(pool, timeout_s=240)
+        assert len(sink.finals) == 1 and sink.finals[0][1] == "OK"
+        rep = pool.replicas[0]
+        assert rep.restarts >= 1 and rep.state == "ready"
+        assert rep.engine.replica_id == 0
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# Stats aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_stats_aggregation_per_replica(setup):
+    cfg, params = setup
+    pool = ReplicaPool(_factory(params, cfg), cfg, replicas=2, warmup=False)
+    pool.start(supervise=False)
+    try:
+        _wait_ready(pool)
+        sink = _Sink()
+        pool.submit([1, 2, 3, 4, 5, 6], max_new=4, sink=sink)
+        _drive(pool)
+        s = pool.stats()
+        assert s["pool"] is True and s["replicas"] == 2
+        ids = [r["replica_id"] for r in s["per_replica"]]
+        assert ids == [0, 1]
+        for r in s["per_replica"]:
+            eng = r["engine"]
+            assert eng is not None
+            assert eng["replica_id"] == r["replica_id"]
+            assert eng["ticks"] >= 0 and eng["uptime_s"] >= 0.0
+            assert "consecutive_tick_failures" in eng
+        assert sum(r["engine"]["ticks"] for r in s["per_replica"]) > 0
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# Server pool mode (SSE over a real socket)
+# ---------------------------------------------------------------------------
+
+
+async def _boot_pool_server(params, cfg, *, replicas=2, fault_plan=None,
+                            **kw):
+    pool = ReplicaPool(_factory(params, cfg, **kw), cfg, replicas=replicas,
+                       warmup=False, fault_plan=fault_plan)
+    server = ServingServer(pool, host="127.0.0.1", port=0)
+    await server.start()
+    while not server.ready:
+        await asyncio.sleep(0.01)
+    return server, pool
+
+
+async def _get(host, port, path, headers=None):
+    reader, writer = await asyncio.open_connection(host, port)
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
+    writer.write(f"GET {path} HTTP/1.1\r\nhost: {host}\r\n{extra}\r\n"
+                 .encode())
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    head, _, body = raw.partition(b"\r\n\r\n")
+    return int(head.split()[1]), body
+
+
+def test_server_pool_mode_slo_stats_and_400(setup):
+    import json
+
+    cfg, params = setup
+
+    async def body():
+        server, pool = await _boot_pool_server(params, cfg)
+        try:
+            rec = await _sse_request(
+                server.host, server.port,
+                {"prompt": [int(t) for t in _prompts(cfg, (24,))[0]],
+                 "max_new": 5, "slo": "interactive"})
+            assert rec["http"] == 200 and rec["status"] == "OK"
+            assert len(rec["tokens"]) == 5
+
+            # unknown class → 400, not a stream
+            rec = await _sse_request(server.host, server.port,
+                                     {"prompt": [1, 2], "max_new": 2,
+                                      "slo": "platinum"})
+            assert rec["http"] == 400
+
+            code, raw = await _get(server.host, server.port, "/v1/stats")
+            assert code == 200
+            s = json.loads(raw)
+            assert s["pool"] is True and s["replicas"] == 2
+            assert [r["replica_id"] for r in s["per_replica"]] == [0, 1]
+            assert s["statuses"].get("OK") == 1
+            assert s["ready"] is True and s["draining"] is False
+        finally:
+            await server.drain_and_stop(10.0)
+        assert pool.stopped
+
+    asyncio.run(body())
+
+
+@pytest.mark.parametrize("mode", ["injected", "thread_kill"])
+def test_server_pool_sse_survives_replica_kill(setup, mode):
+    """N=3 kill-one-replica over real sockets: every SSE stream still ends
+    ``done OK`` with contiguous token indexes and the exact uncontended
+    token sequence — no duplicated or missing ``token`` events."""
+    cfg, params = setup
+    cfg2 = dataclasses.replace(cfg, pool_backoff_s=0.1)
+    prompts = _prompts(cfg, (40, 70, 30, 17, 25, 55), seed=7)
+    max_new = 8
+    ref = _solo(params, cfg, prompts, max_new=max_new)
+
+    async def body():
+        plan = (R.FaultPlan((R.Fault("replica_crash", tick=3, replica=0),))
+                if mode == "injected" else None)
+        server, pool = await _boot_pool_server(params, cfg2, replicas=3,
+                                               fault_plan=plan)
+        try:
+            tasks = [asyncio.ensure_future(_sse_request(
+                server.host, server.port,
+                {"prompt": [int(t) for t in p], "max_new": max_new}))
+                for p in prompts]
+            if mode == "thread_kill":
+                while pool.replicas[0].inflight == 0:
+                    await asyncio.sleep(0.01)
+                tid = pool.replicas[0].driver._thread.ident
+                assert ctypes.pythonapi.PyThreadState_SetAsyncExc(
+                    ctypes.c_long(tid), ctypes.py_object(SystemExit)) == 1
+            recs = await asyncio.gather(*tasks)
+            return recs, pool.migrated_total
+        finally:
+            await server.drain_and_stop(20.0)
+
+    recs, migrated = asyncio.run(body())
+    assert migrated >= 1
+    for rec, want in zip(recs, ref):
+        assert rec["http"] == 200 and rec["status"] == "OK"
+        assert rec["events"][-1] == "done"
+        assert rec["events"].count("done") == 1  # exactly one terminal
+        assert tuple(rec["tokens"]) == want  # byte-identical, exactly-once

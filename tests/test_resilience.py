@@ -611,3 +611,75 @@ def test_double_cancel_is_idempotent(setup):
     eng.run()
     assert eng.stats()["statuses"]["CANCELLED"] == 1  # exactly one retirement
     assert [tuple(keep.generated)] == _outs(base)
+
+
+# ---------------------------------------------------------------------------
+# SLO-class pool admission ordering (DESIGN.md §replica-pool): property test
+# ---------------------------------------------------------------------------
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
+from repro.serving.pool import SLOQueue  # noqa: E402
+
+
+def _slo_req(rid, priority, deadline_s=None):
+    r = E.Request(rid=rid, prompt=np.array([1]), max_new=1)
+    r.priority = priority
+    r.deadline_s = deadline_s
+    r.submitted_at = 0.0
+    return r
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(
+    st.one_of(
+        st.none(),  # a pop
+        st.tuples(st.integers(min_value=-3, max_value=3),  # a push:
+                  st.sampled_from([None, 1e9, 5.0]))),     # (prio, deadline)
+    max_size=60))
+def test_slo_queue_total_order_property(ops):
+    """Any interleaving of pushes (priority, deadline) and pops obeys the
+    documented total order — priority DESC, admission sequence ASC — with
+    deadlines never influencing position. Equal-priority pops are strictly
+    FIFO (stable): the admission sequence is the only tiebreak."""
+    q = SLOQueue()
+    model = []  # (priority, seq)
+    rid = 0
+    seq = 0
+    for op in ops:
+        if op is None:
+            popped = q.pop()
+            if not model:
+                assert popped is None
+                continue
+            expect = min(model, key=lambda e: (-e[0], e[1]))
+            assert (popped.priority, popped._pool_seq) == expect
+            model.remove(expect)
+        else:
+            prio, dl = op
+            rid += 1
+            r = _slo_req(rid, prio, dl)
+            assert q.push(r, seq=seq)
+            r._pool_seq = seq  # test-side tag to identify the entry
+            model.append((prio, seq))
+            seq += 1
+    drained = []
+    while len(q):
+        drained.append(q.pop())
+    assert [(-r.priority, r._pool_seq) for r in drained] == sorted(
+        (-p, s) for p, s in model)
+
+
+def test_slo_queue_equal_class_fifo_and_expiry():
+    """Deterministic spot-check: same-class arrivals pop in submit order;
+    ``expire`` removes exactly the deadline-expired entries, order of the
+    rest untouched; a bounded queue rejects pushes at cap."""
+    q = SLOQueue(cap=4)
+    a, b = _slo_req(1, 1), _slo_req(2, 1)
+    lo = _slo_req(3, 0, deadline_s=0.5)
+    hi = _slo_req(4, 2)
+    for r in (a, b, lo, hi):
+        assert q.push(r)
+    assert not q.push(_slo_req(5, 3))  # cap: the pool's 429 path
+    assert q.expire(now=1.0) == [lo]  # lo's TTL elapsed while queued
+    assert [q.pop().rid for _ in range(3)] == [4, 1, 2]  # hi, then FIFO
+    assert q.pop() is None
