@@ -28,7 +28,16 @@ Every request retires with a structured terminal status (DESIGN.md
 per-request summary, and the admission queue can be bounded
 (``--queue-cap``) so overload is a rejected submit, not silent growth.
 
+With ``--kv-layout paged`` the batched cache rows become a page pool +
+per-slot page tables (DESIGN.md §paged-kv): memory is allocated page-by-page
+as frontiers advance, a radix trie interns finished prompts, and requests
+sharing a prompt prefix map those pages read-only at admission — prefilling
+only the tail and copy-on-write-forking at the first divergent write. The
+request set below includes three requests sharing one long prefix; the
+example prints the pool's prefix-cache hit rate and page utilization.
+
 Run:  PYTHONPATH=src python examples/serve_batched.py [--kv-cache-dtype int8]
+                                                      [--kv-layout paged]
 """
 
 import argparse
@@ -36,6 +45,7 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import params as P
@@ -49,6 +59,10 @@ def main(argv=None):
                     choices=["bf16", "int8"],
                     help="int8 = absmax-quantized KV cache with per-row "
                          "scales, dequantized inside the attention kernels")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="paged = page-pool KV cache with copy-on-write "
+                         "shared-prefix reuse (DESIGN.md §paged-kv)")
     ap.add_argument("--speculative", action="store_true",
                     help="prompt-lookup drafting + chunk-verify: up to γ+1 "
                          "tokens retire per tick, greedy output bit-identical "
@@ -65,7 +79,8 @@ def main(argv=None):
                          "retire as DEADLINE_EXCEEDED (0 = none)")
     args = ap.parse_args(argv)
     cfg = get_config("tellme-0.7b", smoke=True)
-    cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_cache_dtype)
+    cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_cache_dtype,
+                              kv_layout=args.kv_layout)
     specs = T.param_specs(cfg)
     params = T.pack_tree(P.init_params(specs, jax.random.PRNGKey(0)), specs)
 
@@ -73,10 +88,18 @@ def main(argv=None):
     # prompts (200, 150 tokens) that prefill across several ticks — and
     # different generation budgets
     lens = [8, 200, 24, 150, 64, 12, 96, 40]
+    shared = jax.random.randint(jax.random.PRNGKey(99), (256,), 0,
+                                cfg.vocab_size)  # a 256-token "system prompt"
+
+    def _prompt(i):
+        toks = jax.random.randint(jax.random.PRNGKey(i), (lens[i],), 0,
+                                  cfg.vocab_size)
+        if i % 3 == 1:  # requests 1, 4, 7 share the long prefix
+            return jnp.concatenate([shared, toks])
+        return toks
+
     reqs = [
-        E.Request(rid=i, prompt=jax.random.randint(jax.random.PRNGKey(i),
-                                                   (lens[i],), 0, cfg.vocab_size),
-                  max_new=4 + 2 * (i % 3),
+        E.Request(rid=i, prompt=_prompt(i), max_new=4 + 2 * (i % 3),
                   deadline_s=args.deadline_s or None)
         for i in range(len(lens))
     ]
@@ -120,6 +143,14 @@ def main(argv=None):
           f"stragglers={stats['straggler']['straggler_events']} "
           f"attn_impl={stats['attn_impl']}"
           f"{' (xla fallback)' if stats['xla_fallback'] else ''}")
+    if stats["paged"] is not None:
+        pg = stats["paged"]
+        print(f"paged kv: prefix hit rate {pg['prefix_hit_rate']:.2f} "
+              f"({pg['prefix_hits']}/{pg['prefix_queries']} admissions, "
+              f"{pg['prefix_hit_tokens']} prompt tokens skipped), "
+              f"{pg['cow_forks']} COW forks, pool high-water "
+              f"{pg['high_water']}/{pg['num_pages']} pages "
+              f"({pg['utilization']:.0%} resident at drain)")
 
 
 if __name__ == "__main__":

@@ -64,6 +64,18 @@ class ModelConfig:
     # paper's QDQ unit applied to the cache stream, halving attention-phase
     # HBM bytes. "bf16" (default) keeps every pre-existing path bit-identical.
     kv_cache_dtype: str = "bf16"  # bf16 | int8
+    # KV-cache residency *layout* (DESIGN.md §paged-kv). "contiguous" keeps
+    # per-slot [B, HK, S, D] rows (every pre-existing path, bit-identical).
+    # "paged" stores K/V in a device-resident page pool [P, HK, ps, D] (int8
+    # scale side arrays page along) addressed through a per-slot page table —
+    # a ServingEngine concern only: generate()/forward stay contiguous.
+    kv_layout: str = "contiguous"  # contiguous | paged
+    kv_page_size: int = 64  # tokens per page; must divide prefill_chunk_sizes[0]
+    kv_num_pages: int = 0   # pool size; 0 = auto (slots * cache_len / page_size)
+    # Radix-style shared-prefix reuse at admission (paged layout only):
+    # full prompt pages are interned in a trie so later requests sharing a
+    # system prompt map those pages read-only and prefill only the tail.
+    prefix_cache: bool = True
     # Ternary matmul engine (DESIGN.md §table-lookup). "packed" pins the
     # 2-bit-planar Pallas kernels; "tl" forces the table-lookup engine
     # (paper's Algorithm 1: grouped activation tables + index gather);

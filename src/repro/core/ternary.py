@@ -146,6 +146,60 @@ def mask_past_frontier(x, frontier, *, seq_axis: int, batch_axis: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV-cache view helpers (DESIGN.md §paged-kv)
+# ---------------------------------------------------------------------------
+#
+# The paged layout stores K/V in a page pool ``[P, HK, page_size, D]`` (scale
+# side arrays ``[P, HK, page_size]``) addressed through a per-slot page table
+# ``[B, NB]`` int32, NB = cache_len / page_size. These three helpers define
+# the XLA semantics the Pallas page-indirect kernels are tested against: the
+# gathered dense view is *exactly* the contiguous cache layout, so the
+# contiguous attention forms run on it unchanged and paged outputs are
+# bit-identical by construction. They use advanced-index gather/scatter,
+# which defeats GSPMD sharding of the pool — the paged layout is a
+# single-device serving concern (the engine), never a training path.
+
+
+def gather_kv_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Dense per-slot view of a page pool: ``[P, HK, ps, ...]`` gathered by
+    ``page_table [B, NB]`` → ``[B, HK, NB*ps, ...]`` (the contiguous cache
+    shape — garbage-page rows land at masked positions and are never read
+    un-masked, same contract as the contiguous trash tail)."""
+    view = pool[page_table]                 # [B, NB, HK, ps, ...]
+    view = jnp.moveaxis(view, 1, 2)         # [B, HK, NB, ps, ...]
+    b, hk, nb, ps = view.shape[:4]
+    return view.reshape(b, hk, nb * ps, *view.shape[4:])
+
+
+def scatter_kv_pages(pool: jax.Array, page_table: jax.Array,
+                     view: jax.Array) -> jax.Array:
+    """Inverse of :func:`gather_kv_pages`: write a dense ``[B, HK, NB*ps,
+    ...]`` view back through the table. Duplicate pages across slots are
+    either shared-prefix pages written back unmodified (identical values) or
+    the garbage page (content free by contract), so the scatter's
+    duplicate-index order never matters."""
+    b, hk, m = view.shape[:3]
+    nb = page_table.shape[1]
+    ps = m // nb
+    blocks = view.reshape(b, hk, nb, ps, *view.shape[3:])
+    blocks = jnp.moveaxis(blocks, 2, 1)     # [B, NB, HK, ps, ...]
+    flat = blocks.reshape(b * nb, hk, ps, *view.shape[3:])
+    return pool.at[page_table.reshape(-1)].set(flat.astype(pool.dtype))
+
+
+def update_kv_pages(pool: jax.Array, page_table: jax.Array, val: jax.Array,
+                    pos: jax.Array, page_size: int) -> jax.Array:
+    """Single-row frontier write through the table (the decode append):
+    ``val [B, HK, ...]`` lands at row ``pos % page_size`` of page
+    ``table[b, pos // page_size]``. Slots whose block is unmapped hit the
+    shared garbage page — colliding writes there carry only dead rows."""
+    page = jnp.take_along_axis(
+        page_table, (pos // page_size)[:, None], axis=1)[:, 0]  # [B]
+    row = pos % page_size
+    return pool.at[page, :, row].set(val.astype(pool.dtype))
+
+
+# ---------------------------------------------------------------------------
 # Reference ternary matmul semantics (the oracle every kernel is tested on)
 # ---------------------------------------------------------------------------
 

@@ -19,9 +19,15 @@ persisted measurement:
   falls back to its previous hard-coded default, so an absent cache file is
   exactly the pre-autotuner behavior.
 
-Cache file format (versioned, one flat object per kernel):
+Cache file format (versioned, one flat object per kernel). Version history:
+v1 keyed the attention family on the contiguous cache length ``s``; v2 adds
+the page-indirect variants under their own ``decode_attention.paged`` /
+``prefill_append.paged`` namespaces keyed on ``(ps, nb)`` — page-pool block
+sizes are measured against a different memory layout, so contiguous-tuned
+entries must never leak into paged lookups (and the version bump drops every
+v1 file whole rather than guessing at a migration):
 
-    {"version": 1,
+    {"version": 2,
      "device": "cpu:cpu",
      "kernels": {
        "ternary_matmul": {"m128-n4096-k4096": {"knobs": {"bm":128,"bk":256},
@@ -39,7 +45,7 @@ import time
 from pathlib import Path
 from typing import Any, Callable
 
-_VERSION = 1
+_VERSION = 2
 
 # In-memory store: {kernel: {shape_key: entry}}. Loaded lazily from the cache
 # file; ops wrappers read it at trace time (host-side only, never traced).
@@ -232,6 +238,9 @@ def _candidates(kernel: str, shape: dict) -> list[dict]:
         return [{"bkv": bkv} for bkv in (128, 256, 512) if bkv <= max(s, 128)]
     if kernel == "prefill_append":
         return [{"bkv": bkv} for bkv in _divisor_pow2(s, max(s, 64))]
+    if kernel in ("decode_attention.paged", "prefill_append.paged"):
+        ps = shape.get("ps", 64)  # bkv must divide the page size
+        return [{"bkv": bkv} for bkv in _divisor_pow2(ps, ps)]
     raise KeyError(f"no sweep defined for kernel {kernel!r}")
 
 
@@ -312,6 +321,47 @@ def _runner(kernel: str, shape: dict) -> Callable[[dict], Callable[[], Any]]:
             return lambda: pa_ops.prefill_append(q, kn, vn, kc, vc, off, **knobs)
         return make
 
+    if kernel == "decode_attention.paged":
+        from .decode_attention import ops as da_ops
+
+        b, h, hk, d = (shape.get("b", 2), shape.get("h", 4),
+                       shape.get("hk", 2), shape.get("d", 64))
+        ps, nb = shape.get("ps", 64), shape.get("nb", 4)
+        pages = b * nb + 1  # + the shared garbage page at 0
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(pages, hk, ps, d)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(pages, hk, ps, d)), jnp.float32)
+        pt = jnp.asarray(rng.permutation(pages - 1)[: b * nb]
+                         .reshape(b, nb) + 1, jnp.int32)
+        pos = jnp.full((b,), nb * ps - 1, jnp.int32)
+
+        def make(knobs):
+            return lambda: da_ops.decode_attention_paged(q, kp, vp, pt, pos,
+                                                         **knobs)
+        return make
+
+    if kernel == "prefill_append.paged":
+        from .prefill_append import ops as pa_ops
+
+        b, h, hk, d, c = (shape.get("b", 2), shape.get("h", 4),
+                          shape.get("hk", 2), shape.get("d", 64),
+                          shape.get("c", 64))
+        ps, nb = shape.get("ps", 64), shape.get("nb", 4)
+        pages = b * nb + 1
+        q = jnp.asarray(rng.normal(size=(b, h, c, d)), jnp.float32)
+        kn = jnp.asarray(rng.normal(size=(b, hk, c, d)), jnp.float32)
+        vn = jnp.asarray(rng.normal(size=(b, hk, c, d)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(pages, hk, ps, d)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(pages, hk, ps, d)), jnp.float32)
+        pt = jnp.asarray(rng.permutation(pages - 1)[: b * nb]
+                         .reshape(b, nb) + 1, jnp.int32)
+        off = jnp.zeros((b,), jnp.int32)
+
+        def make(knobs):
+            return lambda: pa_ops.prefill_append_paged(q, kn, vn, kp, vp, pt,
+                                                       off, **knobs)
+        return make
+
     raise KeyError(f"no runner defined for kernel {kernel!r}")
 
 
@@ -351,6 +401,10 @@ SMOKE_SHAPES: dict[str, list[dict]] = {
     "fused_norm_quant": [{"m": 8, "n": 64}],
     "decode_attention": [{"b": 2, "h": 4, "hk": 2, "d": 16, "s": 128}],
     "prefill_append": [{"b": 2, "h": 4, "hk": 2, "d": 16, "s": 128, "c": 64}],
+    "decode_attention.paged": [
+        {"b": 2, "h": 4, "hk": 2, "d": 16, "ps": 64, "nb": 2}],
+    "prefill_append.paged": [
+        {"b": 2, "h": 4, "hk": 2, "d": 16, "ps": 64, "nb": 2, "c": 64}],
 }
 
 
@@ -359,7 +413,7 @@ def main(argv: list[str] | None = None) -> int:
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="tune the tiny built-in shape set for all 5 kernels")
+                    help="tune the tiny built-in shape set for every kernel")
     ap.add_argument("--cache", default=None, help="cache file override")
     ap.add_argument("--reps", type=int, default=3)
     args = ap.parse_args(argv)

@@ -175,6 +175,130 @@ def _call(q, k, v, pos, scales, *, bkv, window, softcap, scale, interpret):
     )(*operands)
 
 
+def _paged_kernel(pt_ref, pos_ref, *args, **kw):
+    # Page-indirect wrapper: the page table rides as a second scalar-prefetch
+    # operand consumed *only* by the index maps — the online-softmax body is
+    # the contiguous kernel unchanged (logical kv positions are j*bkv+iota
+    # whatever pool row the block was fetched from).
+    del pt_ref
+    return _kernel(pos_ref, *args, **kw)
+
+
+def _call_paged(q, k, v, page_table, pos, scales, *, bkv, window, softcap,
+                scale, interpret):
+    """Page-indirect pallas_call builder (DESIGN.md §paged-kv).
+
+    ``k``/``v`` are page pools reshaped to [P*HK, ps, D] (row = page·HK +
+    kv-head) and ``page_table`` [B, NB] maps each slot's logical kv block to
+    a page. The kv index map composes the contiguous frontier clamp with a
+    table lookup: logical block ``lj`` → page ``pt[slot, lj·bkv ÷ ps]`` →
+    pool row — so skipped blocks still repeat a block index and move zero
+    bytes, page lookup included. ``scales`` pools are [P*HK, ps]."""
+    bhk, g, d = q.shape
+    p_hk, ps, _ = k.shape
+    b, nb = page_table.shape
+    hk = bhk // b
+    assert ps % bkv == 0, (ps, bkv)
+    scale = scale if scale is not None else 1.0 / d**0.5
+    nkv = nb * ps // bkv
+    quantized = scales is not None
+
+    kern = functools.partial(
+        _paged_kernel, scale=scale, bkv=bkv, window=window, softcap=softcap,
+        nkv=nkv, hk=hk, quantized=quantized,
+    )
+
+    def live_j(bh, j, pt_ref, pos_ref):
+        # same clamp as the contiguous kernel: skipped blocks repeat an index
+        p = pos_ref[bh // hk]
+        lo = jnp.maximum(p - window + 1, 0) // bkv if window > 0 else 0
+        return jnp.clip(j, lo, p // bkv)
+
+    def kv_index(bh, j, pt_ref, pos_ref):
+        lj = live_j(bh, j, pt_ref, pos_ref)
+        page = pt_ref[bh // hk, (lj * bkv) // ps]
+        return (page * hk + bh % hk, lj % (ps // bkv), 0)
+
+    def scale_index(bh, j, pt_ref, pos_ref):
+        lj = live_j(bh, j, pt_ref, pos_ref)
+        page = pt_ref[bh // hk, (lj * bkv) // ps]
+        return (page * hk + bh % hk, lj % (ps // bkv))
+
+    in_specs = [
+        pl.BlockSpec((1, g, d), lambda bh, j, pt_ref, pos_ref: (bh, 0, 0)),
+        pl.BlockSpec((1, bkv, d), kv_index),
+        pl.BlockSpec((1, bkv, d), kv_index),
+    ]
+    operands = [page_table, pos, q, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bkv), scale_index),
+                     pl.BlockSpec((1, bkv), scale_index)]
+        operands += list(scales)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bhk, nkv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, g, d),
+                               lambda bh, j, pt_ref, pos_ref: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bhk, g, d), q.dtype),
+        interpret=interpret,
+    )(*operands)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bkv", "window", "softcap", "scale", "interpret")
+)
+def decode_attention_paged_kernel(
+    q: jax.Array,           # [B*HK, G, D] grouped queries
+    k: jax.Array,           # [P*HK, ps, D] page pool
+    v: jax.Array,           # [P*HK, ps, D]
+    page_table: jax.Array,  # [B, NB] int32
+    pos: jax.Array,         # [B] int32 per-slot frontier
+    *,
+    bkv: int = 128,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    return _call_paged(q, k, v, page_table, pos, None, bkv=bkv, window=window,
+                       softcap=softcap, scale=scale, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bkv", "window", "softcap", "scale", "interpret")
+)
+def decode_attention_paged_kernel_quant(
+    q: jax.Array,           # [B*HK, G, D] grouped queries
+    k: jax.Array,           # [P*HK, ps, D] int8 page pool
+    v: jax.Array,           # [P*HK, ps, D]
+    k_scale: jax.Array,     # [P*HK, ps] f32 per-row scales
+    v_scale: jax.Array,     # [P*HK, ps]
+    page_table: jax.Array,  # [B, NB] int32
+    pos: jax.Array,         # [B] int32 per-slot frontier
+    *,
+    bkv: int = 128,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Int8-pool twin of :func:`decode_attention_paged_kernel`."""
+    return _call_paged(q, k, v, page_table, pos, (k_scale, v_scale), bkv=bkv,
+                       window=window, softcap=softcap, scale=scale,
+                       interpret=interpret)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bkv", "window", "softcap", "scale", "interpret")
 )

@@ -7,7 +7,9 @@ import jax.numpy as jnp
 
 from .. import _common as C
 from .. import autotune
-from .kernel import decode_attention_kernel, decode_attention_kernel_quant
+from .kernel import (decode_attention_kernel, decode_attention_kernel_quant,
+                     decode_attention_paged_kernel,
+                     decode_attention_paged_kernel_quant)
 
 
 def decode_attention(
@@ -78,6 +80,75 @@ def decode_attention(
             k_cache.reshape(b * hk, mp, d),
             v_cache.reshape(b * hk, mp, d),
             pos,
+            bkv=bkv, window=window, softcap=softcap, scale=scale,
+            interpret=interpret,
+        )
+    return out.reshape(b, hk, gp, d)[:, :, :g].reshape(b, h, d)
+
+
+def decode_attention_paged(
+    q: jax.Array,           # [B, H, D] single new token per slot
+    k_pool: jax.Array,      # [P, HK, ps, D] page pool (bf16, or int8 + scales)
+    v_pool: jax.Array,      # [P, HK, ps, D]
+    page_table: jax.Array,  # [B, NB] int32 (NB·ps = logical cache length)
+    pos: jax.Array,         # [B] attend-to-<=pos frontier
+    *,
+    k_scale: jax.Array | None = None,  # [P, HK, ps] f32 (int8 pool only)
+    v_scale: jax.Array | None = None,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    bkv: int | None = None,
+    interpret=None,
+) -> jax.Array:
+    """Page-indirect decode attention (DESIGN.md §paged-kv); returns [B, H, D].
+
+    The contiguous kernel's frontier-skip schedule with its kv index map
+    composed with a page-table lookup. ``bkv`` is tuned under its own
+    ``decode_attention.paged`` autotune namespace (contiguous-tuned block
+    sizes never leak in — they were measured against a different memory
+    layout) and must divide the page size, so it is halved until it does.
+    """
+    interpret = C.resolve_interpret(interpret)
+    b, h, d = q.shape
+    p_pages, hk, ps = k_pool.shape[:3]
+    nb = page_table.shape[1]
+    g = h // hk
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    page_table = page_table.astype(jnp.int32)
+    quantized = k_scale is not None
+
+    if bkv is None:
+        bkv = autotune.best(
+            "decode_attention.paged",
+            autotune.shape_key(b=b, h=h, hk=hk, d=d, ps=ps, nb=nb),
+            {"bkv": min(ps, 128)})["bkv"]
+    bkv = min(bkv, ps)
+    while ps % bkv:
+        bkv //= 2
+
+    gp = C.round_up(g, 8)  # sublane shape for the grouped-query block
+    qg = q.reshape(b, hk, g, d)
+    if gp != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+
+    if quantized:
+        out = decode_attention_paged_kernel_quant(
+            qg.reshape(b * hk, gp, d),
+            k_pool.reshape(p_pages * hk, ps, d),
+            v_pool.reshape(p_pages * hk, ps, d),
+            k_scale.reshape(p_pages * hk, ps).astype(jnp.float32),
+            v_scale.reshape(p_pages * hk, ps).astype(jnp.float32),
+            page_table, pos,
+            bkv=bkv, window=window, softcap=softcap, scale=scale,
+            interpret=interpret,
+        )
+    else:
+        out = decode_attention_paged_kernel(
+            qg.reshape(b * hk, gp, d),
+            k_pool.reshape(p_pages * hk, ps, d),
+            v_pool.reshape(p_pages * hk, ps, d),
+            page_table, pos,
             bkv=bkv, window=window, softcap=softcap, scale=scale,
             interpret=interpret,
         )

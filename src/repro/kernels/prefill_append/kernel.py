@@ -252,6 +252,279 @@ def _call(q, k_new, v_new, k_cache, v_cache, offset, scales, *,
     )(*operands)
 
 
+def _paged_kernel(
+    off_ref, pt_ref, q_ref, kn_ref, vn_ref, kc_ref, vc_ref, *rest,
+    scale: float, bkv: int, c: int, ps: int, window: int, softcap: float,
+    nkv: int, npg: int, hk: int, prefix_limit: int, quantized: bool = False,
+):
+    """Page-indirect twin of :func:`_kernel` (DESIGN.md §paged-kv).
+
+    Prefix phase identical (kv blocks arrive from pool rows via the index
+    map; logical positions are still ``j*bkv + iota``). The chunk phase
+    splits into ``npg = C / page_size`` grid steps — one per chunk page — so
+    each aliased output window is exactly one pool page row, addressed at
+    ``pt[slot, off/ps + t]``; the causal mask orders the sub-steps' online
+    updates exactly like one fused chunk step."""
+    if quantized:
+        (ks_ref, vs_ref, o_ref, ko_ref, vo_ref, kso_ref, vso_ref,
+         acc_ref, m_ref, l_ref) = rest
+    else:
+        o_ref, ko_ref, vo_ref, acc_ref, m_ref, l_ref = rest
+    del pt_ref  # consumed by the index maps only
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    off = off_ref[bh // hk]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = q_ref.shape[1]  # G*C
+
+    def _row_i(cols):
+        return jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0) % c
+
+    def _online_update(s, kpos, v):
+        qpos = off + _row_i(s.shape[1])
+        mask = kpos <= qpos
+        if window > 0:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    # --- prefix phase: frontier-skipped pool pages of the existing cache ----
+    live = jnp.logical_and(j < nkv, j * bkv < off)
+    if prefix_limit > 0:
+        live = jnp.logical_and(live, off < prefix_limit)
+    if window > 0:
+        live = jnp.logical_and(live, (j + 1) * bkv - 1 >= off - window + 1)
+
+    @pl.when(live)
+    def _prefix():
+        q = q_ref[0]  # [G*C, D]
+        k = kc_ref[0]  # [bkv, D] — a pool page sub-block
+        v = vc_ref[0]
+        if quantized:
+            k = ternary.dequantize_kv(k, ks_ref[0], q_ref.dtype)
+            v = ternary.dequantize_kv(v, vs_ref[0], q_ref.dtype)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        kpos = jnp.where(kpos < off, kpos, jnp.int32(2**30))
+        _online_update(s, kpos, v)
+
+    # --- chunk phase: one page-sized sub-block per step + the page append ---
+    t = j - nkv  # chunk page index (only meaningful when j >= nkv)
+
+    @pl.when(j >= nkv)
+    def _chunk():
+        q = q_ref[0]
+        kn = kn_ref[0]  # [ps, D] — chunk page t
+        vn = vn_ref[0]
+        if quantized:
+            kn_q, ks_n = ternary.quantize_kv(kn)
+            vn_q, vs_n = ternary.quantize_kv(vn)
+            kn_d = ternary.dequantize_kv(kn_q, ks_n, q_ref.dtype)
+            vn_d = ternary.dequantize_kv(vn_q, vs_n, q_ref.dtype)
+        else:
+            kn_d, vn_d = kn, vn
+        s = jax.lax.dot_general(
+            q, kn_d, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32
+        ) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = off + t * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _online_update(s, kpos, vn_d)
+        if quantized:
+            ko_ref[0] = kn_q
+            vo_ref[0] = vn_q
+            kso_ref[0] = ks_n
+            vso_ref[0] = vs_n
+        else:
+            ko_ref[0] = kn_ref[0].astype(ko_ref.dtype)
+            vo_ref[0] = vn_ref[0].astype(vo_ref.dtype)
+
+    @pl.when(j == nkv + npg - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _call_paged(q, k_new, v_new, k_pool, v_pool, page_table, offset, scales,
+                *, bkv, window, softcap, scale, prefix_limit, interpret):
+    """Page-indirect pallas_call builder. ``k_pool``/``v_pool`` are page
+    pools reshaped to [P*HK, ps, D] (row = page·HK + kv-head); ``scales`` is
+    None or their [P*HK, ps] f32 side pools. The chunk appends through
+    aliased (1, ps, D) pool windows — each chunk page's last grid visit
+    writes the whole window, so the write-back is always complete."""
+    bhk, gc, d = q.shape
+    c = k_new.shape[1]
+    p_hk, ps, _ = k_pool.shape
+    b, nb = page_table.shape
+    hk = bhk // b
+    assert ps % bkv == 0, (ps, bkv)
+    assert c % ps == 0 and gc % c == 0, (c, ps, gc)
+    scale = scale if scale is not None else 1.0 / d**0.5
+    nkv = nb * ps // bkv
+    npg = c // ps
+    quantized = scales is not None
+
+    kern = functools.partial(
+        _paged_kernel, scale=scale, bkv=bkv, c=c, ps=ps, window=window,
+        softcap=softcap, nkv=nkv, npg=npg, hk=hk, prefix_limit=prefix_limit,
+        quantized=quantized,
+    )
+
+    def live_j(bh, j, off_ref, pt_ref):
+        off = off_ref[bh // hk]
+        hi = jnp.maximum(off - 1, 0) // bkv
+        lo = jnp.maximum(off - window, 0) // bkv if window > 0 else 0
+        return jnp.clip(j, lo, hi)
+
+    def kv_index(bh, j, off_ref, pt_ref):
+        lj = live_j(bh, j, off_ref, pt_ref)
+        page = pt_ref[bh // hk, (lj * bkv) // ps]
+        return (page * hk + bh % hk, lj % (ps // bkv), 0)
+
+    def scale_index(bh, j, off_ref, pt_ref):
+        lj = live_j(bh, j, off_ref, pt_ref)
+        page = pt_ref[bh // hk, (lj * bkv) // ps]
+        return (page * hk + bh % hk, lj % (ps // bkv))
+
+    def kn_index(bh, j, off_ref, pt_ref):
+        return (bh, jnp.clip(j - nkv, 0, npg - 1), 0)
+
+    def chunk_out_row(bh, j, off_ref, pt_ref):
+        t = jnp.clip(j - nkv, 0, npg - 1)
+        page = pt_ref[bh // hk, off_ref[bh // hk] // ps + t]
+        return page * hk + bh % hk
+
+    def chunk_out_index(bh, j, off_ref, pt_ref):
+        return (chunk_out_row(bh, j, off_ref, pt_ref), 0, 0)
+
+    def scale_out_index(bh, j, off_ref, pt_ref):
+        return (chunk_out_row(bh, j, off_ref, pt_ref), 0)
+
+    in_specs = [
+        pl.BlockSpec((1, gc, d), lambda bh, j, off_ref, pt_ref: (bh, 0, 0)),
+        pl.BlockSpec((1, ps, d), kn_index),
+        pl.BlockSpec((1, ps, d), kn_index),
+        pl.BlockSpec((1, bkv, d), kv_index),
+        pl.BlockSpec((1, bkv, d), kv_index),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, gc, d), lambda bh, j, off_ref, pt_ref: (bh, 0, 0)),
+        pl.BlockSpec((1, ps, d), chunk_out_index),
+        pl.BlockSpec((1, ps, d), chunk_out_index),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bhk, gc, d), q.dtype),
+        jax.ShapeDtypeStruct((p_hk, ps, d), k_pool.dtype),
+        jax.ShapeDtypeStruct((p_hk, ps, d), v_pool.dtype),
+    ]
+    operands = [offset, page_table, q, k_new, v_new, k_pool, v_pool]
+    aliases = {5: 1, 6: 2}
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bkv), scale_index),
+                     pl.BlockSpec((1, bkv), scale_index)]
+        out_specs += [pl.BlockSpec((1, ps), scale_out_index),
+                      pl.BlockSpec((1, ps), scale_out_index)]
+        out_shape += [jax.ShapeDtypeStruct((p_hk, ps), jnp.float32),
+                      jax.ShapeDtypeStruct((p_hk, ps), jnp.float32)]
+        operands += list(scales)
+        aliases.update({7: 3, 8: 4})
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bhk, nkv + npg),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((gc, d), jnp.float32),
+            pltpu.VMEM((gc,), jnp.float32),
+            pltpu.VMEM((gc,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bkv", "window", "softcap", "scale",
+                              "prefix_limit", "interpret")
+)
+def prefill_append_paged_kernel(
+    q: jax.Array,           # [B*HK, G*C, D] grouped chunk queries
+    k_new: jax.Array,       # [B*HK, C, D] chunk keys (to append)
+    v_new: jax.Array,       # [B*HK, C, D]
+    k_pool: jax.Array,      # [P*HK, ps, D] page pool
+    v_pool: jax.Array,      # [P*HK, ps, D]
+    page_table: jax.Array,  # [B, NB] int32
+    offset: jax.Array,      # [B] int32 frontier / write base (≡ 0 mod C)
+    *,
+    bkv: int = 128,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    prefix_limit: int = 0,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    return _call_paged(q, k_new, v_new, k_pool, v_pool, page_table, offset,
+                       None, bkv=bkv, window=window, softcap=softcap,
+                       scale=scale, prefix_limit=prefix_limit,
+                       interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bkv", "window", "softcap", "scale",
+                              "prefix_limit", "interpret")
+)
+def prefill_append_paged_kernel_quant(
+    q: jax.Array,           # [B*HK, G*C, D] grouped chunk queries
+    k_new: jax.Array,       # [B*HK, C, D] chunk keys (float; quantized in VMEM)
+    v_new: jax.Array,       # [B*HK, C, D]
+    k_pool: jax.Array,      # [P*HK, ps, D] int8 page pool
+    v_pool: jax.Array,      # [P*HK, ps, D]
+    k_scale: jax.Array,     # [P*HK, ps] f32 per-row scales
+    v_scale: jax.Array,     # [P*HK, ps]
+    page_table: jax.Array,  # [B, NB] int32
+    offset: jax.Array,      # [B] int32 frontier / write base (≡ 0 mod C)
+    *,
+    bkv: int = 128,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    prefix_limit: int = 0,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Int8-pool twin of :func:`prefill_append_paged_kernel`."""
+    return _call_paged(q, k_new, v_new, k_pool, v_pool, page_table, offset,
+                       (k_scale, v_scale), bkv=bkv, window=window,
+                       softcap=softcap, scale=scale,
+                       prefix_limit=prefix_limit, interpret=interpret)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bkv", "window", "softcap", "scale",
                               "prefix_limit", "interpret")

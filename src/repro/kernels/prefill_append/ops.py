@@ -6,7 +6,9 @@ import jax.numpy as jnp
 
 from .. import _common as C
 from .. import autotune
-from .kernel import prefill_append_kernel, prefill_append_kernel_quant
+from .kernel import (prefill_append_kernel, prefill_append_kernel_quant,
+                     prefill_append_paged_kernel,
+                     prefill_append_paged_kernel_quant)
 
 
 def prefill_append(
@@ -89,6 +91,91 @@ def prefill_append(
         out.reshape(b, hk, g, c, d).reshape(b, h, c, d),
         k_cache.reshape(b, hk, m, d),
         v_cache.reshape(b, hk, m, d),
+    )
+
+
+def prefill_append_paged(
+    q: jax.Array,           # [B, H, C, D] chunk queries (rope'd at offset..)
+    k_new: jax.Array,       # [B, HK, C, D] chunk keys
+    v_new: jax.Array,       # [B, HK, C, D]
+    k_pool: jax.Array,      # [P, HK, ps, D] page pool (bf16, or int8 + scales)
+    v_pool: jax.Array,      # [P, HK, ps, D]
+    page_table: jax.Array,  # [B, NB] int32 (NB·ps = logical cache length)
+    offset: jax.Array,      # [B] (or scalar) per-slot write base, ≡ 0 (mod C)
+    *,
+    k_scale: jax.Array | None = None,  # [P, HK, ps] f32 (int8 pool only)
+    v_scale: jax.Array | None = None,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    bkv: int | None = None,
+    prefix_limit: int = 0,
+    interpret=None,
+):
+    """Page-indirect fused chunk prefill (DESIGN.md §paged-kv).
+
+    Same contract as :func:`prefill_append` with the batched cache replaced
+    by a page pool + per-slot page table: prefix blocks stream from pool rows
+    through the frontier-skip index map, and the chunk appends through
+    page-sized aliased pool windows at ``pt[slot, offset/ps + t]``. Requires
+    ``C % page_size == 0`` (the engine enforces the divisibility chain via
+    ``ServingConfig.kv_page_size``); the caller must have COW-resolved every
+    written page to refcount 1 (``PagedKV.ensure_writable``) first. ``bkv``
+    lives in the ``prefill_append.paged`` autotune namespace and is halved
+    until it divides the page size.
+    """
+    interpret = C.resolve_interpret(interpret)
+    b, h, c, d = q.shape
+    p_pages, hk, ps = k_pool.shape[:3]
+    nb = page_table.shape[1]
+    g = h // hk
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    page_table = page_table.astype(jnp.int32)
+
+    if bkv is None:
+        bkv = autotune.best(
+            "prefill_append.paged",
+            autotune.shape_key(b=b, c=c, d=d, h=h, hk=hk, ps=ps, nb=nb),
+            {"bkv": min(ps, 128)})["bkv"]
+    bkv = min(bkv, ps)
+    while ps % bkv:
+        bkv //= 2
+
+    qg = q.reshape(b, hk, g, c, d).reshape(b * hk, g * c, d)
+    if k_scale is not None:
+        out, k_pool, v_pool, k_scale, v_scale = prefill_append_paged_kernel_quant(
+            qg,
+            k_new.reshape(b * hk, c, d),
+            v_new.reshape(b * hk, c, d),
+            k_pool.reshape(p_pages * hk, ps, d),
+            v_pool.reshape(p_pages * hk, ps, d),
+            k_scale.reshape(p_pages * hk, ps).astype(jnp.float32),
+            v_scale.reshape(p_pages * hk, ps).astype(jnp.float32),
+            page_table, offset,
+            bkv=bkv, window=window, softcap=softcap, scale=scale,
+            prefix_limit=prefix_limit, interpret=interpret,
+        )
+        return (
+            out.reshape(b, hk, g, c, d).reshape(b, h, c, d),
+            k_pool.reshape(p_pages, hk, ps, d),
+            v_pool.reshape(p_pages, hk, ps, d),
+            k_scale.reshape(p_pages, hk, ps),
+            v_scale.reshape(p_pages, hk, ps),
+        )
+    out, k_pool, v_pool = prefill_append_paged_kernel(
+        qg,
+        k_new.reshape(b * hk, c, d),
+        v_new.reshape(b * hk, c, d),
+        k_pool.reshape(p_pages * hk, ps, d),
+        v_pool.reshape(p_pages * hk, ps, d),
+        page_table, offset,
+        bkv=bkv, window=window, softcap=softcap, scale=scale,
+        prefix_limit=prefix_limit, interpret=interpret,
+    )
+    return (
+        out.reshape(b, hk, g, c, d).reshape(b, h, c, d),
+        k_pool.reshape(p_pages, hk, ps, d),
+        v_pool.reshape(p_pages, hk, ps, d),
     )
 
 

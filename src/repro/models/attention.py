@@ -303,6 +303,116 @@ def prefill_append_attention(
     return o.reshape(b, h, c, d), k_cache, v_cache
 
 
+def decode_attention_paged(
+    q: jax.Array,           # [B, H, D]
+    k_pool: jax.Array,      # [P, HK, ps, D] page pool (bf16, or int8 + scales)
+    v_pool: jax.Array,      # [P, HK, ps, D]
+    page_table: jax.Array,  # [B, NB] int32 (NB*ps == the logical cache_len)
+    pos: jax.Array,         # [B]
+    *,
+    k_scale: jax.Array | None = None,  # [P, HK, ps] f32 (int8 pool only)
+    v_scale: jax.Array | None = None,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Page-indirect twin of :func:`decode_attention` (DESIGN.md §paged-kv).
+
+    The frontier write (``update_kv_cache``'s role) happens *before* this
+    call via ``ternary.update_kv_pages`` — the pools passed here already hold
+    the new token's row. ``"xla"`` gathers the dense per-slot view
+    (``ternary.gather_kv_pages``) and runs the contiguous XLA form on it, so
+    paged semantics are the contiguous semantics by construction; ``"kernel"``
+    is the Pallas form whose index maps translate kv-block → page-table entry
+    → pool row, keeping the clamped frontier-skip (skipped blocks move zero
+    bytes, page lookups included).
+    """
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "xla"
+    if impl == "kernel":
+        from ..kernels.decode_attention import ops as da_ops
+
+        return da_ops.decode_attention_paged(
+            q, k_pool, v_pool, page_table, pos, k_scale=k_scale,
+            v_scale=v_scale, window=window, softcap=softcap, scale=scale)
+    kd = ternary.gather_kv_pages(k_pool, page_table)
+    vd = ternary.gather_kv_pages(v_pool, page_table)
+    ks = vs = None
+    if k_scale is not None:
+        ks = ternary.gather_kv_pages(k_scale, page_table)
+        vs = ternary.gather_kv_pages(v_scale, page_table)
+    return decode_attention(q, kd, vd, pos, k_scale=ks, v_scale=vs,
+                            window=window, softcap=softcap, scale=scale,
+                            impl="xla")
+
+
+def prefill_append_attention_paged(
+    q: jax.Array,           # [B, H, C, D] chunk queries
+    k_new: jax.Array,       # [B, HK, C, D]
+    v_new: jax.Array,       # [B, HK, C, D]
+    k_pool: jax.Array,      # [P, HK, ps, D] page pool
+    v_pool: jax.Array,      # [P, HK, ps, D]
+    page_table: jax.Array,  # [B, NB] int32
+    offset: jax.Array,      # [B] chunk-aligned frontier (≡ 0 mod C)
+    *,
+    k_scale: jax.Array | None = None,  # [P, HK, ps] f32 (int8 pool only)
+    v_scale: jax.Array | None = None,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    impl: str = "auto",
+    prefix_limit: int = 0,
+    aligned: bool = True,
+):
+    """Page-indirect twin of :func:`prefill_append_attention`.
+
+    ``"xla"`` gathers the dense view, runs the contiguous XLA form on it
+    (append included), and scatters the full view back through the table —
+    the engine's ``ensure_writable`` guarantees every block the chunk writes
+    is exclusively owned, and unmodified shared blocks scatter back their
+    own values. ``"kernel"`` appends through aliased pool windows addressed
+    by the page table, so only the chunk's pages move. Same ``aligned``
+    contract as the contiguous form: speculative verify frontiers pass
+    ``aligned=False`` and pin the XLA form.
+    """
+    if impl == "auto":
+        impl = "kernel" if aligned and jax.default_backend() == "tpu" else "xla"
+    if impl == "kernel" and not aligned:
+        raise ValueError(
+            "prefill_append_attention_paged: impl='kernel' requires "
+            "chunk-aligned offsets (aligned=True); verify frontiers are "
+            "arbitrary and pin the XLA form")
+    if impl == "kernel":
+        from ..kernels.prefill_append import ops as pa_ops
+
+        return pa_ops.prefill_append_paged(
+            q, k_new, v_new, k_pool, v_pool, page_table, offset,
+            k_scale=k_scale, v_scale=v_scale, window=window, softcap=softcap,
+            scale=scale, prefix_limit=prefix_limit)
+    kv = ternary.gather_kv_pages(k_pool, page_table)
+    vv = ternary.gather_kv_pages(v_pool, page_table)
+    quantized = k_scale is not None
+    if quantized:
+        ksv = ternary.gather_kv_pages(k_scale, page_table)
+        vsv = ternary.gather_kv_pages(v_scale, page_table)
+        out, kv, vv, ksv, vsv = prefill_append_attention(
+            q, k_new, v_new, kv, vv, offset, k_scale=ksv, v_scale=vsv,
+            window=window, softcap=softcap, scale=scale, impl="xla",
+            prefix_limit=prefix_limit, aligned=aligned)
+        return (out,
+                ternary.scatter_kv_pages(k_pool, page_table, kv),
+                ternary.scatter_kv_pages(v_pool, page_table, vv),
+                ternary.scatter_kv_pages(k_scale, page_table, ksv),
+                ternary.scatter_kv_pages(v_scale, page_table, vsv))
+    out, kv, vv = prefill_append_attention(
+        q, k_new, v_new, kv, vv, offset, window=window, softcap=softcap,
+        scale=scale, impl="xla", prefix_limit=prefix_limit, aligned=aligned)
+    return (out,
+            ternary.scatter_kv_pages(k_pool, page_table, kv),
+            ternary.scatter_kv_pages(v_pool, page_table, vv))
+
+
 def append_kv_cache(k_cache, v_cache, k_new, v_new, offset):
     """Write a C-token chunk's K/V at ``[offset, offset+C)``. k_new [B, HK, C, D].
 

@@ -210,7 +210,7 @@ def pack_tree(params, specs):
 
 def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
                 attn_impl="auto", prefix_limit=0, aligned=True, rope=None,
-                xq=None, residual=None, use_kernel="auto"):
+                xq=None, residual=None, use_kernel="auto", page_table=None):
     """``xq`` (the fused norm-quant prologue's ``(x_i8, x_scale[, tables])``)
     replaces ``x`` as the projection input on the int8-resident path;
     ``residual`` is folded into the o-projection's dequant epilogue. ``rope``
@@ -218,7 +218,9 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
     ``aligned`` is the chunk path's offset contract (False for speculative
     verify — see ``prefill_append_attention``). ``use_kernel`` is the matmul
     engine selector threaded from ``cfg.matmul_engine`` on the packed path
-    (``bitlinear.apply``'s TL-vs-packed dispatch)."""
+    (``bitlinear.apply``'s TL-vs-packed dispatch). ``page_table`` ([B, NB]
+    int32, DESIGN.md §paged-kv) switches the cache leaves' interpretation to
+    page pools and routes reads/writes through the page-indirect forms."""
     b, s, _ = x.shape
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     window = cfg.sliding_window if kind.local else 0
@@ -244,6 +246,8 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
     # so it would block K/V gradients — the knob is a serving-time layout,
     # and QAT of the cache would need a dedicated STE path.
     quant = cfg.kv_cache_dtype == "int8" and mode != "train"
+    if page_table is not None and cache is None:
+        raise ValueError("paged attention requires an existing cache pool")
     if cache is None:  # prefill / train
         if quant:
             # quantize-then-attend: one-shot prefill sees the same
@@ -260,7 +264,24 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
         if not quant:
             new_cache = {"k": k, "v": v}
     elif s > 1:  # mode="prefill_chunk": chunk attends to cache prefix + self
-        if quant:
+        if page_table is not None:
+            if quant:
+                out, k_c, v_c, ks_c, vs_c = attn_ops.prefill_append_attention_paged(
+                    q, k, v, cache["k"], cache["v"], page_table, pos,
+                    k_scale=cache["k_scale"], v_scale=cache["v_scale"],
+                    window=window, softcap=cfg.attn_logit_softcap,
+                    impl=attn_impl, prefix_limit=prefix_limit, aligned=aligned,
+                )
+                new_cache = {"k": k_c, "k_scale": ks_c, "v": v_c,
+                             "v_scale": vs_c}
+            else:
+                out, k_c, v_c = attn_ops.prefill_append_attention_paged(
+                    q, k, v, cache["k"], cache["v"], page_table, pos,
+                    window=window, softcap=cfg.attn_logit_softcap,
+                    impl=attn_impl, prefix_limit=prefix_limit, aligned=aligned,
+                )
+                new_cache = {"k": k_c, "v": v_c}
+        elif quant:
             out, k_c, v_c, ks_c, vs_c = attn_ops.prefill_append_attention(
                 q, k, v, cache["k"], cache["v"], pos,
                 k_scale=cache["k_scale"], v_scale=cache["v_scale"],
@@ -276,7 +297,37 @@ def _apply_attn(bp, x, cfg, kind, positions, *, mode, cache=None, pos=None,
             )
             new_cache = {"k": k_c, "v": v_c}
     else:
-        if quant:
+        if page_table is not None:
+            ps = cache["k"].shape[2]
+            if quant:
+                k_i8, ks_n = ternary.quantize_kv(k[:, :, 0])
+                v_i8, vs_n = ternary.quantize_kv(v[:, :, 0])
+                k_c = ternary.update_kv_pages(cache["k"], page_table, k_i8,
+                                              pos, ps)
+                v_c = ternary.update_kv_pages(cache["v"], page_table, v_i8,
+                                              pos, ps)
+                ks_c = ternary.update_kv_pages(cache["k_scale"], page_table,
+                                               ks_n, pos, ps)
+                vs_c = ternary.update_kv_pages(cache["v_scale"], page_table,
+                                               vs_n, pos, ps)
+                out = attn_ops.decode_attention_paged(
+                    q[:, :, 0], k_c, v_c, page_table, pos, k_scale=ks_c,
+                    v_scale=vs_c, window=window,
+                    softcap=cfg.attn_logit_softcap, impl=attn_impl,
+                )[:, :, None, :].transpose(0, 2, 1, 3)
+                new_cache = {"k": k_c, "k_scale": ks_c, "v": v_c,
+                             "v_scale": vs_c}
+            else:
+                k_c = ternary.update_kv_pages(cache["k"], page_table,
+                                              k[:, :, 0], pos, ps)
+                v_c = ternary.update_kv_pages(cache["v"], page_table,
+                                              v[:, :, 0], pos, ps)
+                out = attn_ops.decode_attention_paged(
+                    q[:, :, 0], k_c, v_c, page_table, pos, window=window,
+                    softcap=cfg.attn_logit_softcap, impl=attn_impl,
+                )[:, :, None, :].transpose(0, 2, 1, 3)
+                new_cache = {"k": k_c, "v": v_c}
+        elif quant:
             k_c, v_c, ks_c, vs_c = attn_ops.update_kv_cache_quant(
                 cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
                 k[:, :, 0], v[:, :, 0], pos
@@ -322,7 +373,7 @@ def _apply_ffn(fp, x, cfg, kind, pcfg, *, mode):
 
 def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=None,
                 pos=None, attn_impl="auto", prefix_limit=0, aligned=True,
-                rope=None, fused=None):
+                rope=None, fused=None, page_table=None):
     """Returns (x, new_cache, aux).
 
     ``rope`` is the step's precomputed table dict from :func:`rope_for`
@@ -335,6 +386,10 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
     rope = rope or {}
     if fused is None:
         fused = mode == "packed"
+    if page_table is not None and kind.mixer != "attn":
+        raise NotImplementedError(
+            f"paged KV layout is implemented for the attn mixer only, "
+            f"not {kind.mixer!r}")
     if kind.mixer == "rwkv":
         st = cache or {
             "wkv": jnp.zeros((x.shape[0], cfg.d_model // cfg.rwkv_head_dim,
@@ -381,7 +436,7 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
                                    cache=cache, pos=pos, attn_impl=attn_impl,
                                    prefix_limit=prefix_limit, aligned=aligned,
                                    rope=rope.get("attn"), xq=hq, residual=x,
-                                   use_kernel=engine)
+                                   use_kernel=engine, page_table=page_table)
         x = constrain(x, "act_batch", "act_seq", None)
         t2 = bitlinear.resolve_engine(bp["ffn"]["gate"], rows,
                                       use_kernel=engine) == "tl"
@@ -396,7 +451,7 @@ def apply_block(kind: LayerKind, bp, x, cfg, pcfg, positions, *, mode, cache=Non
         y, new_cache = _apply_attn(bp["attn"], h, cfg, kind, positions, mode=mode,
                                    cache=cache, pos=pos, attn_impl=attn_impl,
                                    prefix_limit=prefix_limit, aligned=aligned,
-                                   rope=rope.get("attn"))
+                                   rope=rope.get("attn"), page_table=page_table)
     elif kind.mixer == "mla":
         if cache is None:
             y, new_cache = mla_mod.mla_prefill(bp["attn"], h, cfg, positions, mode=mode,
@@ -502,7 +557,7 @@ def loss_fn(params, batch, cfg, pcfg=None, *, mode="train", aux_weight=0.01):
 
 
 def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto",
-                fused=None):
+                fused=None, page_table=None):
     """One autoregressive step. batch {tokens [B,1] | embeddings [B,1,Dfe]};
     caches from ``forward(collect_cache=True)`` (or abstract cache_specs);
     pos [B] write/attend position. Returns (logits [B, V], new caches).
@@ -511,7 +566,10 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto
     fused Pallas decode-attention path (frontier skipping over the padded
     cache), ``"xla"`` the dense form, ``"auto"`` kernel-on-TPU. ``fused``
     routes the linear path through the int8-resident NQD pipeline (default:
-    on for ``mode="packed"``; bit-identical either way)."""
+    on for ``mode="packed"``; bit-identical either way). ``page_table``
+    ([B, NB] int32) flags the caches as page pools (DESIGN.md §paged-kv) —
+    it is constant across the scanned layers, so it threads as a closure
+    capture, one table shared by every layer's pool."""
     prelude, period, n_periods = block_plan(cfg)
     x = embed_inputs(params, batch, cfg)
     b = x.shape[0]
@@ -523,7 +581,8 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto
     for i, kind in enumerate(prelude):
         x, c, _ = apply_block(kind, params[f"prelude_{i}"], x, cfg, None, positions,
                               mode=mode, cache=caches[f"prelude_{i}"], pos=pos,
-                              attn_impl=attn_impl, rope=rope, fused=fused)
+                              attn_impl=attn_impl, rope=rope, fused=fused,
+                              page_table=page_table)
         new_caches[f"prelude_{i}"] = c
 
     def body(carry, xs):
@@ -533,7 +592,8 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto
         for i, kind in enumerate(period):
             x, c, _ = apply_block(kind, pparams[f"b{i}"], x, cfg, None, positions,
                                   mode=mode, cache=pcaches[f"b{i}"], pos=pos,
-                                  attn_impl=attn_impl, rope=rope, fused=fused)
+                                  attn_impl=attn_impl, rope=rope, fused=fused,
+                                  page_table=page_table)
             cs[f"b{i}"] = c
         return x, cs
 
@@ -547,7 +607,7 @@ def decode_step(params, batch, caches, pos, cfg, *, mode="eval", attn_impl="auto
 
 def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
                        attn_impl="auto", last_row=None, prefix_limit=0,
-                       aligned=True, fused=None):
+                       aligned=True, fused=None, page_table=None):
     """One chunked-prefill step (``mode="prefill_chunk"``): a C-token chunk per
     slot runs against the batched caches, appending each layer's K/V at the
     slot's ``offset`` and attending to the cache prefix + itself.
@@ -576,7 +636,8 @@ def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
         x, cch, _ = apply_block(kind, params[f"prelude_{i}"], x, cfg, None, positions,
                                 mode=mode, cache=caches[f"prelude_{i}"], pos=offset,
                                 attn_impl=attn_impl, prefix_limit=prefix_limit,
-                                aligned=aligned, rope=rope, fused=fused)
+                                aligned=aligned, rope=rope, fused=fused,
+                                page_table=page_table)
         new_caches[f"prelude_{i}"] = cch
 
     def body(carry, xs):
@@ -587,7 +648,8 @@ def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
             x, cch, _ = apply_block(kind, pparams[f"b{i}"], x, cfg, None, positions,
                                     mode=mode, cache=pcaches[f"b{i}"], pos=offset,
                                     attn_impl=attn_impl, prefix_limit=prefix_limit,
-                                    aligned=aligned, rope=rope, fused=fused)
+                                    aligned=aligned, rope=rope, fused=fused,
+                                    page_table=page_table)
             cs[f"b{i}"] = cch
         return x, cs
 
@@ -605,7 +667,8 @@ def prefill_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
 
 
 def verify_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
-                      attn_impl="auto", prefix_limit=0, fused=None):
+                      attn_impl="auto", prefix_limit=0, fused=None,
+                      page_table=None):
     """Speculative verify step (DESIGN.md §speculative): run a ``γ+1``-token
     chunk — ``[current token, γ drafted tokens]`` — at each slot's cache
     frontier ``offset`` and return logits at *every* chunk row.
@@ -637,7 +700,7 @@ def verify_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
     return prefill_chunk_step(params, batch, caches, offset, cfg, mode=mode,
                               attn_impl=attn_impl, last_row=None,
                               prefix_limit=prefix_limit, aligned=False,
-                              fused=fused)
+                              fused=fused, page_table=page_table)
 
 
 # ---------------------------------------------------------------------------
@@ -645,9 +708,39 @@ def verify_chunk_step(params, batch, caches, offset, cfg, *, mode="eval",
 # ---------------------------------------------------------------------------
 
 
-def _kind_cache_spec(cfg, kind: LayerKind, batch: int, seq: int, dtype):
+def _kind_cache_spec(cfg, kind: LayerKind, batch: int, seq: int, dtype,
+                     kv_pages=None):
     hk, hd = cfg.n_kv_heads, cfg.head_dim
     if kind.mixer == "attn":
+        if kv_pages is not None:
+            # Paged layout (DESIGN.md §paged-kv): one page *pool* shared by
+            # every slot, [P, HK, page_size, D] (+ [P, HK, page_size] f32
+            # scales for int8), addressed through the engine's page table.
+            # The axes deliberately avoid "act_kv_seq": resize/guard
+            # machinery keyed on that name (grow/fit, scale_guard,
+            # rollback masking) is frontier arithmetic on contiguous rows
+            # and does not apply to a pool — the page allocator owns those
+            # invariants instead.
+            ps = cfg.kv_page_size
+            pool_axes = ("kv_pages", "act_kv_heads", "kv_page_seq", None)
+            scale_axes = ("kv_pages", "act_kv_heads", "kv_page_seq")
+            if cfg.kv_cache_dtype == "int8":
+                return {
+                    "k": (jax.ShapeDtypeStruct((kv_pages, hk, ps, hd),
+                                               jnp.int8), pool_axes),
+                    "k_scale": (jax.ShapeDtypeStruct((kv_pages, hk, ps),
+                                                     jnp.float32), scale_axes),
+                    "v": (jax.ShapeDtypeStruct((kv_pages, hk, ps, hd),
+                                               jnp.int8), pool_axes),
+                    "v_scale": (jax.ShapeDtypeStruct((kv_pages, hk, ps),
+                                                     jnp.float32), scale_axes),
+                }
+            return {
+                "k": (jax.ShapeDtypeStruct((kv_pages, hk, ps, hd), dtype),
+                      pool_axes),
+                "v": (jax.ShapeDtypeStruct((kv_pages, hk, ps, hd), dtype),
+                      pool_axes),
+            }
         if cfg.kv_cache_dtype == "int8":
             # int8 data + per-(slot, head, row) f32 absmax scale side arrays
             # (DESIGN.md §kv-cache). The scale leaves carry act_kv_seq so the
@@ -697,13 +790,20 @@ def _kind_cache_spec(cfg, kind: LayerKind, batch: int, seq: int, dtype):
     raise ValueError(kind.mixer)
 
 
-def cache_specs(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+def cache_specs(cfg, batch: int, seq: int, dtype=jnp.bfloat16, *,
+                kv_pages=None):
     """(ShapeDtypeStruct tree, logical-axes tree) for the KV/state caches.
 
     ``cfg.kv_cache_dtype == "int8"`` switches attention-mixer caches to the
     int8 + scale-side-array layout (DESIGN.md §kv-cache); non-attention
     state (MLA latents, mamba/rwkv recurrent state) is always dense, so the
     knob is a no-op for archs without an attn mixer.
+
+    ``kv_pages`` (int, DESIGN.md §paged-kv) switches attention-mixer caches
+    to the page-pool layout with that many pages. It is an *explicit* opt-in
+    rather than keyed on ``cfg.kv_layout``: only the serving engine pages —
+    ``generate``/``forward``/training always build contiguous caches, even
+    under a paged config.
     """
     if cfg.kv_cache_dtype not in ("bf16", "int8"):
         raise ValueError(f"kv_cache_dtype must be 'bf16' or 'int8', got "
@@ -719,10 +819,12 @@ def cache_specs(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
 
     full: dict[str, Any] = {}
     for i, kind in enumerate(prelude):
-        full[f"prelude_{i}"] = _kind_cache_spec(cfg, kind, batch, seq, dtype)
+        full[f"prelude_{i}"] = _kind_cache_spec(cfg, kind, batch, seq, dtype,
+                                                kv_pages=kv_pages)
     blocks = {}
     for i, kind in enumerate(period):
-        one = _kind_cache_spec(cfg, kind, batch, seq, dtype)
+        one = _kind_cache_spec(cfg, kind, batch, seq, dtype,
+                               kv_pages=kv_pages)
         blocks[f"b{i}"] = {
             k: (jax.ShapeDtypeStruct((n_periods,) + v[0].shape, v[0].dtype),
                 ("layers",) + v[1])

@@ -67,6 +67,7 @@ from ..models import transformer as Tr
 from ..runtime import fault_tolerance as FT
 from . import resilience as R
 from . import speculative as Sp
+from .paging import PagedKV, PagePoolExhausted
 
 
 def _round_up(x: int, m: int) -> int:
@@ -114,15 +115,21 @@ def make_serve_step(cfg, *, mode: str = "packed", attn_impl: str = "auto",
     (default: on when ``mode="packed"``).
     """
 
-    def serve_step(params, batch, caches, pos):
+    def serve_step(params, batch, caches, pos, page_table=None):
         return Tr.decode_step(params, batch, caches, pos, cfg, mode=mode,
-                              attn_impl=attn_impl, fused=fused)
+                              attn_impl=attn_impl, fused=fused,
+                              page_table=page_table)
 
     return serve_step
 
 
-def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
-    shapes, _ = Tr.cache_specs(cfg, batch, max_len, dtype)
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
+                kv_pages: int | None = None):
+    """Zeroed cache tree. ``kv_pages`` switches attention leaves to the
+    page-pool layout (DESIGN.md §paged-kv) — an explicit opt-in, never
+    inferred from ``cfg.kv_layout``, so ``generate``/``forward`` callers
+    always build the contiguous layout."""
+    shapes, _ = Tr.cache_specs(cfg, batch, max_len, dtype, kv_pages=kv_pages)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
 
@@ -552,7 +559,39 @@ class ServingEngine:
         else:
             self.trash_base = None
             self.cache_len = max_len
-        self.caches = init_caches(cfg, slots, self.cache_len, dtype=cfg.dtype)
+        # -- paged KV layout (DESIGN.md §paged-kv) ----------------------------
+        # cfg.kv_layout="paged" swaps the per-slot contiguous cache rows for
+        # a page pool + per-slot page table: a host allocator with refcounts
+        # backs copy-on-write prefix sharing, and every unmapped table entry
+        # points at ONE permanently-allocated garbage page (so trash-diverted
+        # and idle writes land on dead rows without any masking). Chunked
+        # engines only — the legacy path scatters whole per-request caches.
+        if getattr(cfg, "kv_layout", "contiguous") == "paged":
+            if self.prefill != "chunked":
+                raise ValueError(
+                    "kv_layout='paged' requires the chunked prefill path "
+                    f"(family={cfg.family!r} resolved prefill={self.prefill!r})")
+            ps = int(cfg.kv_page_size)
+            if ps <= 0 or self.chunk_sizes[0] % ps:
+                raise ValueError(
+                    f"kv_page_size={ps} must divide the smallest prefill "
+                    f"chunk size ({self.chunk_sizes[0]}) so every chunk "
+                    f"append covers whole pages")
+            self.paged = PagedKV(slots=slots, cache_len=self.cache_len,
+                                 page_size=ps,
+                                 num_pages=int(cfg.kv_num_pages),
+                                 prefix_cache=bool(cfg.prefix_cache))
+            # host mirror of the device frontier for dec_active slots — the
+            # page allocator needs this tick's written blocks *before* the
+            # device round-trip (updated from the same packed state the
+            # scheduler already reads, so no extra transfer).
+            self._pos_host = np.zeros((slots,), np.int32)
+        else:
+            self.paged = None
+            self._pos_host = None
+        self.caches = init_caches(
+            cfg, slots, self.cache_len, dtype=cfg.dtype,
+            kv_pages=self.paged.num_pages if self.paged is not None else None)
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.live = [None] * slots  # slot -> Request
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
@@ -624,7 +663,8 @@ class ServingEngine:
         # fault-capable engine that never fires (where(False, ...) no-ops)
         self._debug_faults = fault_plan is not None
         self._advance = _advance_cached(cfg, eos_id, max_len, self.guards,
-                                        self._debug_faults)
+                                        self._debug_faults,
+                                        paged=self.paged is not None)
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -680,6 +720,11 @@ class ServingEngine:
             self.live[slot] = None
             self._plan[slot] = None
             self._pending_first.discard(slot)
+            if self.paged is not None:
+                # deref the slot's pages (shared prefix pages survive while
+                # the trie or another slot still holds them)
+                self.paged.release(slot)
+                self._pos_host[slot] = 0
 
     def _terminal_status(self, req: Request) -> R.Status:
         """Why a device-side retirement (`_retire`) fired: EOS or budget are
@@ -731,8 +776,17 @@ class ServingEngine:
             req = self.live[slot]
             if req is not None:
                 self._finish(slot, req, R.Status.FAILED, detail=detail)
-        self.caches = init_caches(self.cfg, self.slots, self.cache_len,
-                                  dtype=self.cfg.dtype)
+        if self.paged is not None:
+            # fresh pool + trie: device pages may hold garbage post-failure,
+            # and a poisoned interned prefix must not leak into new requests
+            self.paged = PagedKV(slots=self.slots, cache_len=self.cache_len,
+                                 page_size=self.paged.page_size,
+                                 num_pages=self.paged.num_pages,
+                                 prefix_cache=self.paged.prefix_cache)
+            self._pos_host[:] = 0
+        self.caches = init_caches(
+            self.cfg, self.slots, self.cache_len, dtype=self.cfg.dtype,
+            kv_pages=self.paged.num_pages if self.paged is not None else None)
         self.pos = jnp.zeros((self.slots,), jnp.int32)
         self.cur_tok = jnp.zeros((self.slots,), jnp.int32)
         self.done = jnp.zeros((self.slots,), bool)
@@ -762,6 +816,8 @@ class ServingEngine:
             "preemptions": sum(1 for e in self.events
                                if e["kind"] == "preempt"),
             "quarantined": self.status_counts.get(R.Status.QUARANTINED, 0),
+            "kv_layout": "paged" if self.paged is not None else "contiguous",
+            "paged": self.paged.stats() if self.paged is not None else None,
         }
 
     def export_requests(self) -> list[Request]:
@@ -856,11 +912,25 @@ class ServingEngine:
         if self.prefill == "legacy":
             self._prefill_slot(slot, req, prompt, remaining)
             return True
-        chunks = chunk_schedule(prompt.shape[0], self.chunk_sizes)
-        padded = np.zeros((sum(chunks),), np.int64)
-        padded[: prompt.shape[0]] = prompt
+        plen = int(prompt.shape[0])
+        tail_start = 0
+        if self.paged is not None:
+            # radix-trie prefix reuse (DESIGN.md §paged-kv): map every
+            # matched prompt page read-only (refcount++) and prefill only
+            # the tail. tail_start is floored to the LARGEST chunk size so
+            # every issued chunk C still satisfies C | off (the aliased
+            # append-window invariant for both cache layouts); the last
+            # prompt token is never skipped — its logits seed decode.
+            tail_start = self.paged.admit(slot, prompt,
+                                          chunk0=self.chunk_sizes[-1])
+            if tail_start > 0:
+                self._event("prefix_hit", rid=req.rid, slot=slot,
+                            tokens=tail_start)
+        chunks = chunk_schedule(plen - tail_start, self.chunk_sizes)
+        padded = np.zeros((tail_start + sum(chunks),), np.int64)
+        padded[:plen] = prompt
         self._plan[slot] = _PrefillPlan(tokens=padded, chunks=chunks, ci=0,
-                                        off=0, true_len=prompt.shape[0])
+                                        off=tail_start, true_len=plen)
         self.live[slot] = req
         self.max_new_arr = self.max_new_arr.at[slot].set(remaining)
         if self.speculative:  # seed the drafter's history with the prompt
@@ -888,6 +958,9 @@ class ServingEngine:
         self.live[slot] = None
         self._plan[slot] = None
         self._pending_first.discard(slot)
+        if self.paged is not None:
+            self.paged.release(slot)
+            self._pos_host[slot] = 0
         req._seq = self._seq  # requeued at the back of its priority level
         self._seq += 1
         self.queue.append(req)
@@ -962,6 +1035,76 @@ class ServingEngine:
         self.live[slot] = req
         self._pending_first.add(slot)
 
+    # -- paged-KV write preparation (DESIGN.md §paged-kv) ---------------------
+
+    def _apply_page_copies(self, pairs: list[tuple[int, int]]):
+        """Apply COW (src, dst) page copies as ONE jitted gather/scatter over
+        every pool leaf, before the tick dispatches. The pair list is padded
+        to a power of two with garbage→garbage identity copies so compiled
+        shapes stay bounded (≤ log2(pool) variants, in practice a handful)."""
+        n = 1 << max(len(pairs) - 1, 0).bit_length()
+        g = self.paged.garbage
+        src = np.full((n,), g, np.int32)
+        dst = np.full((n,), g, np.int32)
+        for i, (s, d) in enumerate(pairs):
+            src[i], dst[i] = s, d
+        self.caches = _copy_pages_cached(self.cfg)(
+            self.caches, jnp.asarray(src), jnp.asarray(dst))
+
+    def _cow_prepare(self, writes: list) -> list[int]:
+        """COW-resolve the blocks this tick writes (``writes`` is a list of
+        (slot, block-iterable)). Freshly mapped blocks need no copy — prefill
+        chunks and decode/verify rows fully write them before any un-masked
+        read. Slots the pool cannot cover even after trie eviction are
+        FAILED-retired (pages released) and returned so the caller diverts
+        them out of the tick. Idempotent per tick: the XLA-fallback retry
+        re-runs it and finds every block already exclusive."""
+        pairs, failed = [], []
+        for s, blocks in writes:
+            if self.live[s] is None:
+                continue
+            try:
+                pairs += self.paged.ensure_writable(s, blocks)
+            except PagePoolExhausted:
+                req = self.live[s]
+                self._event("page_pool_exhausted", rid=req.rid, slot=s)
+                self._finish(s, req, R.Status.FAILED,
+                             detail="page_pool_exhausted")
+                failed.append(s)
+        if pairs:
+            self._event("cow_fork", pairs=len(pairs),
+                        forks_total=self.paged.cow_forks)
+            self._apply_page_copies(pairs)
+        return failed
+
+    def _prepare_tick_pages(self, selected, chunk, chunk_tok, chunk_off,
+                            finishing, last_row, fin_pos, dec_active,
+                            dec_span: int = 1):
+        """Per-tick page preparation for the fused/speculative ticks: make
+        every written block exclusive (chunk appends for selected prefilling
+        slots, ``dec_span`` frontier rows per decoding slot) and return the
+        device page table. Slots shed on pool exhaustion are diverted in
+        place: chunk writes to the trash tail, decode/finishing masks off."""
+        if self.paged is None:
+            return None
+        ps = self.paged.page_size
+        writes = [(s, range(int(chunk_off[s]) // ps,
+                            (int(chunk_off[s]) + chunk) // ps))
+                  for s in selected]
+        writes += [(s, range(int(self._pos_host[s]) // ps,
+                             (int(self._pos_host[s]) + dec_span - 1) // ps + 1))
+                   for s in range(self.slots) if dec_active[s]]
+        for s in self._cow_prepare(writes):
+            if s in selected:
+                selected.remove(s)
+            chunk_tok[s] = 0
+            chunk_off[s] = self.trash_base
+            finishing[s] = False
+            last_row[s] = 0
+            fin_pos[s] = 0
+            dec_active[s] = False
+        return jnp.asarray(self.paged.table)
+
     # -- the fused chunked-prefill + decode tick ------------------------------
 
     def _chunk_budget(self) -> int:
@@ -1017,7 +1160,8 @@ class ServingEngine:
                 eos_id=self.eos_id, max_len=self.max_len,
                 cache_len=self.cache_len, trash_base=self.trash_base,
                 fused=self.fused, guards=self.guards,
-                debug_faults=self._debug_faults)
+                debug_faults=self._debug_faults,
+                paged=self.paged is not None)
             self._fused[chunk] = fn
         return fn
 
@@ -1049,6 +1193,9 @@ class ServingEngine:
         dec_active = np.array(
             [self.live[s] is not None and self._plan[s] is None
              for s in range(slots)])
+        page_table = self._prepare_tick_pages(
+            selected, chunk, chunk_tok, chunk_off, finishing, last_row,
+            fin_pos, dec_active)
 
         fused = self._get_fused(chunk)
         (self.caches, self.cur_tok, self.pos, self.done, self.gen_count,
@@ -1057,11 +1204,14 @@ class ServingEngine:
             self.gen_count, self.max_new_arr, jnp.asarray(dec_active),
             jnp.asarray(chunk_tok), jnp.asarray(chunk_off),
             jnp.asarray(finishing), jnp.asarray(last_row),
-            jnp.asarray(fin_pos), *self._fault_masks("nan"))
+            jnp.asarray(fin_pos), page_table, *self._fault_masks("nan"))
         state = jax.device_get(packed)  # the tick's one transfer
         tok, _, done_, _ = state[:4]
         guard = state[4] if self.guards else np.zeros((slots,), np.int64)
 
+        if self.paged is not None:  # mirror the device frontier advance
+            self._pos_host[dec_active] += 1
+            self._pos_host[finishing] = fin_pos[finishing]
         for s in range(slots):
             req = self.live[s]
             if req is None:
@@ -1071,6 +1221,8 @@ class ServingEngine:
                 continue
             if finishing[s]:
                 self._plan[s] = None
+                if self.paged is not None:  # intern the finished prefill
+                    self.paged.insert_prefix(s)
                 req.generated.append(int(tok[s]))
                 if self.speculative:  # keep the drafter history current
                     self.hist = self.hist.at[s, int(fin_pos[s])].set(int(tok[s]))
@@ -1096,7 +1248,8 @@ class ServingEngine:
                 attn_impl=self.attn_impl, eos_id=self.eos_id,
                 max_len=self.max_len, cache_len=self.cache_len,
                 trash_base=self.trash_base, fused=self.fused,
-                guards=self.guards, debug_faults=self._debug_faults)
+                guards=self.guards, debug_faults=self._debug_faults,
+                paged=self.paged is not None)
             self._spec[chunk] = fn
         return fn
 
@@ -1126,6 +1279,12 @@ class ServingEngine:
             finishing = np.zeros((slots,), bool)
             last_row = np.zeros((slots,), np.int32)
             fin_pos = np.zeros((slots,), np.int32)
+        # verify writes γ+1 frontier rows per decoding slot; rejected rows
+        # roll back by the pointer rewind alone — the pages they landed in
+        # are already exclusive, so no page-table edit is ever needed
+        page_table = self._prepare_tick_pages(
+            selected, chunk, chunk_tok, chunk_off, finishing, last_row,
+            fin_pos, dec_active, dec_span=gamma + 1)
 
         fused = self._get_spec(chunk)
         (self.caches, self.hist, self.cur_tok, self.pos, self.done,
@@ -1134,7 +1293,7 @@ class ServingEngine:
             self.done, self.gen_count, self.max_new_arr,
             jnp.asarray(dec_active), jnp.asarray(chunk_tok),
             jnp.asarray(chunk_off), jnp.asarray(finishing),
-            jnp.asarray(last_row), jnp.asarray(fin_pos),
+            jnp.asarray(last_row), jnp.asarray(fin_pos), page_table,
             *self._fault_masks("nan", "drafter_garbage"))
         state = jax.device_get(packed)  # the tick's one transfer
         toks, n_out = state[: gamma + 1], state[gamma + 1]
@@ -1142,6 +1301,11 @@ class ServingEngine:
         guard = (state[gamma + 4] if self.guards
                  else np.zeros((slots,), np.int64))
 
+        if self.paged is not None:  # mirror the device frontier advance
+            for s in range(slots):
+                if dec_active[s]:
+                    self._pos_host[s] += int(n_out[s])
+            self._pos_host[finishing] = fin_pos[finishing]
         for s in range(slots):
             req = self.live[s]
             if req is None:
@@ -1151,6 +1315,8 @@ class ServingEngine:
                 continue
             if finishing[s]:
                 self._plan[s] = None
+                if self.paged is not None:  # intern the finished prefill
+                    self.paged.insert_prefix(s)
                 req.generated.append(int(toks[0, s]))
                 if done_[s]:
                     self._finish(s, req, self._terminal_status(req))
@@ -1182,10 +1348,21 @@ class ServingEngine:
 
     def _decode_tick(self) -> bool:
         self._maybe_raise_tick_fault()
-        active = jnp.array([r is not None for r in self.live])
+        page_table = None
+        if self.paged is not None:
+            ps = self.paged.page_size
+            # one frontier row written per live slot; empty slots write the
+            # garbage page through their released (all-garbage) table rows
+            self._cow_prepare(
+                [(s, [int(self._pos_host[s]) // ps])
+                 for s in range(self.slots) if self.live[s] is not None])
+            page_table = jnp.asarray(self.paged.table)
+        active_np = np.array([r is not None for r in self.live])
+        active = jnp.asarray(active_np)
         first_tok = self.cur_tok  # includes tokens from legacy prefills this tick
         logits, self.caches = self._serve(
-            self.params, {"tokens": self.cur_tok[:, None]}, self.caches, self.pos
+            self.params, {"tokens": self.cur_tok[:, None]}, self.caches,
+            self.pos, page_table
         )
         extra = (self.caches,) if self.guards else ()
         (self.cur_tok, self.pos, self.done, self.gen_count, packed) = self._advance(
@@ -1196,6 +1373,8 @@ class ServingEngine:
         first, nxt, _, done, _, entry_done = state[:6]
         guard = (state[6] if self.guards
                  else np.zeros((self.slots,), np.int64))
+        if self.paged is not None:  # mirror the device frontier advance
+            self._pos_host[active_np] += 1
         for slot, req in enumerate(self.live):
             if req is None:
                 continue
@@ -1436,6 +1615,29 @@ _SERVE_STEP_CACHE: dict = {}
 _ADVANCE_CACHE: dict = {}
 _FUSED_TICK_CACHE: dict = {}
 _SPEC_TICK_CACHE: dict = {}
+_COPY_PAGES_CACHE: dict = {}
+
+
+def _copy_pages_cached(cfg):
+    """One jitted COW page copy per config: gather the ``src`` pool rows of
+    every paged leaf, scatter them at ``dst``. Only leaves whose axes carry
+    ``kv_pages`` move; the caller pads (src, dst) to a power of two with
+    garbage self-copies so this compiles a handful of shapes, ever."""
+    fn = _COPY_PAGES_CACHE.get(cfg)
+    if fn is None:
+        axes_tree = Tr.cache_specs(cfg, 1, 1, kv_pages=1)[1]
+
+        def copy(caches, src, dst):
+            def rec(c, a):
+                if isinstance(c, dict):
+                    return {k: rec(c[k], a[k]) for k in c}
+                return c.at[dst].set(c[src]) if "kv_pages" in a else c
+
+            return rec(caches, axes_tree)
+
+        fn = jax.jit(copy, donate_argnums=(0,))
+        _COPY_PAGES_CACHE[cfg] = fn
+    return fn
 
 
 def _serve_step_cached(cfg, mode: str, attn_impl: str, fused: bool | None = None):
@@ -1453,13 +1655,15 @@ def _serve_step_cached(cfg, mode: str, attn_impl: str, fused: bool | None = None
 
 
 def _advance_cached(cfg, eos_id: int, max_len: int, guards: bool = False,
-                    debug_faults: bool = False):
-    key_t = (cfg, eos_id, max_len, guards, debug_faults)
+                    debug_faults: bool = False, paged: bool = False):
+    key_t = (cfg, eos_id, max_len, guards, debug_faults, paged)
     fn = _ADVANCE_CACHE.get(key_t)
     if fn is None:
         # the axes tree is static closure data (needed only by the scale
-        # guard's path-based cache walk)
-        axes_tree = Tr.cache_specs(cfg, 1, 1)[1] if guards else None
+        # guard's path-based cache walk); paged pool leaves carry no
+        # act_kv_seq axis, so the scale guard skips them by construction
+        axes_tree = (Tr.cache_specs(cfg, 1, 1, kv_pages=1 if paged else None)[1]
+                     if guards else None)
         fn = jax.jit(partial(_advance, eos_id=eos_id, max_len=max_len,
                              guards=guards, debug_faults=debug_faults,
                              axes_tree=axes_tree))
@@ -1470,7 +1674,8 @@ def _advance_cached(cfg, eos_id: int, max_len: int, guards: bool = False,
 def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
                      eos_id: int, max_len: int, cache_len: int,
                      trash_base: int, fused: bool | None = None,
-                     guards: bool = False, debug_faults: bool = False):
+                     guards: bool = False, debug_faults: bool = False,
+                     paged: bool = False):
     """The engine's one-jit scheduler tick for chunk size ``chunk``: decode
     every decoding slot AND append one prompt chunk per selected prefilling
     slot — inactive slots are diverted into the cache's trash tail, keeping
@@ -1478,15 +1683,16 @@ def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
     one guard-flag row to the packed array ([5, slots]); ``debug_faults``
     adds one trailing [slots] NaN-injection operand."""
     key_t = (cfg, chunk, mode, attn_impl, eos_id, max_len, cache_len,
-             trash_base, fused, guards, debug_faults)
+             trash_base, fused, guards, debug_faults, paged)
     fn = _FUSED_TICK_CACHE.get(key_t)
     if fn is not None:
         return fn
-    axes_tree = Tr.cache_specs(cfg, 1, 1)[1] if guards else None
+    axes_tree = (Tr.cache_specs(cfg, 1, 1, kv_pages=1 if paged else None)[1]
+                 if guards else None)
 
     def fused(params, caches, cur_tok, pos, done, gen_count, max_new,
               dec_active, chunk_tok, chunk_off, finishing, last_row, fin_pos,
-              *fault):
+              page_table, *fault):
         # 1. one decode token for every decoding slot (others diverted to
         #    the trash row — fixed-shape batch, garbage ignored). The decode
         #    pass piggybacks on every fused tick even when dec_active is
@@ -1497,14 +1703,15 @@ def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
         dpos = jnp.where(dec_active, pos, jnp.int32(cache_len - 1))
         dec_logits, caches = Tr.decode_step(
             params, {"tokens": cur_tok[:, None]}, caches, dpos, cfg,
-            mode=mode, attn_impl=attn_impl, fused=fused)
+            mode=mode, attn_impl=attn_impl, fused=fused,
+            page_table=page_table)
         # 2. one chunk bucket appended at each selected slot's frontier
         #    (idle slots write into the trash tail); the LM head runs only on
         #    each slot's last_row hidden state, not all C chunk rows
         first_logits, caches = Tr.prefill_chunk_step(
             params, {"tokens": chunk_tok}, caches, chunk_off, cfg,
             mode=mode, attn_impl=attn_impl, last_row=last_row,
-            prefix_limit=trash_base, fused=fused)
+            prefix_limit=trash_base, fused=fused, page_table=page_table)
         if debug_faults:
             # NaN activation at the guard's observation point; an all-False
             # mask makes both selects bitwise no-ops
@@ -1557,7 +1764,8 @@ def _fused_tick_step(cfg, chunk: int, *, mode: str, attn_impl: str,
 def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
                     attn_impl: str, eos_id: int, max_len: int, cache_len: int,
                     trash_base: int, fused: bool | None = None,
-                    guards: bool = False, debug_faults: bool = False):
+                    guards: bool = False, debug_faults: bool = False,
+                    paged: bool = False):
     """The speculative engine's one-jit tick: draft + verify ``gamma`` tokens
     for every decoding slot, and — when ``chunk`` is a size, the mixed-tick
     form — append one prompt chunk per selected prefilling slot. Compiled
@@ -1572,16 +1780,17 @@ def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
     pointer rewind (never read, overwritten by the next tick's chunk).
     """
     key_t = (cfg, gamma, chunk, mode, attn_impl, eos_id, max_len, cache_len,
-             trash_base, fused, guards, debug_faults)
+             trash_base, fused, guards, debug_faults, paged)
     fn = _SPEC_TICK_CACHE.get(key_t)
     if fn is not None:
         return fn
     drafter = Sp.make_drafter(cfg, gamma=gamma)
-    axes_tree = Tr.cache_specs(cfg, 1, 1)[1] if guards else None
+    axes_tree = (Tr.cache_specs(cfg, 1, 1, kv_pages=1 if paged else None)[1]
+                 if guards else None)
 
     def tick(params, caches, hist, cur_tok, pos, done, gen_count, max_new,
              dec_active, chunk_tok, chunk_off, finishing, last_row, fin_pos,
-             *fault):
+             page_table, *fault):
         # 1. draft γ candidates per slot from its device-resident history
         #    (prompt-lookup n-gram match — no host round-trip, no model pass)
         drafts = drafter(hist, pos)
@@ -1597,7 +1806,7 @@ def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
         #    logits at every row — one weight/cache stream for γ+1 positions
         ver_logits, caches = Tr.verify_chunk_step(
             params, {"tokens": ver_tok}, caches, ver_off, cfg, mode=mode,
-            prefix_limit=trash_base, fused=fused)
+            prefix_limit=trash_base, fused=fused, page_table=page_table)
         if debug_faults:
             ver_logits = jnp.where(
                 fault_nan[:, None, None],
@@ -1640,7 +1849,7 @@ def _spec_tick_step(cfg, gamma: int, chunk: int | None, *, mode: str,
             first_logits, caches = Tr.prefill_chunk_step(
                 params, {"tokens": chunk_tok}, caches, chunk_off, cfg,
                 mode=mode, attn_impl=attn_impl, last_row=last_row,
-                prefix_limit=trash_base, fused=fused)
+                prefix_limit=trash_base, fused=fused, page_table=page_table)
             if debug_faults:
                 first_logits = jnp.where(
                     fault_nan[:, None],

@@ -34,7 +34,11 @@ Two pieces live here, both pure and engine-agnostic:
 Rejected rows need no cache surgery: rolling back IS rewinding the per-slot
 frontier pointer (see ``core.ternary.mask_past_frontier`` for the invariant),
 because every attention read clamps to the frontier and the next tick's
-writes land exactly on the stale rows.
+writes land exactly on the stale rows. This holds unchanged under
+``kv_layout="paged"`` (DESIGN.md §paged-kv): rollback needs no page-table
+edit either — the stale rows live in pages the slot already owns
+exclusively (``ensure_writable`` ran before the spec tick dispatched), so
+the rewound frontier masks them and the next tick rewrites them in place.
 """
 
 from __future__ import annotations
